@@ -1,0 +1,78 @@
+"""Fig. 1 reproduction: throughput vs encapsulation-header overhead.
+
+The paper measures ingress/egress Gbps on a 100 Gbps FPGA port as header
+bits grow (more input features ⇒ more per-packet work ⇒ less line rate).
+Without the NIC, the measurable analogue is the data-plane engine's packet
+throughput as a function of feature count — same mechanism (per-packet
+parse + lookup + MAC work grows), same trade-off curve.  We report both the
+measured packets/s / engine-Gbps and a derived line-rate fraction against
+the paper's 100 Gbps medium.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.packet import packet_nbytes
+
+FEATURES = [1, 2, 4, 8, 16]
+BATCH = 4096
+LINE_RATE_GBPS = 100.0
+
+
+def run(verbose: bool = True):
+    import jax.numpy as jnp
+    from repro.configs.paper_models import make_paper_model
+    from repro.core.control_plane import ControlPlane
+    from repro.core.inference import DataPlaneEngine
+    from repro.core.packet import encode_packets
+
+    rng = np.random.default_rng(2)
+    rows = []
+    for nf in FEATURES:
+        width = max(16, nf)
+        cp = ControlPlane(max_models=2, max_layers=2, max_width=width,
+                          frac_bits=8)
+        w = rng.normal(size=(nf, 1)).astype(np.float32) * 0.3
+        b = np.zeros((1,), np.float32)
+        cp.install(1, [(w, b)], [])
+        eng = DataPlaneEngine(cp, max_features=width, taylor_order=3)
+        codes = rng.integers(-2**15, 2**15, size=(BATCH, nf)).astype(np.int32)
+        pkts = encode_packets(jnp.int32(1), jnp.int32(8), jnp.asarray(codes))
+        eng.process(pkts)  # compile+warm
+        # median-of-3 timing runs: robust to background load on a shared CPU
+        import time
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(5):
+                eng.process(pkts)
+            times.append(time.perf_counter() - t0)
+        med = sorted(times)[1]
+        header_bits = packet_nbytes(nf) * 8
+        pps = 5 * BATCH / med
+        gbps = 5 * (pkts.size * 8) * 2 / med / 1e9  # ingress + egress bits
+        rows.append({
+            "features": nf,
+            "header_bits": header_bits,
+            "packets_per_s": pps,
+            "engine_gbps": gbps,
+            "line_rate_fraction": gbps / LINE_RATE_GBPS,
+        })
+        if verbose:
+            print(f"  features={nf:2d} header={header_bits:4d}b  "
+                  f"{rows[-1]['packets_per_s']:,.0f} pkt/s  "
+                  f"{gbps:.3f} Gbps (CPU engine)")
+
+    # paper's qualitative claim: throughput decreases as overhead grows
+    pps = [r["packets_per_s"] for r in rows]
+    decreasing = pps[0] > pps[-1]
+    if verbose:
+        print(f"  qualitative Fig-1 trend (pkt/s falls with header bits): "
+              f"{'VALIDATED' if decreasing else 'NOT OBSERVED'} "
+              f"(CPU backend; absolute Gbps is not NIC-comparable)")
+    return {"rows": rows, "trend_validated": bool(decreasing)}
+
+
+if __name__ == "__main__":
+    run()

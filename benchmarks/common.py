@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: paper-model setup + engine plumbing."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import train_qos_regressor
+from repro.core.control_plane import ControlPlane
+from repro.core.inference import DataPlaneEngine
+from repro.core.packet import encode_packets, parse_packets
+
+
+def float_reference(layers, acts, X):
+    h = X
+    names = list(acts) + ["none"]
+    for (w, b), a in zip(layers, names):
+        z = h @ w + b
+        h = 1 / (1 + np.exp(-z)) if a == "sigmoid" else (
+            np.maximum(z, 0) if a == "relu" else z)
+    return h
+
+
+def engine_outputs(layers, acts, X, *, frac_bits: int, taylor_order: int,
+                   weight_bits: int = 16) -> Tuple[np.ndarray, DataPlaneEngine]:
+    """Run X through the integer data plane; return float-decoded outputs."""
+    width = max(max(w.shape[0] for w, _ in layers),
+                max(w.shape[1] for w, _ in layers))
+    width = max(width, X.shape[1])
+    cp = ControlPlane(max_models=2, max_layers=len(layers) + 1,
+                      max_width=width, weight_bits=weight_bits,
+                      frac_bits=frac_bits)
+    cp.install(1, layers, acts)
+    eng = DataPlaneEngine(cp, max_features=width, taylor_order=taylor_order)
+    codes = np.clip(np.round(X * (1 << frac_bits)), -2**31, 2**31 - 1
+                    ).astype(np.int32)
+    pkts = encode_packets(jnp.int32(1), jnp.int32(frac_bits),
+                          jnp.asarray(codes))
+    out_pkts = eng.process(pkts)
+    n_out = layers[-1][0].shape[1]
+    parsed = parse_packets(out_pkts, max_features=n_out)
+    return np.asarray(parsed.features_q[:, :n_out]) / (1 << frac_bits), eng
+
+
+def nmse(ref: np.ndarray, approx: np.ndarray) -> float:
+    return float(((ref - approx) ** 2).mean() / ((ref ** 2).mean() + 1e-12))
+
+
+def timeit_us(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6

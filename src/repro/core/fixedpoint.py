@@ -1,0 +1,336 @@
+"""Fixed-point arithmetic core (paper §3.1, Table 2).
+
+The paper encodes a float weight ``w`` as ``w_q = round(w * 2**s) + b`` and
+decodes ``w ≈ (w_q - b) / 2**s`` where ``s`` is the *scale* (number of
+fractional bits) and ``b`` an integer offset.  All data-plane computation then
+happens on the integer codes, with explicit re-scaling after multiplies.
+
+This module provides:
+
+  * scalar/array encode & decode exactly per Table 2,
+  * :class:`QTensor` — a pytree carrying integer codes + quantization params,
+  * integer-domain ops (``qmatmul``, ``qadd``, ``qmul``, ``requantize``) that
+    mirror what the P4 data plane does (int multiplies + arithmetic shifts),
+  * per-tensor and per-channel calibration helpers,
+  * fake-quantization (straight-through estimator) for QAT.
+
+Two execution styles coexist:
+
+  * **integer path** — codes are ``int8``/``int16``/``int32`` arrays, products
+    accumulate in ``int32``, re-scaling is a rounding arithmetic shift.  This
+    is bit-exact with a P4/FPGA integer pipeline and is what the Pallas kernel
+    (``repro.kernels.fixedpoint_matmul``) implements on the MXU.
+  * **simulated path** (``fake_quant``) — float tensors snapped onto the
+    fixed-point grid; used for QAT and quick accuracy studies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FixedPointFormat",
+    "QTensor",
+    "encode",
+    "decode",
+    "quantize",
+    "dequantize",
+    "requantize",
+    "qmatmul",
+    "qadd",
+    "qmul",
+    "fake_quant",
+    "calibrate_scale",
+    "choose_format",
+    "INT8",
+    "INT16",
+    "INT32",
+]
+
+
+# ---------------------------------------------------------------------------
+# Formats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """A fixed-point format ``Q(total_bits, frac_bits)`` with optional offset.
+
+    ``frac_bits`` is the paper's ``s`` (scale exponent); ``offset`` its ``b``.
+    ``total_bits`` bounds the representable integer range; codes saturate.
+    """
+
+    total_bits: int
+    frac_bits: int
+    offset: int = 0
+    signed: bool = True
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1 if self.signed else 2 ** self.total_bits - 1
+
+    @property
+    def dtype(self):
+        if self.total_bits <= 8:
+            return jnp.int8
+        if self.total_bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    def with_frac_bits(self, frac_bits: int) -> "FixedPointFormat":
+        return dataclasses.replace(self, frac_bits=frac_bits)
+
+
+INT8 = FixedPointFormat(total_bits=8, frac_bits=6)
+INT16 = FixedPointFormat(total_bits=16, frac_bits=12)
+INT32 = FixedPointFormat(total_bits=32, frac_bits=16)  # paper's s=16 (Table 4)
+
+
+# ---------------------------------------------------------------------------
+# Scalar/array encode & decode — Table 2, verbatim
+# ---------------------------------------------------------------------------
+
+
+def encode(w, s: int, b: int = 0, *, total_bits: int = 32, signed: bool = True):
+    """``w_q = round(w * 2**s) + b`` with saturation to ``total_bits``.
+
+    Matches the paper's Table 2 "Encoding" row.  Uses round-half-away-from-zero
+    (what RTL `round()` typically means) rather than banker's rounding.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    scaled = w * (2.0 ** s)
+    # round half away from zero: sign(x) * floor(|x| + 0.5)
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    fmt = FixedPointFormat(total_bits=total_bits, frac_bits=s, offset=b, signed=signed)
+    q = jnp.clip(rounded + b, fmt.qmin, fmt.qmax)
+    return q.astype(fmt.dtype)
+
+
+def decode(w_q, s: int, b: int = 0):
+    """``w ≈ (w_q - b) / 2**s`` — Table 2 "Decoding" row."""
+    return (jnp.asarray(w_q, jnp.float32) - b) / (2.0 ** s)
+
+
+# ---------------------------------------------------------------------------
+# QTensor — integer codes + metadata, as a pytree
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Quantized tensor: integer codes plus (frac_bits, offset) metadata.
+
+    ``scale_axis`` supports per-channel quantization: ``frac_bits`` stays a
+    scalar python int (shift amounts must be static for the integer path) but
+    ``channel_scale`` optionally carries a per-channel int32 multiplier in
+    fixed-point (used by the requantization step of per-channel kernels).
+    """
+
+    q: jax.Array  # integer codes
+    frac_bits: int  # static: the shift amount s
+    offset: int = 0  # static: b
+    channel_scale: Optional[jax.Array] = None  # optional per-channel requant multiplier
+    channel_axis: Optional[int] = None
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        children = (self.q, self.channel_scale)
+        aux = (self.frac_bits, self.offset, self.channel_axis)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, channel_scale = children
+        frac_bits, offset, channel_axis = aux
+        return cls(q=q, frac_bits=frac_bits, offset=offset,
+                   channel_scale=channel_scale, channel_axis=channel_axis)
+
+    # -- convenience ------------------------------------------------------
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self) -> jax.Array:
+        x = decode(self.q, self.frac_bits, self.offset)
+        if self.channel_scale is not None:
+            shape = [1] * x.ndim
+            shape[self.channel_axis] = -1
+            x = x * self.channel_scale.reshape(shape)
+        return x
+
+
+def quantize(x, fmt: FixedPointFormat = INT32, *, channel_axis: Optional[int] = None) -> QTensor:
+    """Quantize a float array to a :class:`QTensor`.
+
+    With ``channel_axis`` set, a per-channel float multiplier is extracted so
+    every channel uses the full integer range (the paper's per-model "Scale"
+    header field generalized to per-channel, standard for int8 GEMM).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if channel_axis is None:
+        q = encode(x, fmt.frac_bits, fmt.offset, total_bits=fmt.total_bits, signed=fmt.signed)
+        return QTensor(q=q, frac_bits=fmt.frac_bits, offset=fmt.offset)
+    # per-channel: scale each channel so max |x| maps to qmax
+    axes = tuple(i for i in range(x.ndim) if i != channel_axis)
+    absmax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    absmax = jnp.maximum(absmax, 1e-12)
+    unit = x / absmax  # in [-1, 1]
+    q = encode(unit, fmt.frac_bits, fmt.offset, total_bits=fmt.total_bits, signed=fmt.signed)
+    return QTensor(
+        q=q,
+        frac_bits=fmt.frac_bits,
+        offset=fmt.offset,
+        channel_scale=jnp.squeeze(absmax, axis=axes).astype(jnp.float32),
+        channel_axis=channel_axis,
+    )
+
+
+def dequantize(t: QTensor) -> jax.Array:
+    return t.dequantize()
+
+
+# ---------------------------------------------------------------------------
+# Integer-domain arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _rounding_shift_right(x: jax.Array, shift: int) -> jax.Array:
+    """Arithmetic right shift with round-to-nearest (ties away from zero).
+
+    This is the requantization primitive of every fixed-point pipeline: it is
+    exactly representable in P4 (add + shift) and on the TPU VPU.
+    """
+    if shift <= 0:
+        return jnp.left_shift(x, -shift) if shift < 0 else x
+    x = jnp.asarray(x)
+    rounding = jnp.where(x >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1).astype(x.dtype)
+    return jnp.right_shift(x + rounding, shift)
+
+
+def requantize(acc: jax.Array, from_frac: int, to_frac: int, fmt: FixedPointFormat) -> jax.Array:
+    """Re-scale an int32 accumulator from ``2**from_frac`` to ``2**to_frac``
+    fractional bits and saturate into ``fmt``.
+    """
+    shift = from_frac - to_frac
+    out = _rounding_shift_right(acc.astype(jnp.int32), shift)
+    out = jnp.clip(out, fmt.qmin, fmt.qmax)
+    return out.astype(fmt.dtype)
+
+
+def qmatmul(a: QTensor, w: QTensor, *, out_fmt: FixedPointFormat = INT32,
+            bias_q: Optional[jax.Array] = None) -> QTensor:
+    """Integer matmul ``a @ w`` with int32 accumulation and requantization.
+
+    ``a`` codes carry ``a.frac_bits`` fractional bits, ``w`` codes
+    ``w.frac_bits``; the raw product carries their sum, then is shifted back to
+    ``out_fmt.frac_bits``.  Offsets must be zero (symmetric) on the integer
+    path — affine offsets are folded into ``bias_q`` by the quantizer.
+    """
+    if a.offset != 0 or w.offset != 0:
+        raise ValueError("integer qmatmul requires symmetric (offset=0) operands")
+    acc = jax.lax.dot_general(
+        a.q, w.q,
+        dimension_numbers=(((a.q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if bias_q is not None:
+        acc = acc + bias_q.astype(jnp.int32)
+    prod_frac = a.frac_bits + w.frac_bits
+    out = requantize(acc, prod_frac, out_fmt.frac_bits, out_fmt)
+    cs = None
+    if w.channel_scale is not None:
+        cs = w.channel_scale
+    return QTensor(q=out, frac_bits=out_fmt.frac_bits, channel_scale=cs,
+                   channel_axis=(acc.ndim - 1) if cs is not None else None)
+
+
+def _align(a: QTensor, b: QTensor) -> Tuple[jax.Array, jax.Array, int]:
+    """Bring two QTensors onto a common fractional-bit grid (int32 domain)."""
+    frac = max(a.frac_bits, b.frac_bits)
+    aq = jnp.left_shift(a.q.astype(jnp.int32), frac - a.frac_bits)
+    bq = jnp.left_shift(b.q.astype(jnp.int32), frac - b.frac_bits)
+    return aq, bq, frac
+
+
+def qadd(a: QTensor, b: QTensor, *, out_fmt: FixedPointFormat = INT32) -> QTensor:
+    aq, bq, frac = _align(a, b)
+    acc = aq + bq
+    out = requantize(acc, frac, out_fmt.frac_bits, out_fmt)
+    return QTensor(q=out, frac_bits=out_fmt.frac_bits)
+
+
+def qmul(a: QTensor, b: QTensor, *, out_fmt: FixedPointFormat = INT32) -> QTensor:
+    acc = a.q.astype(jnp.int32) * b.q.astype(jnp.int32)
+    out = requantize(acc, a.frac_bits + b.frac_bits, out_fmt.frac_bits, out_fmt)
+    return QTensor(q=out, frac_bits=out_fmt.frac_bits)
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization (QAT) and calibration
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fake_quant(x, frac_bits: int, total_bits: int):
+    """Snap float values onto the fixed-point grid; straight-through gradient."""
+    scale = 2.0 ** frac_bits
+    qmax = 2.0 ** (total_bits - 1) - 1
+    q = jnp.clip(jnp.round(x * scale), -qmax - 1, qmax)
+    return q / scale
+
+
+def _fq_fwd(x, frac_bits, total_bits):
+    scale = 2.0 ** frac_bits
+    qmax = 2.0 ** (total_bits - 1) - 1
+    in_range = jnp.logical_and(x * scale >= -qmax - 1, x * scale <= qmax)
+    return fake_quant(x, frac_bits, total_bits), in_range
+
+
+def _fq_bwd(res, g):
+    in_range = res
+    return (jnp.where(in_range, g, 0.0), None, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def calibrate_scale(x, total_bits: int = 8, *, percentile: float = 100.0) -> int:
+    """Pick the largest ``frac_bits`` such that (a percentile of) ``|x|`` fits.
+
+    Returns the paper's ``s`` for a tensor: ``s = total_bits-1 - ceil(log2 m)``
+    where ``m`` is the amplitude bound.  Pure numpy — used at model-conversion
+    time by the control plane, not inside jit.
+    """
+    x = np.asarray(x)
+    if percentile >= 100.0:
+        m = float(np.max(np.abs(x))) if x.size else 0.0
+    else:
+        m = float(np.percentile(np.abs(x), percentile)) if x.size else 0.0
+    if m == 0.0:
+        return total_bits - 1
+    int_bits = max(0, int(np.ceil(np.log2(m + 1e-12))) + 1)  # sign handled separately
+    return max(0, total_bits - 1 - int_bits)
+
+
+def choose_format(x, total_bits: int = 8, **kw) -> FixedPointFormat:
+    return FixedPointFormat(total_bits=total_bits, frac_bits=calibrate_scale(x, total_bits, **kw))

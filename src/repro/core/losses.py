@@ -1,0 +1,148 @@
+"""Loss functions and their Taylor-series approximations (paper §3.4, Table 5).
+
+The paper replaces the logarithms inside cross-entropy losses with 3-term
+Taylor polynomials so that training-side error signals can be evaluated in a
+fixed-point pipeline.  Table 5, verbatim:
+
+  MSE:  (y − ŷ)²                                    (already polynomial)
+  BCE:  −y(ŷ − ŷ²/2 + ŷ³/3) − (1−y)(−ŷ − ŷ²/2 − ŷ³/3)
+  CCE:  −Σᵢ yᵢ (ŷᵢ − ŷᵢ²/2 + ŷᵢ³/3)
+
+The BCE/CCE rows substitute ``log(ŷ) → ŷ − ŷ²/2 + ŷ³/3`` (the log1p series
+evaluated at ŷ−1 shifted to 0, as the paper states "around 0") and
+``log(1−ŷ) → −ŷ − ŷ²/2 − ŷ³/3``.  We implement them exactly as printed, plus
+exact references, normalized-MSE (the paper's Fig 3/4 metric), and fixed-point
+variants used by the QAT experiments.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "mse",
+    "bce",
+    "cce",
+    "bce_taylor",
+    "cce_taylor",
+    "log_taylor3",
+    "normalized_mse",
+    "cross_entropy_logits",
+]
+
+
+def mse(y: jax.Array, y_hat: jax.Array) -> jax.Array:
+    """Mean Squared Error — Table 5 row 1 (its own Taylor expansion)."""
+    return jnp.mean((y - y_hat) ** 2)
+
+
+def log_taylor3(p: jax.Array) -> jax.Array:
+    """The paper's 3-term log substitute: log(p) → p − p²/2 + p³/3."""
+    return p - p * p / 2.0 + p * p * p / 3.0
+
+
+def bce(y: jax.Array, y_hat: jax.Array, eps: float = 1e-7) -> jax.Array:
+    """Exact binary cross-entropy (reference for Table 5 row 2)."""
+    y_hat = jnp.clip(y_hat, eps, 1.0 - eps)
+    return jnp.mean(-(y * jnp.log(y_hat) + (1.0 - y) * jnp.log1p(-y_hat)))
+
+
+def bce_taylor(y: jax.Array, y_hat: jax.Array) -> jax.Array:
+    """Table 5 row 2, verbatim:
+    −y(ŷ − ŷ²/2 + ŷ³/3) − (1−y)(−ŷ − ŷ²/2 − ŷ³/3)."""
+    t_pos = y_hat - y_hat ** 2 / 2.0 + y_hat ** 3 / 3.0
+    t_neg = -y_hat - y_hat ** 2 / 2.0 - y_hat ** 3 / 3.0
+    return jnp.mean(-y * t_pos - (1.0 - y) * t_neg)
+
+
+def cce(y: jax.Array, y_hat: jax.Array, eps: float = 1e-7, axis: int = -1) -> jax.Array:
+    """Exact categorical cross-entropy (reference for Table 5 row 3)."""
+    y_hat = jnp.clip(y_hat, eps, 1.0)
+    return jnp.mean(-jnp.sum(y * jnp.log(y_hat), axis=axis))
+
+
+def cce_taylor(y: jax.Array, y_hat: jax.Array, axis: int = -1) -> jax.Array:
+    """Table 5 row 3, verbatim: −Σᵢ yᵢ (ŷᵢ − ŷᵢ²/2 + ŷᵢ³/3)."""
+    return jnp.mean(-jnp.sum(y * log_taylor3(y_hat), axis=axis))
+
+
+def normalized_mse(y_ref: jax.Array, y_approx: jax.Array) -> jax.Array:
+    """The paper's Fig 3/Fig 4 metric: MSE normalized by reference power.
+
+    NMSE = E[(y_ref − y_approx)²] / E[y_ref²].  The paper's claims are
+    NMSE < 0.15 at 8 fractional bits and NMSE < 0.2 at Taylor order 3.
+    """
+    num = jnp.mean((y_ref - y_approx) ** 2)
+    den = jnp.maximum(jnp.mean(y_ref ** 2), 1e-12)
+    return num / den
+
+
+def cross_entropy_logits(logits: jax.Array, labels: jax.Array,
+                         mask: Optional[jax.Array] = None) -> jax.Array:
+    """Standard LM loss (exact, log-sum-exp): used by the training substrate.
+
+    The Table-5 polynomial form is kept for paper-scale models only (DESIGN.md
+    §8.4) — at vocab≥49k the 3-term log is numerically meaningless.
+    """
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(h: jax.Array, w_unembed: jax.Array,
+                          labels: jax.Array,
+                          mask: Optional[jax.Array] = None,
+                          chunk: Optional[int] = None) -> jax.Array:
+    """LM loss without ever materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits (B, chunk, V) are
+    rematerialized in the backward pass (``jax.checkpoint``), so the peak
+    vocab-sized temp is chunk-bounded.  This is what lets 49k–256k-vocab
+    ``train_4k`` cells fit HBM.
+
+    h: (B, S, D) final hidden states; w_unembed: (D, V).
+    """
+    from ..distributed.constrain import constrain_batch  # lazy: no cycle
+    h = constrain_batch(h)
+    b, s, d = h.shape
+    if chunk is None:
+        # bound the chunk logits to ~2^31 elements GLOBAL (pre-sharding):
+        # ≈0.5 GiB f32 per device on a 16-way data axis
+        v = w_unembed.shape[-1]
+        chunk = int(min(512, max(32, (1 << 31) // max(b * v, 1))))
+        chunk = 1 << (chunk.bit_length() - 1)  # round down to a power of two
+        chunk = min(chunk, s) if s >= 32 else s
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, h.shape[1]), jnp.float32)
+    nc = h.shape[1] // chunk
+    hc = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, m_sum = carry
+        h_i, l_i, m_i = xs
+        logits = (h_i @ w_unembed.astype(h_i.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll = (logz - ll) * m_i
+        return (nll_sum + nll.sum(), m_sum + m_i.sum()), None
+
+    (nll_sum, m_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc, mc))
+    return nll_sum / jnp.maximum(m_sum, 1.0)

@@ -1,0 +1,188 @@
+"""Neural-network encapsulation header codec (paper Table 1, Figs 1–2).
+
+Wire format (network byte order), as published:
+
+    ┌────────────┬──────────────┬─────────────────────────────────────┐
+    │ Field      │ Size (bits)  │ Description                         │
+    ├────────────┼──────────────┼─────────────────────────────────────┤
+    │ Model ID   │ 16           │ Model identifier                    │
+    │ Feature Cnt│ 8            │ # input features                    │
+    │ Output Cnt │ 8            │ # output features                   │
+    │ Scale      │ 16           │ Fixed-point scaling factor          │
+    │ Flags      │ 8            │ Control flags (e.g. padding)        │
+    │ Feature i  │ 32 each      │ fixed-point feature values          │
+    └────────────┴──────────────┴─────────────────────────────────────┘
+
+Packets enter carrying input features; the data plane replaces the feature
+block with the model's outputs on egress (Fig 2).  On TPU the "wire" is a
+``uint8`` batch array and parse/deparse are fully vectorized bit operations —
+one jit'd program handles the whole batch (batch throughput ↔ packets/s).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HEADER_BYTES",
+    "FEATURE_BYTES",
+    "ParsedBatch",
+    "packet_nbytes",
+    "encode_packets",
+    "parse_packets",
+    "emit_results",
+    "FLAG_PADDED",
+    "FLAG_RESULT",
+]
+
+HEADER_BYTES = 7  # 16+8+8+16+8 bits
+FEATURE_BYTES = 4  # 32-bit features
+
+FLAG_PADDED = 0x01  # feature block padded to max_features
+FLAG_RESULT = 0x02  # payload carries outputs (egress), not inputs (ingress)
+
+
+def packet_nbytes(n_features: int) -> int:
+    """Total encapsulation overhead in bytes for ``n_features`` (Fig 1 x-axis
+    is this quantity in bits)."""
+    return HEADER_BYTES + FEATURE_BYTES * n_features
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ParsedBatch:
+    """Header fields + feature codes for a batch of packets (all int32)."""
+
+    model_id: jax.Array  # (B,) int32
+    feature_cnt: jax.Array  # (B,) int32
+    output_cnt: jax.Array  # (B,) int32
+    scale: jax.Array  # (B,) int32 — fractional bits of the feature codes
+    flags: jax.Array  # (B,) int32
+    features_q: jax.Array  # (B, max_features) int32 fixed-point codes
+
+    def tree_flatten(self):
+        return (
+            (self.model_id, self.feature_cnt, self.output_cnt, self.scale,
+             self.flags, self.features_q),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Encoding (host/ingress side — the Scapy/DPDK-pktgen analogue is vectorized)
+# ---------------------------------------------------------------------------
+
+
+def _be_bytes(x: jax.Array, nbytes: int) -> Tuple[jax.Array, ...]:
+    """Split integer array into big-endian bytes (most significant first)."""
+    x = x.astype(jnp.uint32)
+    return tuple(
+        jnp.right_shift(x, jnp.uint32(8 * (nbytes - 1 - i))).astype(jnp.uint8)
+        for i in range(nbytes)
+    )
+
+
+def encode_packets(model_id: jax.Array, scale: jax.Array, features_q: jax.Array,
+                   flags: Optional[jax.Array] = None,
+                   output_cnt: Optional[jax.Array] = None) -> jax.Array:
+    """Build a ``uint8`` packet batch ``(B, HEADER_BYTES + 4*F)``.
+
+    ``features_q`` is ``(B, F)`` int32 fixed-point codes whose fractional-bit
+    count is ``scale`` (the header's Scale field — one per packet, as the
+    paper assumes input features and weights share fractional bits).
+    """
+    b, f = features_q.shape
+    model_id = jnp.broadcast_to(jnp.asarray(model_id, jnp.int32), (b,))
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.int32), (b,))
+    flags = jnp.zeros((b,), jnp.int32) if flags is None else jnp.broadcast_to(
+        jnp.asarray(flags, jnp.int32), (b,))
+    output_cnt = jnp.zeros((b,), jnp.int32) if output_cnt is None else jnp.broadcast_to(
+        jnp.asarray(output_cnt, jnp.int32), (b,))
+
+    cols = []
+    cols += list(_be_bytes(model_id, 2))
+    cols += list(_be_bytes(jnp.full((b,), f, jnp.int32), 1))
+    cols += list(_be_bytes(output_cnt, 1))
+    cols += list(_be_bytes(scale, 2))
+    cols += list(_be_bytes(flags, 1))
+    header = jnp.stack(cols, axis=1)  # (B, 7)
+
+    # features: int32 → 4 big-endian bytes each, interleaved per feature
+    fq = features_q.astype(jnp.uint32)
+    fb = jnp.stack(_be_bytes(fq, 4), axis=-1)  # (B, F, 4)
+    payload = fb.reshape(b, f * 4)
+    return jnp.concatenate([header, payload], axis=1).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Parsing (data-plane ingress)
+# ---------------------------------------------------------------------------
+
+
+def _read_be(pkts: jax.Array, offset: int, nbytes: int) -> jax.Array:
+    out = jnp.zeros(pkts.shape[0], jnp.uint32)
+    for i in range(nbytes):
+        out = jnp.left_shift(out, jnp.uint32(8)) | pkts[:, offset + i].astype(jnp.uint32)
+    return out.astype(jnp.int32)
+
+
+def parse_packets(pkts: jax.Array, max_features: int) -> ParsedBatch:
+    """Vectorized header parse of a ``(B, L)`` uint8 batch.
+
+    ``max_features`` is a static bound (the P4 parser's max header stack
+    depth); packets with fewer features are zero-padded and flagged.
+    """
+    model_id = _read_be(pkts, 0, 2)
+    feature_cnt = _read_be(pkts, 2, 1)
+    output_cnt = _read_be(pkts, 3, 1)
+    scale = _read_be(pkts, 4, 2)
+    flags = _read_be(pkts, 6, 1)
+
+    b, length = pkts.shape
+    avail = (length - HEADER_BYTES) // FEATURE_BYTES
+    n = min(max_features, avail)
+    feats = []
+    for i in range(n):
+        raw = _read_be(pkts, HEADER_BYTES + 4 * i, 4)  # int32 (two's complement)
+        feats.append(raw)
+    features = jnp.stack(feats, axis=1) if feats else jnp.zeros((b, 0), jnp.int32)
+    if n < max_features:
+        features = jnp.pad(features, ((0, 0), (0, max_features - n)))
+    # mask features beyond each packet's declared count
+    idx = jnp.arange(max_features)[None, :]
+    features = jnp.where(idx < feature_cnt[:, None], features, 0)
+    return ParsedBatch(model_id=model_id, feature_cnt=feature_cnt,
+                       output_cnt=output_cnt, scale=scale, flags=flags,
+                       features_q=features)
+
+
+# ---------------------------------------------------------------------------
+# Deparsing (data-plane egress — Fig 2 "header replaced with output format")
+# ---------------------------------------------------------------------------
+
+
+def emit_results(parsed: ParsedBatch, outputs_q: jax.Array, out_scale: int) -> jax.Array:
+    """Build egress packets: same header layout, features ← model outputs.
+
+    The Output Cnt field is copied into Feature Cnt (outputs become the new
+    payload), Scale is rewritten to the output scale and the RESULT flag set —
+    this is the paper's "header is replaced with an output format for
+    interoperability".
+    """
+    b, n_out = outputs_q.shape
+    return encode_packets(
+        model_id=parsed.model_id,
+        scale=jnp.full((b,), out_scale, jnp.int32),
+        features_q=outputs_q,
+        flags=parsed.flags | FLAG_RESULT,
+        output_cnt=jnp.full((b,), n_out, jnp.int32),
+    )

@@ -1,0 +1,129 @@
+"""Model-level quantization: the paper's fixed-point encode applied at LM scale.
+
+Provides the three execution modes models select via config (DESIGN.md §2):
+
+  * ``fp``        — float path (paper's CPU/Python reference stage);
+  * ``w8a8_sim``  — fake-quant simulation (fixed-point grid, float ops) with
+                    straight-through gradients, for QAT and accuracy studies
+                    (the paper's "accuracy validation ... through software
+                    simulations" stage);
+  * ``w8a8_int``  — true integer datapath: per-channel symmetric int8 weights,
+                    dynamic per-row int8 activations, int32 accumulation
+                    (the FPGA stage; runs on the MXU via the Pallas kernel).
+
+Also: whole-pytree weight quantization for serving (``quantize_tree``) with a
+name-filter so norms/embeddings stay high-precision, plus error metrics used
+by the Fig-3 reproduction.
+"""
+
+from __future__ import annotations
+
+import re
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .fixedpoint import QTensor, fake_quant
+
+__all__ = [
+    "absmax_quantize",
+    "w8a8_matmul_int",
+    "w8a8_matmul_sim",
+    "matmul",
+    "quantize_tree",
+    "QuantizedLinear",
+]
+
+
+def absmax_quantize(x: jax.Array, bits: int = 8, axis: int = -1,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-slice quantization: returns (codes, scale) with
+    ``x ≈ codes * scale``.  ``axis`` is the reduction axis for absmax
+    (``-1`` → per-row for activations; ``0`` → per-output-channel weights)."""
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    return codes.astype(dtype), scale
+
+
+def w8a8_matmul_int(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array,
+                    bits: int = 8) -> jax.Array:
+    """True integer GEMM: dynamic per-row A-quant, int32 accumulate, rescale.
+
+    ``w_codes``: (in, out) int8, ``w_scale``: (1, out) float.  This is the
+    jnp reference the Pallas kernel (`repro.kernels.fixedpoint_matmul`)
+    must match; `repro.kernels.ops.fixedpoint_matmul` dispatches between
+    the two by platform.
+    """
+    x_codes, x_scale = absmax_quantize(x, bits=bits, axis=-1)
+    acc = jax.lax.dot_general(
+        x_codes, w_codes,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def w8a8_matmul_sim(x: jax.Array, w: jax.Array, frac_bits: int = 6,
+                    bits: int = 8) -> jax.Array:
+    """Fake-quant GEMM on the fixed-point grid (QAT / accuracy simulation)."""
+    xq = fake_quant(x, frac_bits, bits)
+    wq = fake_quant(w, frac_bits, bits)
+    return xq @ wq
+
+
+def matmul(x: jax.Array, w, mode: str = "fp") -> jax.Array:
+    """Mode-dispatched linear used by every model layer.
+
+    ``w`` is a float array in ``fp``/``w8a8_sim`` modes, or a
+    ``(codes, scale)`` pair (from :func:`quantize_tree`) in ``w8a8_int``.
+    """
+    if mode == "fp":
+        return x @ w
+    if mode == "w8a8_sim":
+        return w8a8_matmul_sim(x, w)
+    if mode == "w8a8_int":
+        codes, scale = w
+        return w8a8_matmul_int(x, codes, scale).astype(x.dtype)
+    raise ValueError(f"unknown quant mode: {mode}")
+
+
+# GEMM weight leaves only (whitelist): dense '.../w', MoE expert stacks.
+# Norms, biases, embeddings, conv/recurrence tables stay high-precision.
+_DEFAULT_INCLUDE = re.compile(r"\['w'\]$|\['w_(gate|up|down)'\]$")
+
+
+def quantize_tree(params, bits: int = 8,
+                  skip: Optional[Callable[[str], bool]] = None):
+    """Quantize GEMM weight leaves to (int8 codes, per-channel scale).
+
+    ``skip`` (optional) vetoes paths that would otherwise quantize.  The
+    result keeps the same structure but quantized leaves become 2-tuples —
+    the serving path's control-plane weight table.
+    """
+    def visit(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if (leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and _DEFAULT_INCLUDE.search(name)
+                and not (skip and skip(name))):
+            # per-output-channel over the INPUT axis (−2): leading layer-stack
+            # dims are preserved so scanned params stay scan-compatible
+            codes, scale = absmax_quantize(leaf, bits=bits, axis=-2)
+            return (codes, scale.astype(jnp.float32))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+class QuantizedLinear:
+    """Convenience wrapper bundling codes+scale (used by examples/tests)."""
+
+    def __init__(self, w: jax.Array, bits: int = 8):
+        self.codes, self.scale = absmax_quantize(w, bits=bits, axis=0)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return w8a8_matmul_int(x, self.codes, self.scale)

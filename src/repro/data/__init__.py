@@ -1,0 +1,9 @@
+"""Data pipeline substrate: synthetic LM token streams (host-sharded,
+resumable) and packet-trace generation (the paper's traffic source)."""
+
+from . import packets, tokens
+from .packets import PacketGenConfig, packet_stream
+from .tokens import TokenStream, TokenStreamConfig
+
+__all__ = ["packets", "tokens", "PacketGenConfig", "packet_stream",
+           "TokenStream", "TokenStreamConfig"]

@@ -1,0 +1,46 @@
+"""Synthetic packet-trace generator — the DPDK-pktgen / Scapy analogue of the
+paper's methodology (§2: "BMv2 simulations ... utilizing traffic generated
+via Scapy").  Produces encapsulated feature packets (Table 1) for the
+data-plane engine benchmarks and the QoS serving example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.packet import encode_packets
+
+__all__ = ["PacketGenConfig", "packet_stream", "flow_features"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketGenConfig:
+    n_features: int = 8
+    batch: int = 1024
+    frac_bits: int = 8
+    model_ids: Tuple[int, ...] = (1,)
+    seed: int = 0
+
+
+def flow_features(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
+    """Synthetic flow statistics: pkt sizes, inter-arrival, rates, flags —
+    normalized to ~N(0, 0.5) like the QoS training data."""
+    base = rng.normal(size=(n, d)) * 0.5
+    base[:, 0] = np.abs(base[:, 0])  # packet size ≥ 0
+    return base.astype(np.float32)
+
+
+def packet_stream(cfg: PacketGenConfig) -> Iterator[Dict]:
+    """Yields {'packets': uint8 (B, L), 'features': float (B, F), 'model_id'}."""
+    rng = np.random.default_rng(cfg.seed)
+    while True:
+        feats = flow_features(rng, cfg.batch, cfg.n_features)
+        mids = rng.choice(cfg.model_ids, size=cfg.batch).astype(np.int32)
+        codes = np.round(feats * (1 << cfg.frac_bits)).astype(np.int32)
+        pkts = encode_packets(jnp.asarray(mids), jnp.int32(cfg.frac_bits),
+                              jnp.asarray(codes))
+        yield {"packets": pkts, "features": feats, "model_id": mids}

@@ -1,0 +1,11 @@
+"""Distribution substrate: sharding rule engine, collective accounting,
+compressed gradient reduction, elastic restart planning."""
+
+from . import collectives, elastic, sharding
+from .collectives import collective_bytes, compressed_all_reduce
+from .elastic import ElasticPlan, plan_downsized_mesh
+from .sharding import ShardingPlan, batch_axes, batch_spec, cache_specs, make_plan
+
+__all__ = ["collectives", "elastic", "sharding", "collective_bytes",
+           "compressed_all_reduce", "ElasticPlan", "plan_downsized_mesh",
+           "ShardingPlan", "batch_axes", "batch_spec", "cache_specs", "make_plan"]

@@ -1,0 +1,110 @@
+"""Activation sharding constraints (GSPMD guard rails).
+
+GSPMD's propagation gives up through long chains of one-hots, cumsums and
+scan carries — leaving giant activations replicated (observed: the MoE
+dispatch tensors and scan residuals compiling to *global* shapes per
+device).  The fix is standard production practice: pin the sharding of
+activations at block boundaries with ``with_sharding_constraint``.
+
+Models are mesh-agnostic, so launchers install the mesh here
+(``activation_mesh(mesh)``) and layers call :func:`constrain` /
+:func:`constrain_batch`, which silently no-op when no mesh is installed
+(single-device tests) or when a dim isn't divisible by its axis (e.g. the
+``long_500k`` batch of 1) — recording nothing is ever forced is exactly why
+every cell compiles.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["activation_mesh", "constrain", "constrain_batch", "data_axes",
+           "mesh_axis_size"]
+
+_STATE = threading.local()
+
+
+@contextmanager
+def activation_mesh(mesh):
+    """Install ``mesh`` as the ambient activation-sharding target while
+    tracing (launchers wrap ``.lower()`` in this)."""
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+def data_axes() -> Tuple[str, ...]:
+    mesh = _mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis in the ambient activation mesh (1 if absent)."""
+    mesh = _mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def constrain(x: jax.Array, spec: Sequence) -> jax.Array:
+    """``with_sharding_constraint`` with divisibility guards.
+
+    ``spec`` entries: None, an axis name, a tuple of axis names, or the
+    string "batch" (resolved to the data axes).  Any entry whose axes are
+    absent from the mesh or don't divide the dim is dropped (replicated).
+    """
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        if entry in ("batch", "all"):
+            axes_t = data_axes()
+            if entry == "all" and "model" in mesh.axis_names:
+                axes_t = axes_t + ("model",)
+            if not axes_t:
+                out.append(None)
+                continue
+            entry = axes_t if len(axes_t) > 1 else axes_t[0]
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if not all(a in mesh.axis_names for a in axes):
+            out.append(None)
+            continue
+        if x.shape[dim] % _axis_size(mesh, tuple(axes)) != 0:
+            out.append(None)
+            continue
+        out.append(entry)
+    if all(e is None for e in out):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def constrain_batch(x: jax.Array, dim: int = 0) -> jax.Array:
+    """Shard ``dim`` over the data axes (the canonical activation pin)."""
+    spec: list = [None] * x.ndim
+    spec[dim] = "batch"
+    return constrain(x, spec)

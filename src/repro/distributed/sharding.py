@@ -1,0 +1,297 @@
+"""Divisibility-aware sharding rule engine (DESIGN.md §4).
+
+Given a parameter pytree (or cache/batch structure) and a mesh, produce a
+``PartitionSpec`` per leaf:
+
+  * **TP** over the ``model`` axis: column-parallel for QKV/up projections
+    (head-aligned where the op needs whole heads on a device), row-parallel
+    for output/down projections, expert-parallel for MoE stacks;
+  * **FSDP** over the ``data`` axis: every still-unsharded large dim of a
+    big leaf is additionally sharded (ZeRO-3-style; the per-scan-step
+    all-gathers are overlapped by XLA's latency-hiding scheduler);
+  * **fallbacks**: any rule whose divisibility/alignment check fails walks
+    to the next candidate dim, or replicates — and records WHY, so the
+    roofline table can name the fallback (e.g. qwen2's 12 heads on a
+    16-way model axis ⇒ attention TP falls back to d_ff TP).
+
+Nothing here inspects values — only paths and shapes — so it works on
+``ShapeDtypeStruct`` trees (the dry-run) and real params identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+__all__ = ["ShardingPlan", "make_plan", "batch_axes", "batch_spec",
+           "cache_specs", "logical_batch_sharding"]
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    """Specs per leaf + a log of every fallback the engine took."""
+
+    specs: Dict[str, P]
+    fallbacks: List[str]
+    mesh: Mesh
+
+    def tree_specs(self, tree):
+        """PartitionSpec pytree matching ``tree``'s structure."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs = [self.specs[jax.tree_util.keystr(p)] for p, _ in flat]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def shardings(self, tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.tree_specs(tree))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ('pod','data') on multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# rule table
+# ---------------------------------------------------------------------------
+
+# (path regex, kind) — kind drives which dims are TP candidates.
+#   col:   shard LAST dim over model (column parallel)
+#   row:   shard SECOND-TO-LAST dim over model (row parallel)
+#   moe:   shard expert dim (−3) over model, fallback to the hidden dim
+#   embed: shard vocab (−2) over model, fallback to d_model (−1)
+#   rep:   always replicate on model (norms/bias/scalars/small tables)
+_RULES: List[Tuple[str, str]] = [
+    (r"\['(wq|wk|wv|wq_a|wq_b|wk_b|wv_b|wg|up|gate|in_z|in_x|in_dt|wkv_a)'\]\['w'\]", "col"),
+    (r"\['time_mix'\]\['(wr|wk|wv)'\]\['w'\]", "col"),
+    (r"\['channel_mix'\]\['wk'\]\['w'\]", "col"),
+    (r"\['channel_mix'\]\['wv'\]\['w'\]", "row"),
+    (r"\['channel_mix'\]\['wr'\]\['w'\]", "col"),
+    (r"\['(wo|down|out_proj)'\]\['w'\]", "row"),
+    (r"\['w_(gate|up|down)'\]", "moe"),
+    (r"\['(embed|head|pos_dec)'\]", "embed"),
+    (r"\['wr'\]\['w'\]", "col"),
+]
+
+
+def _alignment_for(path: str, cfg: ModelConfig) -> int:
+    """Column-parallel alignment: whole heads must stay on one device."""
+    if re.search(r"\['(wq|wk|wv)'\]", path) and "time_mix" not in path \
+            and "channel_mix" not in path:
+        if re.search(r"\['wk'\]|\['wv'\]", path):
+            return cfg.head_dim  # kv columns: head-aligned
+        return cfg.head_dim
+    if re.search(r"\['wq_b'\]", path):  # MLA query up: (dn+dr) per head
+        return max(cfg.qk_nope_dim + cfg.qk_rope_dim, 1)
+    if re.search(r"\['wk_b'\]", path):  # MLA key up: dn per head
+        return max(cfg.qk_nope_dim, 1)
+    if re.search(r"\['wv_b'\]", path):  # MLA value up: dv per head
+        return max(cfg.v_head_dim, 1)
+    if re.search(r"\['(in_z|in_x)'\]", path):  # mamba channels: ssm heads
+        return cfg.ssm_head_dim
+    if "time_mix" in path:  # rwkv wkv recurrence couples whole heads
+        return cfg.rwkv_head_dim
+    return 1
+
+
+def _kv_heads_shardable(path: str, cfg: ModelConfig, model_size: int) -> bool:
+    """K/V projections can only TP if kv heads divide the model axis."""
+    if re.search(r"\['(wk|wv)'\]\['w'\]", path) and "mix" not in path:
+        return cfg.n_kv_heads % model_size == 0
+    return True
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                   mesh: Mesh, fallbacks: List[str],
+                   fsdp_min: int = 1 << 20) -> P:
+    ndim = len(shape)
+    model = "model" if "model" in mesh.axis_names else None
+    model_n = mesh.shape[model] if model else 1
+    data_n = mesh.shape["data"] if "data" in mesh.axis_names else 1
+
+    axes: List[Optional[str]] = [None] * ndim
+    if ndim == 0 or max(shape) == 1:
+        return P()
+
+    kind = "rep"
+    for pat, k in _RULES:
+        if re.search(pat, path):
+            kind = k
+            break
+    if ndim < 2:
+        kind = "rep"
+
+    def try_shard(dim: int, axis: str, n: int, align: int = 1) -> bool:
+        if axes[dim] is not None or n <= 1:
+            return False
+        if shape[dim] % n == 0 and (shape[dim] // n) % align == 0:
+            axes[dim] = axis
+            return True
+        return False
+
+    # --- TP over the model axis -----------------------------------------
+    if model and kind != "rep":
+        if kind == "col":
+            align = _alignment_for(path, cfg)
+            ok = (_kv_heads_shardable(path, cfg, model_n)
+                  and try_shard(ndim - 1, model, model_n, align))
+            if not ok:
+                fallbacks.append(
+                    f"{path}: col-TP blocked (dim {shape[-1]} % {model_n} "
+                    f"× align {align}) → replicated on model")
+        elif kind == "row":
+            if not try_shard(ndim - 2, model, model_n,
+                             _alignment_for(path, cfg)):
+                fallbacks.append(
+                    f"{path}: row-TP blocked ({shape[-2]} % {model_n}) → "
+                    "replicated on model")
+        elif kind == "moe":
+            # expert parallelism; fallback: replicate experts on model and
+            # let the MoE rows shard over data×model instead (layers.moe_ffn
+            # row_spec) — hidden-TP would fight the row sharding
+            if not try_shard(ndim - 3, model, model_n):
+                fallbacks.append(
+                    f"{path}: EP blocked ({shape[ndim-3]} experts % "
+                    f"{model_n}) → experts replicated on model; MoE rows "
+                    "shard over data×model")
+        elif kind == "embed":
+            if not try_shard(ndim - 2, model, model_n):
+                if try_shard(ndim - 1, model, model_n):
+                    fallbacks.append(
+                        f"{path}: vocab-shard blocked ({shape[ndim-2]} % "
+                        f"{model_n}) → sharded on d_model")
+                else:
+                    fallbacks.append(f"{path}: embed unshardable on model")
+
+    # --- FSDP over the data axis ------------------------------------------
+    if data_n > 1 and int(np.prod(shape)) >= fsdp_min:
+        # shard the largest still-free dim (skip tiny leading stack dims)
+        order = sorted(range(ndim), key=lambda d: -shape[d])
+        for d in order:
+            if try_shard(d, "data", data_n):
+                break
+        else:
+            fallbacks.append(f"{path}: FSDP found no divisible dim "
+                             f"{shape} % {data_n} → replicated on data")
+
+    return P(*axes)
+
+
+def make_plan(tree, cfg: ModelConfig, mesh: Mesh, *,
+              fsdp_min: int = 1 << 20) -> ShardingPlan:
+    """Build the sharding plan for a parameter/optimizer-state pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    specs: Dict[str, P] = {}
+    fallbacks: List[str] = []
+    for pth, leaf in flat:
+        path = jax.tree_util.keystr(pth)
+        specs[path] = _spec_for_leaf(path, tuple(leaf.shape), cfg, mesh,
+                                     fallbacks, fsdp_min)
+    return ShardingPlan(specs=specs, fallbacks=fallbacks, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, global_batch: int, fallbacks: Optional[List[str]] = None) -> P:
+    """Shard the batch dim over every data axis that divides it."""
+    daxes = batch_axes(mesh)
+    usable = []
+    remaining = global_batch
+    for a in daxes:
+        if remaining % mesh.shape[a] == 0:
+            usable.append(a)
+            remaining //= mesh.shape[a]
+        elif fallbacks is not None:
+            fallbacks.append(f"batch {global_batch} % {a}={mesh.shape[a]} → "
+                             f"'{a}' axis idle for batch sharding")
+    return P(tuple(usable)) if usable else P()
+
+
+def logical_batch_sharding(mesh: Mesh, tree, global_batch: int,
+                           fallbacks: Optional[List[str]] = None):
+    """NamedShardings for a host batch dict: dim0 = batch, rest replicated."""
+    bs = batch_spec(mesh, global_batch, fallbacks)
+
+    def one(leaf):
+        spec = P(*(list(bs) + [None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def cache_specs(tree, cfg: ModelConfig, mesh: Mesh, batch: int,
+                fallbacks: Optional[List[str]] = None) -> ShardingPlan:
+    """KV-cache / recurrent-state sharding: batch over data axes, head/latent
+    dims over model where aligned.
+
+    Cache layouts (leading layer-stack dims ignored):
+      dense kv       (B, S, H_kv, dh)   → (data, None, model?, None)
+      kv int8 scales (B, S, H_kv, 1)
+      mla            (B, S, lkv|dr)     → (data, None, model?)
+      rwkv state     (B, H, dh, dh)     → (data, model?, None, None)
+      ssm state      (B, H, dh, N)      → (data, model?, None, None)
+      conv state     (B, K, C)          → (data, None, model?)
+      taylor-linear  (B, H, F, d)/(B,H,F) → (data, model?, ...)
+      shifts         (B, D)             → (data, None)
+    """
+    fallbacks = [] if fallbacks is None else fallbacks
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    bspec = batch_spec(mesh, batch, fallbacks)
+    b_ax = bspec[0] if len(bspec) else None
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    specs: Dict[str, P] = {}
+    for pth, leaf in flat:
+        path = jax.tree_util.keystr(pth)
+        shape = leaf.shape
+        # find batch dim: first dim equal to `batch` after any layer-stack dims
+        axes: List = [None] * leaf.ndim
+        bdim = None
+        for d, s in enumerate(shape):
+            if s == batch:
+                bdim = d
+                break
+        if bdim is not None and b_ax is not None:
+            axes[bdim] = b_ax
+        if model_n > 1 and bdim is not None:
+            # candidate head/latent dims after batch
+            for d in range(bdim + 1, leaf.ndim):
+                name_hint = shape[d]
+                # heads dim: matches n_heads / n_kv_heads / ssm heads
+                if ("ckv" in path or "krope" in path):
+                    # MLA latent: shard the latent dim (contraction-sharded)
+                    if d == leaf.ndim - 1 and shape[d] % model_n == 0:
+                        axes[d] = "model"
+                        break
+                    continue
+                if d == bdim + 2 and shape[d] % model_n == 0 and leaf.ndim >= 4:
+                    axes[d] = "model"  # (B,S,H,dh) kv heads
+                    break
+                if d == bdim + 1 and leaf.ndim >= 3 and shape[d] % model_n == 0 \
+                        and ("s" in path or "attn" in path or "conv" not in path):
+                    if leaf.ndim >= 3 and d != leaf.ndim - 1:
+                        axes[d] = "model"  # (B,H,...) recurrent heads
+                        break
+            else:
+                if leaf.ndim > 1:
+                    fallbacks.append(f"{path}: cache head dims not divisible "
+                                     f"by model={model_n} → replicated on model")
+        specs[path] = P(*axes)
+    return ShardingPlan(specs=specs, fallbacks=fallbacks, mesh=mesh)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  * ``fixedpoint_matmul``  — W8A8 int8→int32 MXU GEMM + Table-2 rescale (C1)
+  * ``taylor_activation``  — fused integer-Horner polynomial activation (C2)
+  * ``wkv_scan``           — chunked RWKV-6 WKV scan with the recurrent
+                             state resident in VMEM across chunks (the
+                             §Perf rwkv hillclimb's end-state)
+
+Each kernel ships with a pure-jnp oracle (`ref.py`); `ops.py` wrappers
+dispatch by platform (TPU: native Pallas; CPU: oracle / interpret mode).
+"""
+
+from . import ops, ref, wkv_scan
+from .ops import fixedpoint_matmul, taylor_activation
+from .wkv_scan import wkv_scan_pallas
+
+__all__ = ["ops", "ref", "wkv_scan", "fixedpoint_matmul",
+           "taylor_activation", "wkv_scan_pallas"]

@@ -1,0 +1,75 @@
+"""jit'd public wrappers around the Pallas kernels with platform dispatch.
+
+On TPU the Pallas kernels lower natively; on CPU (this container, and any
+test environment) they run through the Pallas interpreter or fall back to the
+pure-jnp oracle (`ref.py`) — selected by ``backend``:
+
+  * ``"auto"``      — Pallas on TPU, oracle on CPU (production default; the
+                      dry-run lowers the oracle path so CPU-XLA compiles it)
+  * ``"pallas"``    — force the kernel (interpret=True off-TPU)
+  * ``"ref"``       — force the oracle
+
+Wrappers own the padding to block multiples so callers see arbitrary shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .fixedpoint_matmul import BK, BM, BN, fixedpoint_matmul_pallas
+from .taylor_activation import BC, BR, taylor_activation_pallas
+
+__all__ = ["fixedpoint_matmul", "taylor_activation", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def fixedpoint_matmul(x_codes: jax.Array, w_codes: jax.Array,
+                      x_scale: jax.Array, w_scale: jax.Array,
+                      backend: str = "auto") -> jax.Array:
+    """W8A8 GEMM: (M,K) int8 · (K,N) int8 with per-row/col scales → f32."""
+    m, k = x_codes.shape
+    _, n = w_codes.shape
+    use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    if not use_pallas:
+        return ref.fixedpoint_matmul_ref(x_codes, w_codes, x_scale, w_scale)
+    xp = _pad_to(x_codes, (BM, BK))
+    wp = _pad_to(w_codes, (BK, BN))
+    xs = _pad_to(x_scale, (BM, 1))
+    ws = _pad_to(w_scale, (1, BN))
+    out = fixedpoint_matmul_pallas(xp, wp, xs, ws, interpret=not on_tpu())
+    return out[:m, :n]
+
+
+def taylor_activation(x_q: jax.Array, coeffs, x_frac: int,
+                      backend: str = "auto") -> jax.Array:
+    """Integer-Horner polynomial activation on int32 codes (any shape)."""
+    coeffs = tuple(int(c) for c in np.asarray(coeffs).tolist())
+    use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    if not use_pallas:
+        clamp = (1 << 14) - 1
+        return ref.taylor_activation_ref(
+            jnp.clip(x_q, -clamp, clamp), np.asarray(coeffs), x_frac)
+    shape = x_q.shape
+    flat = x_q.reshape(-1)
+    total = flat.shape[0]
+    # pad to a whole number of (BR, BC) tiles and reshape to 2-D
+    padded = _pad_to(flat.reshape(1, total), (1, BR * BC))
+    x2 = padded.reshape(-1, BC)
+    out = taylor_activation_pallas(x2, coeffs, x_frac, interpret=not on_tpu())
+    return out.reshape(-1)[:total].reshape(shape)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the BMv2-simulation analogue:
+bit-faithful reference semantics the hardware kernels must reproduce)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "rounding_rshift",
+           "wkv_scan_ref"]
+
+
+def wkv_scan_ref(a: jax.Array, b: jax.Array, v: jax.Array, tot: jax.Array,
+                 diag: jax.Array) -> jax.Array:
+    """Oracle for the WKV chunk-scan kernel: sequential chunks per (B·H) row.
+
+    a/b/v: (BH, NC, C, D); tot: (BH, NC, 1, D); diag: (BH, NC, C, 1).
+    """
+    bh, nc, c, d = a.shape
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+
+    def per_row(a_r, b_r, v_r, tot_r, diag_r):
+        def step(s0, inp):
+            a_c, b_c, v_c, tot_c, diag_c = inp
+            scores = (a_c @ b_c.T) * tri
+            o = scores @ v_c + diag_c * v_c + a_c @ s0
+            s_new = s0 * tot_c.T + (b_c * tot_c).T @ v_c
+            return s_new, o
+
+        s0 = jnp.zeros((d, d), jnp.float32)
+        _, outs = jax.lax.scan(step, s0, (a_r, b_r, v_r, tot_r, diag_r))
+        return outs
+
+    return jax.vmap(per_row)(a, b, v, tot, diag)
+
+
+def rounding_rshift(x: jax.Array, shift: int) -> jax.Array:
+    """Arithmetic right shift, round-to-nearest, ties away from zero (the
+    requantization primitive — identical to core.fixedpoint)."""
+    if shift <= 0:
+        return x
+    rounding = jnp.where(x >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1
+                         ).astype(x.dtype)
+    return jnp.right_shift(x + rounding, shift)
+
+
+def fixedpoint_matmul_ref(x_codes: jax.Array, w_codes: jax.Array,
+                          x_scale: jax.Array, w_scale: jax.Array,
+                          bias: jax.Array | None = None) -> jax.Array:
+    """W8A8 GEMM oracle: int8×int8 → int32 accumulate → float rescale.
+
+    x_codes: (M, K) int8, per-row scale (M, 1) float32.
+    w_codes: (K, N) int8, per-column scale (1, N) float32.
+    Returns float32 (M, N): ``acc * x_scale * w_scale (+ bias)``.
+    """
+    acc = jax.lax.dot_general(
+        x_codes, w_codes, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale * w_scale
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def taylor_activation_ref(x_q: jax.Array, coeffs_q: np.ndarray,
+                          x_frac: int) -> jax.Array:
+    """Integer Horner oracle (paper Table 3 × Table 4 pipeline).
+
+    x_q: int32 codes with ``x_frac`` fractional bits (pre-clamped to ±2^14 by
+    the wrapper); ``coeffs_q``: ascending int codes at the coefficient scale.
+    Returns int32 codes at the coefficient scale.
+    """
+    x_q = x_q.astype(jnp.int32)
+    acc = jnp.full(x_q.shape, int(coeffs_q[-1]), jnp.int32)
+    for c in coeffs_q[-2::-1]:
+        acc = rounding_rshift(acc * x_q, x_frac) + jnp.int32(int(c))
+    return acc

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV scan (the §Perf rwkv end-state).
+
+The rwkv6-3b × train_4k hillclimb (EXPERIMENTS.md §Perf.3) drove the memory
+term down 2.46× by enlarging the jnp chunk, and concluded the residual gap
+is chunk-boundary state traffic — the state (D×D per head) leaving and
+re-entering HBM between chunks.  This kernel eliminates it: the state lives
+in a VMEM scratch accumulator across the sequential chunk grid dimension,
+touching HBM exactly never.
+
+Formulation (per (batch·head) × chunk grid cell; pre-transformed operands
+computed elementwise outside the kernel, as in models/rwkv6._wkv_chunked):
+
+    a_c   = r ⊙ exp(cum_prev)      queries against chunk-start state
+    b_c   = k ⊙ exp(−cum)          keys propagated to chunk start
+    tot_c = exp(cum_T)             chunk decay total
+    diag  = (r ⊙ u ⊙ k)·1          current-token bonus row-sums
+
+    scores = strict_tril(a_c b_cᵀ)
+    o_c    = scores v_c + diag_c ⊙ v_c + a_c S
+    S      = S ⊙ tot_c + (b_c ⊙ tot_c)ᵀ v_c
+
+Grid: (BH, NC) with NC sequential ("arbitrary") — S persists in scratch.
+Tiles (C=chunk, D=head_dim=64): a/b/v (C·D), scores (C·C), S (D·D) — a few
+hundred KiB of VMEM at C=256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv_scan_pallas"]
+
+
+def _kernel(a_ref, b_ref, v_ref, tot_ref, diag_ref, o_ref, state_ref,
+            *, chunk: int):
+    nc_i = pl.program_id(1)
+
+    @pl.when(nc_i == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0, 0]  # (C, D)
+    b = b_ref[0, 0]
+    v = v_ref[0, 0]
+    tot = tot_ref[0, 0]  # (1, D)
+    diag = diag_ref[0, 0]  # (C, 1)
+    s0 = state_ref[...]  # (D, D)
+
+    scores = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+    scores = scores * tri
+    o = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    o = o + diag * v
+    o = o + jnp.dot(a, s0, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o
+
+    state_ref[...] = s0 * tot.T + jnp.dot(
+        (b * tot).T, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_scan_pallas(a: jax.Array, b: jax.Array, v: jax.Array,
+                    tot: jax.Array, diag: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """a/b/v: (BH, NC, C, D) f32; tot: (BH, NC, 1, D); diag: (BH, NC, C, 1).
+
+    Returns o: (BH, NC, C, D).  The NC grid dimension iterates sequentially
+    per BH row; the (D, D) state lives in VMEM scratch for its whole life.
+    """
+    bh, nc, c, d = a.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=c),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, 1), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nc, c, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(a, b, v, tot, diag)

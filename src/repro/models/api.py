@@ -1,0 +1,99 @@
+"""Unified model API: ``build_model(cfg)`` → one object with the same five
+entry points for every family, plus ``input_specs()`` ShapeDtypeStruct
+stand-ins for the dry-run (weak-type-correct, shardable, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, rwkv6, ssm, transformer
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    loss_fn: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, **inputs) -> last-position logits (B,1,V)
+    decode_step: Callable  # (params, caches, tokens, pos) -> (logits, caches)
+    init_caches: Callable  # (batch, max_seq) -> caches
+
+    def abstract_params(self, key=None) -> Params:
+        """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def abstract_caches(self, batch: int, max_seq: int) -> Params:
+        return jax.eval_shape(lambda: self.init_caches(batch, max_seq))
+
+    # -- dry-run inputs -----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Abstract model inputs for one assigned (arch × shape) cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f = jnp.dtype(cfg.dtype)
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                    "pos": jax.ShapeDtypeStruct((b,), i32)}
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        s_text = s
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches  # patches occupy the head of the seq
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), f)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), f)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init(key, cfg),
+            loss_fn=lambda p, b: transformer.loss_fn(p, b, cfg),
+            prefill=lambda p, **inp: transformer.prefill(
+                p, inp["tokens"], cfg,
+                patch_embeds=inp.get("patch_embeds")),
+            decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
+            init_caches=lambda b, s: transformer.init_caches(cfg, b, s),
+        )
+    if cfg.family == "rwkv6":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv6.init(key, cfg),
+            loss_fn=lambda p, b: rwkv6.loss_fn(p, b, cfg),
+            prefill=lambda p, **inp: rwkv6.prefill(p, inp["tokens"], cfg),
+            decode_step=lambda p, c, t, pos: rwkv6.decode_step(p, c, t, pos, cfg),
+            init_caches=lambda b, s: rwkv6.init_caches(cfg, b, s),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm.init(key, cfg),
+            loss_fn=lambda p, b: ssm.loss_fn(p, b, cfg),
+            prefill=lambda p, **inp: ssm.prefill(p, inp["tokens"], cfg),
+            decode_step=lambda p, c, t, pos: ssm.decode_step(p, c, t, pos, cfg),
+            init_caches=lambda b, s: ssm.init_caches(cfg, b, s),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init(key, cfg),
+            loss_fn=lambda p, b: encdec.loss_fn(p, b, cfg),
+            prefill=lambda p, **inp: encdec.prefill(
+                p, inp["tokens"], cfg, frames=inp["frames"]),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
+            init_caches=lambda b, s: encdec.init_caches(cfg, b, s),
+        )
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,224 @@
+"""Whisper-style encoder–decoder backbone (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the brief: ``input_specs()`` supplies
+precomputed mel-frame embeddings (B, encoder_seq, d_model) — the transformer
+backbone (6 enc + 6 dec layers here) is what the dry-run exercises.
+Decoder uses learned positions (no RoPE), causal self-attention with a KV
+cache at decode time, and cross-attention whose K/V are computed once from
+the encoder output and carried in the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.losses import chunked_cross_entropy
+from ..distributed.constrain import constrain_batch
+from . import layers as L
+
+Params = Dict[str, Any]
+
+_MAX_DEC_POS = 65_536  # learned decoder positions (generalized from 448)
+
+
+def _sinusoid(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(ks[0], cfg.d_model, cfg.q_dim, bias=True),
+        "wk": L.init_linear(ks[1], cfg.d_model, cfg.kv_dim),
+        "wv": L.init_linear(ks[2], cfg.d_model, cfg.kv_dim, bias=True),
+        "wo": L.init_linear(ks[3], cfg.q_dim, cfg.d_model),
+    }
+
+
+def cross_kv(p: Params, memory: jax.Array, cfg: ModelConfig):
+    b, s, _ = memory.shape
+    k = L.linear(p["wk"], memory, cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.linear(p["wv"], memory, cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def cross_attention(p: Params, x: jax.Array, k: jax.Array, v: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    b, s, _ = x.shape
+    q = L.linear(p["wq"], x, cfg).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    n_rep = cfg.n_heads // k.shape[2]
+    k, v = L._repeat_kv(k, n_rep), L._repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(logits, -1).astype(x.dtype)  # bidirectional
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, cfg.q_dim)
+    return L.linear(p["wo"], out, cfg)
+
+
+def init_encoder_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg),
+            "ln2": L.init_norm(cfg), "mlp": L.init_mlp(k2, cfg)}
+
+
+def encoder_block_fwd(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    # bidirectional self-attention (no mask)
+    h = L.norm(p["ln1"], x, cfg)
+    b, s, _ = h.shape
+    q = L.linear(p["attn"]["wq"], h, cfg).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = L.linear(p["attn"]["wk"], h, cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.linear(p["attn"]["wv"], h, cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = L._repeat_kv(k, n_rep), L._repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+    att = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, cfg.q_dim)
+    x = x + L.linear(p["attn"]["wo"], att, cfg)
+    x = x + L.mlp(p["mlp"], L.norm(p["ln2"], x, cfg), cfg)
+    return x
+
+
+def init_decoder_block(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_norm(cfg), "self_attn": L.init_attention(k1, cfg),
+            "ln_x": L.init_norm(cfg), "cross_attn": init_cross_attention(k2, cfg),
+            "ln2": L.init_norm(cfg), "mlp": L.init_mlp(k3, cfg)}
+
+
+def decoder_block_fwd(p: Params, x: jax.Array, xk: jax.Array, xv: jax.Array,
+                      cfg: ModelConfig, *, pos=None, cache=None):
+    h = L.norm(p["ln1"], x, cfg)
+    att, new_cache = L.attention(p["self_attn"], h, cfg, pos=pos, cache=cache)
+    x = x + att
+    x = x + cross_attention(p["cross_attn"], L.norm(p["ln_x"], x, cfg), xk, xv, cfg)
+    x = x + L.mlp(p["mlp"], L.norm(p["ln2"], x, cfg), cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "pos_dec": jax.random.normal(ks[1], (_MAX_DEC_POS, cfg.d_model),
+                                     jnp.float32) * 0.01,
+        "enc_blocks": jax.vmap(lambda k: init_encoder_block(k, cfg))(
+            jax.random.split(ks[2], cfg.n_encoder_layers)),
+        "enc_norm": L.init_norm(cfg),
+        "dec_blocks": jax.vmap(lambda k: init_decoder_block(k, cfg))(
+            jax.random.split(ks[3], cfg.n_layers)),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, encoder_seq, d_model) — precomputed (stub frontend)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype) + jnp.asarray(
+        _sinusoid(frames.shape[1], cfg.d_model), dtype)[None]
+
+    def body(carry, bp):
+        return encoder_block_fwd(bp, constrain_batch(carry), cfg), jnp.float32(0.0)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.norm(params["enc_norm"], x, cfg)
+
+
+def _trunk(params: Params, tokens: jax.Array, cfg: ModelConfig,
+           frames: jax.Array) -> jax.Array:
+    memory = encode(params, frames, cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dtype) + params["pos_dec"][:s].astype(dtype)[None]
+
+    def body(carry, bp):
+        xk, xv = cross_kv(bp["cross_attn"], memory, cfg)
+        y, _ = decoder_block_fwd(bp, constrain_batch(carry), xk, xv, cfg)
+        return y, jnp.float32(0.0)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return L.norm(params["final_norm"], x, cfg)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+            frames: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    x = _trunk(params, tokens, cfg, frames)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = _trunk(params, batch["tokens"], cfg, batch["frames"])
+    ce = chunked_cross_entropy(x, params["embed"].T, batch["labels"],
+                               batch.get("mask"))
+    return ce, {"loss": ce, "ce": ce}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """Self-attn KV cache + cross-attn K/V (filled by ``precompute_cross``)."""
+    dtype = jnp.dtype(cfg.dtype)
+    self_one = L.init_kv_cache(cfg, batch, max_seq, dtype)
+    cross_shape = (batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+    one = {"self": self_one,
+           "cross_k": jnp.zeros(cross_shape, dtype),
+           "cross_v": jnp.zeros(cross_shape, dtype)}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+
+def precompute_cross(params: Params, frames: jax.Array, cfg: ModelConfig,
+                     caches: Params) -> Params:
+    memory = encode(params, frames, cfg)
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        bp = jax.tree_util.tree_map(lambda x: x[l], params["dec_blocks"])
+        k, v = cross_kv(bp["cross_attn"], memory, cfg)
+        ks.append(k)
+        vs.append(v)
+    return {**caches, "cross_k": jnp.stack(ks), "cross_v": jnp.stack(vs)}
+
+
+def decode_step(params: Params, caches: Params, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype) + params["pos_dec"][pos][:, None].astype(dtype)
+
+    def body(carry, xs):
+        bp, self_c, xk, xv = xs
+        y, self_new = decoder_block_fwd(bp, carry, xk, xv, cfg, pos=pos, cache=self_c)
+        return y, self_new
+
+    x, self_new = jax.lax.scan(
+        body, x, (params["dec_blocks"], caches["self"],
+                  caches["cross_k"], caches["cross_v"]))
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, {**caches, "self": self_new}
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, frames):
+    x = _trunk(params, tokens, cfg, frames)
+    return x[:, -1:] @ params["embed"].T.astype(x.dtype)

@@ -1,0 +1,522 @@
+"""Shared model building blocks: norms, RoPE, attention (MHA/GQA/MQA/MLA,
+full + Taylor-linear), MLPs (gated/plain, Taylor-approximated), dropless MoE.
+
+All functions are pure; parameters are plain dict pytrees so the sharding
+rule engine (repro.distributed.sharding) can assign PartitionSpecs by path.
+The paper's numerics plug in through ``cfg.quant_mode`` (fixed-point GEMMs),
+``cfg.taylor_order`` (polynomial activations) and
+``cfg.attention_impl='taylor_linear'`` (Taylor-softmax linear attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import quantize as qz
+from ..core import taylor as ty
+from ..distributed.constrain import constrain, constrain_batch
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, din: int, dout: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(din)
+    return jax.random.normal(key, (din, dout), dtype) * scale
+
+
+def init_linear(key, din: int, dout: int, *, bias: bool = False,
+                dtype=jnp.float32) -> Params:
+    p = {"w": _dense_init(key, din, dout, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["w"]
+    if isinstance(w, tuple):  # control-plane-installed quantized table
+        y = qz.matmul(x, w, "w8a8_int")
+    elif cfg.quant_mode == "fp":
+        y = x @ w.astype(x.dtype)
+    elif cfg.quant_mode == "w8a8_sim":
+        y = qz.w8a8_matmul_sim(x, w.astype(x.dtype))
+    else:  # w8a8_int on float weights: quantize on the fly (tests/smoke)
+        codes, scale = qz.absmax_quantize(w, bits=8, axis=0)
+        y = qz.w8a8_matmul_int(x, codes, scale).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    init = jnp.zeros if cfg.gemma_style else jnp.ones
+    return {"scale": init((d,), jnp.float32)}
+
+
+def norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        scale = (1.0 + p["scale"]) if cfg.gemma_style else p["scale"]
+        y = y * scale
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float, fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding on the leading ``fraction`` of each head's dims.
+
+    x: (B, S, H, Dh); pos: (B, S) absolute positions.
+    ``fraction=0.5`` is chatglm3's 2D-RoPE (half the dims stay unrotated).
+    """
+    d = x.shape[-1]
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    half = d_rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, :, None, None].astype(jnp.float32) * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+    return jnp.concatenate([rotated, xp], axis=-1) if d_rot < d else rotated
+
+
+# ---------------------------------------------------------------------------
+# activations (exact ↔ Taylor per config — contribution C2)
+# ---------------------------------------------------------------------------
+
+
+def act_fn(x: jax.Array, cfg: ModelConfig, kind: Optional[str] = None) -> jax.Array:
+    kind = kind or cfg.activation
+    base = {"silu": "silu", "geglu": "gelu", "gelu": "gelu", "relu": "relu"}[kind]
+    if base == "relu":
+        return ty.relu(x)
+    if cfg.taylor_order <= 0:
+        return jax.nn.silu(x) if base == "silu" else jax.nn.gelu(x)
+    if cfg.taylor_segmented:
+        sig_in = x if base == "silu" else 1.702 * x
+        sig = ty.segmented_taylor(sig_in, "sigmoid", cfg.taylor_order)
+        return x * sig.astype(x.dtype)
+    if base == "silu":
+        return ty.silu_taylor(x, cfg.taylor_order)
+    return ty.gelu_taylor(x, cfg.taylor_order)
+
+
+def softmax_fn(x: jax.Array, cfg: ModelConfig, axis: int = -1) -> jax.Array:
+    if cfg.attention_impl == "taylor_linear":
+        return ty.taylor_softmax(x, order=2, axis=axis)
+    return jax.nn.softmax(x, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    gated = cfg.activation in ("silu", "geglu")
+    p = {"up": init_linear(ks[0], cfg.d_model, d_ff)}
+    if gated:
+        p["gate"] = init_linear(ks[1], cfg.d_model, d_ff)
+    p["down"] = init_linear(ks[2], d_ff, cfg.d_model)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    up = linear(p["up"], x, cfg)
+    if "gate" in p:
+        h = act_fn(linear(p["gate"], x, cfg), cfg) * up
+    else:
+        h = act_fn(up, cfg)
+    return linear(p["down"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Attention — GQA/MQA full + decode + Taylor-linear
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.q_dim, cfg.d_model),
+    }
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+_ATTN_CHUNK = 512  # flash-style block size (VMEM-sized working set)
+
+
+def _sdpa_causal(q, k, v, cfg: ModelConfig, q_pos0: int = 0) -> jax.Array:
+    """Causal attention. q: (B,Sq,H,D), k/v: (B,Sk,H_kv,D).
+
+    Short sequences use the exact materialized form; long sequences use the
+    flash/online-softmax chunked form (`_sdpa_causal_chunked`) so the S×S
+    probability matrix never exists — the pure-XLA analogue of a fused
+    attention kernel, and the reason train_4k/prefill_32k cells fit HBM.
+    """
+    if q.shape[1] > _ATTN_CHUNK and q.shape[1] == k.shape[1]:
+        return _sdpa_causal_chunked(q, k, v, cfg)
+    n_rep = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    qi = jnp.arange(sq)[:, None] + q_pos0
+    ki = jnp.arange(sk)[None, :]
+    mask = qi >= ki
+    logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _sdpa_causal_chunked(q, k, v, cfg: ModelConfig,
+                         chunk: int = _ATTN_CHUNK) -> jax.Array:
+    """Flash attention (custom-VJP online softmax — models/flash.py).
+
+    Peak attention temp is one (B, H, chunk, chunk) tile instead of
+    (B, H, S, S), in BOTH forward and backward (the hand-written VJP
+    recomputes P blockwise; autodiff through a naive scan would stack it).
+    """
+    from .flash import flash_attention
+    n_rep = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = jnp.asarray(1.0 / np.sqrt(q.shape[-1]), q.dtype)
+    out = flash_attention((q * scale).swapaxes(1, 2), k.swapaxes(1, 2),
+                          v.swapaxes(1, 2), True, chunk)
+    return out.swapaxes(1, 2)
+
+
+def _sdpa_decode(q, k_cache, v_cache, pos, cfg: ModelConfig) -> jax.Array:
+    """One-token attention against a KV cache. q: (B,1,H,D); caches
+    (B,S_max,H_kv,D); ``pos``: (B,) current position (tokens < pos valid,
+    plus the current token already written at ``pos``)."""
+    n_rep = q.shape[2] // k_cache.shape[2]
+    k = _repeat_kv(k_cache, n_rep)
+    v = _repeat_kv(v_cache, n_rep)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(k.shape[1])[None, :] <= pos[:, None]  # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---- fixed-point KV cache (paper C1 applied to the decode bottleneck) ------
+
+
+def maybe_quantize_kv(x: jax.Array, cfg: ModelConfig):
+    """Return cache-resident representation of new K/V entries."""
+    if cfg.kv_cache_bits == 0:
+        return x
+    codes, scale = qz.absmax_quantize(x, bits=cfg.kv_cache_bits, axis=-1)
+    return {"codes": codes, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_kv(c, dtype):
+    if isinstance(c, dict):
+        return (c["codes"].astype(jnp.float32) * c["scale"]).astype(dtype)
+    return c
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_bits:
+        return {
+            "k": {"codes": jnp.zeros(shape, jnp.int8),
+                  "scale": jnp.zeros((*shape[:-1], 1), jnp.float32)},
+            "v": {"codes": jnp.zeros(shape, jnp.int8),
+                  "scale": jnp.zeros((*shape[:-1], 1), jnp.float32)},
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _cache_write(cache_leaf, new, pos):
+    """Write (B,1,...) ``new`` at time ``pos`` into (B,S,...) cache."""
+    def upd(buf, val):
+        return jax.vmap(
+            lambda b, v, p: jax.lax.dynamic_update_slice(b, v, (p,) + (0,) * (b.ndim - 1))
+        )(buf, val, pos)
+    if isinstance(cache_leaf, dict):
+        return {k: upd(cache_leaf[k], new[k]) for k in cache_leaf}
+    return upd(cache_leaf, new)
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              pos: Optional[jax.Array] = None,
+              cache: Optional[Params] = None,
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """Unified attention: train/prefill (cache=None → full causal) or decode
+    (cache given, x is (B,1,D), pos (B,))."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x, cfg).reshape(b, s, h, dh)
+    k = linear(p["wk"], x, cfg).reshape(b, s, hkv, dh)
+    v = linear(p["wv"], x, cfg).reshape(b, s, hkv, dh)
+    if cfg.use_rope:
+        if pos is None:
+            pos_arr = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        else:
+            pos_arr = pos[:, None] if pos.ndim == 1 else pos
+        q = rope(q, pos_arr, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, pos_arr, cfg.rope_theta, cfg.rope_fraction)
+
+    if cache is None:
+        if cfg.attention_impl == "taylor_linear":
+            out = taylor_linear_attention(q, k, v)
+        else:
+            out = _sdpa_causal(q, k, v, cfg)
+        new_cache = None
+    else:
+        kq = maybe_quantize_kv(k, cfg)
+        vq = maybe_quantize_kv(v, cfg)
+        cache = {"k": _cache_write(cache["k"], kq, pos),
+                 "v": _cache_write(cache["v"], vq, pos)}
+        k_full = dequantize_kv(cache["k"], x.dtype)
+        v_full = dequantize_kv(cache["v"], x.dtype)
+        out = _sdpa_decode(q, k_full, v_full, pos, cfg)
+        new_cache = cache
+    out = out.reshape(b, s, h * dh)
+    return linear(p["wo"], out, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Taylor-softmax linear attention (C2 → sub-quadratic; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def taylor_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            chunk: int = 256) -> jax.Array:
+    """Causal linear attention with the order-2 Taylor-exp feature map.
+
+    φ(x) = [1, x, vec(x⊗x)/√2] ⇒ φ(q)·φ(k) = 1 + q·k + (q·k)²/2 ≥ 0, so
+    softmax's exp is replaced by its quadratic Taylor polynomial and the
+    attention matrix never materializes: O(S·f·d) with f = 1+d+d².
+
+    q,k,v: (B,S,H,D) (GQA callers pre-repeat KV).  Chunked scan over S keeps
+    the state (B,H,f,D) resident while chunks stream — maps directly onto a
+    TPU kernel; the jnp form here is the oracle the kernel validates against.
+    """
+    n_rep = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    b, s, h, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    q = (q * scale).swapaxes(1, 2)  # (B,H,S,D)
+    k = (k * scale).swapaxes(1, 2)
+    v = v.swapaxes(1, 2)
+
+    fq, fk = ty.taylor_attention_kernel(q, k)  # (B,H,S,F)
+    f = fq.shape[-1]
+
+    pad = (-s) % chunk
+    if pad:
+        fq = jnp.pad(fq, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        fk = jnp.pad(fk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = fq.shape[2] // chunk
+    fq = fq.reshape(b, h, nc, chunk, f).transpose(2, 0, 1, 3, 4)
+    fk = fk.reshape(b, h, nc, chunk, f).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), q.dtype))
+
+    def step(carry, inp):
+        s_kv, s_k = carry  # (B,H,F,D), (B,H,F)
+        fq_c, fk_c, v_c = inp
+        qk = jnp.einsum("bhqf,bhkf->bhqk", fq_c, fk_c) * tri
+        num = jnp.einsum("bhqk,bhkd->bhqd", qk, v_c) + jnp.einsum(
+            "bhqf,bhfd->bhqd", fq_c, s_kv)
+        den = qk.sum(-1) + jnp.einsum("bhqf,bhf->bhq", fq_c, s_k)
+        out = num / jnp.maximum(den, 1e-6)[..., None]
+        s_kv = s_kv + jnp.einsum("bhkf,bhkd->bhfd", fk_c, v_c)
+        s_k = s_k + fk_c.sum(2)
+        return (s_kv, s_k), out
+
+    init = (jnp.zeros((b, h, f, d), q.dtype), jnp.zeros((b, h, f), q.dtype))
+    _, outs = jax.lax.scan(step, init, (fq, fk, vc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * chunk, d)
+    return out[:, :, :s].swapaxes(1, 2)  # (B,S,H,D)
+
+
+def init_taylor_linear_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d = cfg.head_dim
+    f = 1 + d + d * d
+    return {"s_kv": jnp.zeros((batch, cfg.n_heads, f, d), jnp.float32),
+            "s_k": jnp.zeros((batch, cfg.n_heads, f), jnp.float32)}
+
+
+def taylor_linear_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                         cache: Params, pos: jax.Array,
+                         ) -> Tuple[jax.Array, Params]:
+    """O(1)-per-token decode with the Taylor feature-map state."""
+    b, s, _ = x.shape  # s == 1
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = linear(p["wq"], x, cfg).reshape(b, s, h, dh)
+    k = linear(p["wk"], x, cfg).reshape(b, s, cfg.n_kv_heads, dh)
+    v = linear(p["wv"], x, cfg).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.use_rope:
+        pos_arr = pos[:, None]
+        q = rope(q, pos_arr, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, pos_arr, cfg.rope_theta, cfg.rope_fraction)
+    n_rep = h // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(dh)
+    fq, fk = ty.taylor_attention_kernel(
+        (q[:, 0] * scale).astype(jnp.float32), (k[:, 0] * scale).astype(jnp.float32))
+    s_kv = cache["s_kv"] + jnp.einsum("bhf,bhd->bhfd", fk, v[:, 0].astype(jnp.float32))
+    s_k = cache["s_k"] + fk
+    num = jnp.einsum("bhf,bhfd->bhd", fq, s_kv)
+    den = jnp.maximum(jnp.einsum("bhf,bhf->bh", fq, s_k), 1e-6)
+    out = (num / den[..., None]).astype(x.dtype).reshape(b, 1, h * dh)
+    return linear(p["wo"], out, cfg), {"s_kv": s_kv, "s_k": s_k}
+
+
+# ---------------------------------------------------------------------------
+# MoE — GShard-style grouped dense dispatch (EP-shardable batched GEMMs)
+# ---------------------------------------------------------------------------
+
+_MOE_GROUP = 512  # tokens per dispatch group (bounds dispatch-tensor size)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    e, d, dff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": {"w": _dense_init(ks[0], d, e, jnp.float32)},
+        "w_gate": jax.random.normal(ks[1], (e, d, dff), jnp.float32) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d, dff), jnp.float32) * scale,
+        "w_down": jax.random.normal(ks[3], (e, dff, d), jnp.float32) / np.sqrt(dff),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(
+            jax.random.fold_in(key, 7), cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with grouped dense dispatch (GShard/MaxText
+    formulation — the TPU-native shape: everything is a batched GEMM, expert
+    dim shards over `model` (EP) when divisible, else the rule engine falls
+    back to expert-TP on the hidden dim).
+
+    x: (T, D) flattened tokens → (out, aux_loss).  Tokens are processed in
+    groups of ≤1024 with per-group expert capacity C = ceil(S·k/E · 1.25);
+    overflow tokens are dropped (standard capacity semantics; the residual
+    path carries them).  Router softmax obeys the Taylor mode (C2).
+    """
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    sg = min(_MOE_GROUP, t)
+    pad = (-t) % sg
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    g = x.shape[0] // sg
+    xg = constrain_batch(x.reshape(g, sg, d))  # groups shard over data
+    cap = max(4, int(np.ceil(sg * k * cfg.moe_capacity_factor / e)))
+    cap = min(cap, sg)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"]["w"])
+    probs = softmax_fn(logits, cfg, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (G,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(density * probs.mean((0, 1)))
+
+    # position of each (token, slot) in its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (G,S,k,E)
+    flat = onehot.reshape(g, sg * k, e)
+    pos_all = jnp.cumsum(flat, axis=1) - 1  # (G,S*k,E)
+    keep_all = (pos_all < cap) & (flat > 0)
+    pos_all = pos_all.reshape(g, sg, k, e)
+    keep_all = keep_all.reshape(g, sg, k, e)
+    # accumulate combine weights slot-by-slot: peak memory is ONE (G,S,E,C)
+    # tensor, never the (G,S,k,E,C) outer product
+    combine = jnp.zeros((g, sg, e, cap), xg.dtype)
+    for j in range(k):
+        e_j = idx[..., j]  # (G,S)
+        pos_j = jnp.take_along_axis(pos_all[:, :, j], e_j[..., None], -1)[..., 0]
+        keep_j = jnp.take_along_axis(keep_all[:, :, j], e_j[..., None], -1)[..., 0]
+        w_j = gates[..., j] * keep_j.astype(gates.dtype)  # (G,S)
+        eoh = jax.nn.one_hot(e_j, e, dtype=xg.dtype)
+        coh = jax.nn.one_hot(pos_j, cap, dtype=xg.dtype)
+        combine = combine + jnp.einsum(
+            "gse,gsc->gsec", eoh * w_j[..., None].astype(xg.dtype), coh)
+    combine = constrain(combine, ["batch", None, None, None])
+    dispatch = (combine > 0).astype(xg.dtype)
+
+    # dispatch → batched expert GEMMs → combine.
+    #   EP when E divides `model`: experts shard over model, rows over data.
+    #   Otherwise (e.g. granite-moe's 40 experts on 16): the small experts
+    #   replicate on model and the ROW dim shards over data×model — the
+    #   model axis still contributes, as extra token parallelism.
+    from ..distributed.constrain import mesh_axis_size
+    ep = mesh_axis_size("model") > 1 and e % mesh_axis_size("model") == 0
+    spec4 = (["model", "batch", None, None] if ep
+             else [None, "all", None, None])
+    row_spec = ["model", "batch", None] if ep else [None, "all", None]
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch, xg)  # (E,G,C,D)
+    xin = constrain(xin, spec4)  # pin BEFORE reshape: E never materializes full
+    xin = constrain(xin.reshape(e, g * cap, d), row_spec)
+    gate_h = constrain(jnp.einsum("ecd,edf->ecf", xin,
+                                  p["w_gate"].astype(xg.dtype)), row_spec)
+    up_h = jnp.einsum("ecd,edf->ecf", xin, p["w_up"].astype(xg.dtype))
+    h = act_fn(gate_h, cfg, "silu") * up_h
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(xg.dtype))
+    eout = constrain(constrain(eout, row_spec).reshape(e, g, cap, d), spec4)
+    out = jnp.einsum("egcd,gsec->gsd", eout, combine)
+
+    out = constrain_batch(out).reshape(-1, d)[:t]
+    if "shared" in p:
+        out = out + mlp(p["shared"], x[:t], cfg)
+    return out, aux

@@ -1,0 +1,135 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed into a ``kv_lora_rank``-dim latent ``c_kv`` plus a
+shared ``qk_rope_dim`` rotary key — the cache stores only
+``kv_lora + rope_dim`` (576) values per token instead of
+``2·H·head_dim`` (49152): a 85× cache reduction, which is why the
+``decode_32k``/``long``-class shapes are feasible for a 236B model.
+
+Two execution forms, both faithful to the paper's serving math:
+
+  * **expanded** (train/prefill): latents up-projected to per-head K/V, then
+    standard attention;
+  * **absorbed** (decode): ``W_uk`` is folded into the query and ``W_uv`` into
+    the output so attention runs directly in latent space — per-token cost is
+    independent of the head count's expanded KV.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import Params, _cache_write, init_linear, init_norm, linear, norm, rope
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lq, lkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    p: Params = {}
+    if lq:
+        p["wq_a"] = init_linear(ks[0], d, lq)
+        p["q_norm"] = init_norm(cfg, lq)
+        p["wq_b"] = init_linear(ks[1], lq, h * (dn + dr))
+    else:
+        p["wq"] = init_linear(ks[1], d, h * (dn + dr))
+    p["wkv_a"] = init_linear(ks[2], d, lkv + dr)
+    p["kv_norm"] = init_norm(cfg, lkv)
+    p["wk_b"] = init_linear(ks[3], lkv, h * dn)
+    p["wv_b"] = init_linear(ks[4], lkv, h * dv)
+    p["wo"] = init_linear(ks[5], h * dv, d)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    return {
+        "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+    }
+
+
+def _queries(p: Params, x: jax.Array, cfg: ModelConfig, pos_arr: jax.Array):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = linear(p["wq_b"], norm(p["q_norm"], linear(p["wq_a"], x, cfg), cfg), cfg)
+    else:
+        q = linear(p["wq"], x, cfg)
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, pos_arr, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: Params, x: jax.Array, cfg: ModelConfig, pos_arr: jax.Array):
+    b, s, _ = x.shape
+    lkv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = linear(p["wkv_a"], x, cfg)
+    ckv, k_rope = kv[..., :lkv], kv[..., lkv:]
+    ckv = norm(p["kv_norm"], ckv, cfg)
+    k_rope = rope(k_rope[:, :, None, :], pos_arr, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  pos: Optional[jax.Array] = None,
+                  cache: Optional[Params] = None,
+                  ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, lkv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    if cache is None:
+        pos_arr = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q_nope, q_rope = _queries(p, x, cfg, pos_arr)
+        ckv, k_rope = _latents(p, x, cfg, pos_arr)
+        # expanded K/V
+        k_nope = linear(p["wk_b"], ckv, cfg).reshape(b, s, h, dn)
+        v = linear(p["wv_b"], ckv, cfg).reshape(b, s, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        if s > 512:
+            # flash attention (custom-VJP): O(S·d) residuals, dv ≠ dk is fine
+            from .flash import flash_attention
+            out = flash_attention(
+                (q * jnp.asarray(scale, q.dtype)).swapaxes(1, 2),
+                k.swapaxes(1, 2), v.swapaxes(1, 2), True, 512).swapaxes(1, 2)
+        else:
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+            mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+            logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+            probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        out = out.reshape(b, s, h * dv)
+        return linear(p["wo"], out, cfg), None
+
+    # ---- absorbed decode ----------------------------------------------------
+    pos_arr = pos[:, None]
+    q_nope, q_rope = _queries(p, x, cfg, pos_arr)  # (B,1,H,dn),(B,1,H,dr)
+    ckv_new, krope_new = _latents(p, x, cfg, pos_arr)  # (B,1,lkv),(B,1,dr)
+    cache = {"ckv": _cache_write(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos),
+             "krope": _cache_write(cache["krope"], krope_new.astype(cache["krope"].dtype), pos)}
+    ckv_all = cache["ckv"].astype(x.dtype)  # (B,S,lkv)
+    krope_all = cache["krope"].astype(x.dtype)  # (B,S,dr)
+
+    wk_b = p["wk_b"]["w"].astype(x.dtype).reshape(lkv, h, dn)
+    wv_b = p["wv_b"]["w"].astype(x.dtype).reshape(lkv, h, dv)
+    # absorb W_uk into q: (B,1,H,dn)×(lkv,H,dn) → (B,1,H,lkv)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wk_b)
+    scores = (jnp.einsum("bqhl,bkl->bhqk", q_lat, ckv_all)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, krope_all))
+    scores = scores.astype(jnp.float32) * scale
+    valid = jnp.arange(ckv_all.shape[1])[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqk,bkl->bqhl", probs, ckv_all)  # (B,1,H,lkv)
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx_lat, wv_b).reshape(b, s, h * dv)
+    return linear(p["wo"], out, cfg), cache

@@ -1,0 +1,324 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token mixing with
+data-dependent per-channel decay.
+
+The recurrence per head (state S ∈ R^{dk×dv}):
+
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ
+    o_t = r_tᵀ·(S_{t-1} + diag(u)·k_t v_tᵀ)
+
+with w_t = exp(−exp(d_t)) produced per-token by a LoRA (the "Finch"
+data-dependent decay).  Training/prefill run a **chunked parallel form**
+(cumulative log-decays inside a chunk → two GEMMs per chunk + a scan carry),
+which is the TPU-friendly formulation: the O(T·d²) recurrence becomes
+MXU matmuls instead of a length-T elementwise scan.  Decode is the O(d²)
+recurrent step.  Sub-quadratic ⇒ this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.losses import chunked_cross_entropy
+from ..distributed.constrain import constrain_batch
+from . import layers as L
+
+Params = Dict[str, Any]
+
+_LORA_RANK = 32
+_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_time_mix(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    return {
+        # static token-shift lerp weights for r/k/v/g
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        # data-dependent decay LoRA (the Finch signature)
+        "w_base": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": jax.random.normal(ks[0], (d, _LORA_RANK), jnp.float32) * s,
+        "w_lora_b": jax.random.normal(ks[1], (_LORA_RANK, d), jnp.float32) * 0.01,
+        "wr": {"w": jax.random.normal(ks[2], (d, d), jnp.float32) * s},
+        "wk": {"w": jax.random.normal(ks[3], (d, d), jnp.float32) * s},
+        "wv": {"w": jax.random.normal(ks[4], (d, d), jnp.float32) * s},
+        "wg": {"w": jax.random.normal(ks[5], (d, d), jnp.float32) * s},
+        "wo": {"w": jax.random.normal(ks[6], (d, d), jnp.float32) * s},
+        "u": jax.random.normal(ks[7], (h, cfg.rwkv_head_dim), jnp.float32) * 0.1,
+        "out_norm": jnp.ones((d,), jnp.float32),  # per-head group norm scale
+    }
+
+
+def _init_channel_mix(key, cfg: ModelConfig) -> Params:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": {"w": jax.random.normal(ks[0], (d, dff), jnp.float32) / np.sqrt(d)},
+        "wv": {"w": jax.random.normal(ks[1], (dff, d), jnp.float32) / np.sqrt(dff)},
+        "wr": {"w": jax.random.normal(ks[2], (d, d), jnp.float32) / np.sqrt(d)},
+    }
+
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_norm(cfg), "ln2": L.init_norm(cfg),
+            "time_mix": _init_time_mix(k1, cfg),
+            "channel_mix": _init_channel_mix(k2, cfg)}
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    k_embed, k_blocks = jax.random.split(key)
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(
+            jax.random.split(k_blocks, cfg.n_layers)),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV (parallel training form)
+# ---------------------------------------------------------------------------
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int = _CHUNK):
+    """r,k,v: (B,H,T,D); logw: (B,H,T,D) log-decays (≤0); u: (H,D) bonus.
+
+    Returns o: (B,H,T,D).  Chunk math (per head, S ∈ R^{D×D}):
+      A_t  = r_t ⊙ exp(cum_{t-1})        (queries against chunk-start state)
+      B_i  = k_i ⊙ exp(−cum_i)           (keys propagated to chunk start)
+      intra = strict_tril(A Bᵀ) + diag(r_t·(u⊙k_t))
+      o_t  = intra @ V + A_t @ S0
+      S'   = diag(exp(cum_T)) S0 + (B ⊙ exp(cum_T))ᵀ V
+    """
+    b, h, t, d = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        logw = jnp.pad(logw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    tt = r.shape[2]
+    nc = tt // chunk
+    resh = lambda x: x.reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+    r_, k_, v_, lw = resh(r), resh(k), resh(v), resh(logw)
+
+    cum = jnp.cumsum(lw, axis=-2)  # inclusive cumulative log decay
+    cum = jnp.maximum(cum, -30.0)  # underflow guard (exp(-30) ≈ 1e-13)
+    cum_prev = cum - lw  # exclusive
+    # mixed precision (§Perf rwkv hillclimb): decay math stays f32, but the
+    # chunk GEMM operands are bf16 — halves the dominant HBM traffic and
+    # puts the chunk matmuls on the MXU's bf16 path; the state carry and
+    # score accumulation remain f32.
+    cdt = jnp.bfloat16
+    a = (r_ * jnp.exp(cum_prev)).astype(cdt)
+    bk = (k_ * jnp.exp(-cum)).astype(cdt)
+    v_ = v_.astype(cdt)
+    tot = jnp.exp(cum[..., -1:, :])  # (nc,B,H,1,D) f32
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+    diag_term = (r_ * (u[None, None, :, None, :] * k_)).sum(-1)  # (nc,B,H,T)
+
+    def step(s0, inp):
+        a_c, b_c, v_c, tot_c, diag_c = inp
+        scores = jnp.einsum("bhtd,bhsd->bhts", a_c, b_c,
+                            preferred_element_type=jnp.float32) * tri
+        o = jnp.einsum("bhts,bhsd->bhtd", scores.astype(cdt), v_c,
+                       preferred_element_type=jnp.float32)
+        o = o + diag_c[..., None] * v_c.astype(jnp.float32)
+        o = o + jnp.einsum("bhtd,bhde->bhte", a_c.astype(jnp.float32), s0)
+        s_new = s0 * tot_c[..., 0, :, None] + jnp.einsum(
+            "bhsd,bhse->bhde", (b_c.astype(jnp.float32) * tot_c), v_c.astype(jnp.float32))
+        return s_new, o
+
+    s0 = jnp.zeros((b, h, d, d), r.dtype)
+    _, outs = jax.lax.scan(step, s0, (a, bk, v_, tot, diag_term))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, tt, d)
+    return o[:, :, :t]
+
+
+def _wkv_recurrent_step(state, r, k, v, w, u):
+    """state: (B,H,D,D); r,k,v,w: (B,H,D); u: (H,D) → (o, new_state)."""
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    o = jnp.einsum("bhd,bhde->bhe", r, state + u[None, :, :, None] * kv)
+    new_state = state * w[..., None] + kv
+    return o, new_state
+
+
+# ---------------------------------------------------------------------------
+# mixes
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t-1} (zero/`last` at t=0). x: (B,T,D)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :]
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _decays(p: Params, xw: jax.Array) -> jax.Array:
+    """Data-dependent log-decay: logw = −exp(base + tanh(x A) B) ∈ (−∞, 0)."""
+    dd = jnp.tanh(xw @ p["w_lora_a"].astype(xw.dtype)) @ p["w_lora_b"].astype(xw.dtype)
+    return -jnp.exp(jnp.clip(p["w_base"].astype(xw.dtype) + dd, -8.0, 4.0))
+
+
+def time_mix(p: Params, x: jax.Array, cfg: ModelConfig, *,
+             state: Optional[Params] = None) -> Tuple[jax.Array, Optional[Params]]:
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    shifted = _token_shift(x, state["shift"] if state else None)
+    lerp = lambda mu: x + (shifted - x) * mu.astype(x.dtype)
+    xr, xk, xv, xg, xw = (lerp(p[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+    r = L.linear(p["wr"], xr, cfg).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = L.linear(p["wk"], xk, cfg).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = L.linear(p["wv"], xv, cfg).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(L.linear(p["wg"], xg, cfg))
+    logw = _decays(p, xw).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    u = p["u"].astype(x.dtype)
+
+    if state is None:
+        o = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), logw.astype(jnp.float32),
+                         u.astype(jnp.float32),
+                         chunk=cfg.rwkv_chunk).astype(x.dtype)
+        new_state = None
+    else:
+        w = jnp.exp(logw[:, :, 0].astype(jnp.float32))  # (B,H,D)
+        o, s_new = _wkv_recurrent_step(
+            state["s"], r[:, :, 0].astype(jnp.float32), k[:, :, 0].astype(jnp.float32),
+            v[:, :, 0].astype(jnp.float32), w, u.astype(jnp.float32))
+        o = o[:, :, None].astype(x.dtype)  # (B,H,1,D)
+        new_state = {"s": s_new, "shift": x[:, -1]}
+
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    # per-head group-norm (RWKV6 uses GroupNorm over heads)
+    og = o.reshape(b, t, h, hd).astype(jnp.float32)
+    og = og * jax.lax.rsqrt((og * og).mean(-1, keepdims=True) + 1e-5)
+    o = (og.reshape(b, t, d) * p["out_norm"]).astype(x.dtype) * g
+    return L.linear(p["wo"], o, cfg), new_state
+
+
+def channel_mix(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                state: Optional[Params] = None) -> Tuple[jax.Array, Optional[Params]]:
+    shifted = _token_shift(x, state["shift"] if state else None)
+    xk = x + (shifted - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (shifted - x) * p["mu_r"].astype(x.dtype)
+    k = L.linear(p["wk"], xk, cfg)
+    k = jnp.square(L.act_fn(k, cfg, "relu"))  # relu² (RWKV channel mix)
+    r = jax.nn.sigmoid(L.linear(p["wr"], xr, cfg))
+    out = r * L.linear(p["wv"], k, cfg)
+    new_state = {"shift": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              state: Optional[Params] = None
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    tm_state = state["tm"] if state else None
+    cm_state = state["cm"] if state else None
+    att, tm_new = time_mix(p["time_mix"], L.norm(p["ln1"], x, cfg), cfg, state=tm_state)
+    x = x + att
+    ffn, cm_new = channel_mix(p["channel_mix"], L.norm(p["ln2"], x, cfg), cfg, state=cm_state)
+    x = x + ffn
+    new_state = {"tm": tm_new, "cm": cm_new} if state is not None else None
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+
+def _trunk(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, block_p):
+        y, _ = block_fwd(block_p, constrain_batch(carry), cfg)
+        return y, jnp.float32(0.0)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+        from ..configs.base import remat_group_size
+        g = remat_group_size(cfg)
+    else:
+        g = 1
+    if g <= 1:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return L.norm(params["final_norm"], x, cfg)
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape(cfg.n_layers // g, g, *a.shape[1:]), params["blocks"])
+
+    def group_body(carry, group_p):
+        y, _ = jax.lax.scan(body, carry, group_p)
+        return y, jnp.float32(0.0)
+
+    x, _ = jax.lax.scan(jax.checkpoint(group_body), x, grouped)
+    return L.norm(params["final_norm"], x, cfg)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = _trunk(params, tokens, cfg)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = _trunk(params, batch["tokens"], cfg)
+    ce = chunked_cross_entropy(x, params["embed"].T, batch["labels"],
+                               batch.get("mask"))
+    return ce, {"loss": ce, "ce": ce}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int = 0) -> Params:
+    """Recurrent state: O(1) in sequence length (the long_500k win)."""
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    one = {
+        "tm": {"s": jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+               "shift": jnp.zeros((batch, d), jnp.dtype(cfg.dtype))},
+        "cm": {"shift": jnp.zeros((batch, d), jnp.dtype(cfg.dtype))},
+    }
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+
+def decode_step(params: Params, caches: Params, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, xs):
+        block_p, st = xs
+        y, st_new = block_fwd(block_p, carry, cfg, state=st)
+        return y, st_new
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    x = _trunk(params, tokens, cfg)
+    return x[:, -1:] @ params["embed"].T.astype(x.dtype)

@@ -1,0 +1,311 @@
+"""Mamba-2 (SSD) blocks and the Zamba2 hybrid (arXiv:2411.15242).
+
+Mamba-2's state-space recurrence per head (state S ∈ R^{dh×N}, scalar
+per-head decay):
+
+    S_t = exp(dt_t·a)·S_{t-1} + dt_t·(x_t ⊗ B_t)
+    y_t = S_t·C_t + D·x_t
+
+Training/prefill use the chunked SSD form (scalar cumulative log-decays →
+chunk-local attention-like matmul + carried state); decode is the O(dh·N)
+recurrent step.
+
+Zamba2 = a stack of Mamba2 layers with ONE shared full transformer block
+(attention + MLP) applied every ``hybrid_attn_every`` layers — the shared
+block's weights are reused at every application (Zamba's signature trick:
+7B-quality attention at 1-layer parameter cost).  At ``long_500k`` the shared
+block runs Taylor-softmax linear attention (cfg.attention_impl), keeping the
+whole model sub-quadratic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.losses import chunked_cross_entropy
+from ..distributed.constrain import constrain_batch
+from . import layers as L
+from . import transformer as TF
+
+Params = Dict[str, Any]
+
+_CHUNK = 64
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = _n_heads(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    # projections kept SEPARATE (z / x / BC / dt) so the sharding rule
+    # engine can TP the head-aligned ones and replicate the tiny B/C/dt
+    # heads independently (a fused matrix would mix shard boundaries).
+    return {
+        "ln": L.init_norm(cfg),
+        "in_z": {"w": jax.random.normal(ks[0], (d, d_in), jnp.float32) * s},
+        "in_x": {"w": jax.random.normal(ks[1], (d, d_in), jnp.float32) * s},
+        "in_bc": {"w": jax.random.normal(ks[2], (d, 2 * n), jnp.float32) * s},
+        "in_dt": {"w": jax.random.normal(ks[3], (d, h), jnp.float32) * s},
+        "conv_x": jax.random.normal(ks[4], (cfg.conv_width, d_in), jnp.float32) * 0.2,
+        "conv_bc": jax.random.normal(ks[5], (cfg.conv_width, 2 * n), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((d_in + 2 * n,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 8.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus⁻¹-ish small dt
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": {"w": jax.random.normal(
+            jax.random.fold_in(key, 9), (d_in, d), jnp.float32) / np.sqrt(d_in)},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,T,C); w: (K,C). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        ctx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    new_state = ctx[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y + b.astype(x.dtype), new_state
+
+
+def _ssd_chunked(xh, bmat, cmat, dt, a, chunk: int = _CHUNK):
+    """Chunked SSD. xh: (B,T,H,dh); bmat/cmat: (B,T,N); dt: (B,T,H); a: (H,)<0.
+
+    Per head: logdec_t = dt_t·a; cum = cumsum; scores(t,i) = exp(cum_t−cum_i)
+    ·(C_t·B_i)·dt_i for i≤t; y = scores @ x + exp(cum_t)·(S0 C_t).
+    """
+    b, t, h, dh = xh.shape
+    n = bmat.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    tt = xh.shape[1]
+    nc = tt // chunk
+
+    xh = xh.reshape(b, nc, chunk, h, dh).transpose(1, 0, 3, 2, 4)  # (nc,B,H,T,dh)
+    bm = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)  # (nc,B,T,N)
+    cm = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)  # (nc,B,H,T)
+
+    logdec = dtc * a[None, None, :, None]  # (nc,B,H,T) ≤ 0
+    cum = jnp.cumsum(logdec, axis=-1)
+    cum = jnp.maximum(cum, -30.0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), xh.dtype))  # inclusive
+
+    def step(s0, inp):
+        x_c, b_c, c_c, dt_c, cum_c = inp
+        # G(t,i) = exp(cum_t − cum_i), masked causal-inclusive
+        g = jnp.exp(cum_c[..., :, None] - cum_c[..., None, :]) * tri
+        cb = jnp.einsum("btn,bsn->bts", c_c, b_c)  # (B,T,S)
+        scores = cb[:, None] * g * dt_c[..., None, :]  # (B,H,T,S)
+        y = jnp.einsum("bhts,bhsd->bhtd", scores, x_c)
+        # inter-chunk: y += exp(cum_t)·(C_t · S0ᵀ)  with S0: (B,H,dh,N)
+        y = y + jnp.exp(cum_c)[..., None] * jnp.einsum(
+            "btn,bhdn->bhtd", c_c, s0)
+        # state: S' = exp(cum_T)·S0 + Σ_i exp(cum_T−cum_i)·dt_i·(x_i ⊗ B_i)
+        decay_to_end = jnp.exp(cum_c[..., -1:] - cum_c) * dt_c  # (B,H,T)
+        s_new = (s0 * jnp.exp(cum_c[..., -1])[..., None, None]
+                 + jnp.einsum("bhs,bhsd,bsn->bhdn", decay_to_end, x_c, b_c))
+        return s_new, y
+
+    s0 = jnp.zeros((b, h, dh, n), xh.dtype)
+    _, ys = jax.lax.scan(step, s0, (xh, bm, cm, dtc, cum))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, tt, h, dh)
+    return y[:, :t]
+
+
+def _ssd_step(state, xh, bvec, cvec, dt, a):
+    """state: (B,H,dh,N); xh: (B,H,dh); bvec/cvec: (B,N); dt: (B,H); a: (H,)."""
+    dec = jnp.exp(dt * a[None, :])  # (B,H)
+    upd = jnp.einsum("bhd,bn->bhdn", xh * dt[..., None], bvec)
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhdn,bn->bhd", new_state, cvec)
+    return y, new_state
+
+
+def mamba_block_fwd(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                    state: Optional[Params] = None
+                    ) -> Tuple[jax.Array, Optional[Params]]:
+    b, t, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = _n_heads(cfg)
+    dh = cfg.ssm_head_dim
+
+    u = L.norm(p["ln"], x, cfg)
+    z = L.linear(p["in_z"], u, cfg)
+    xc = L.linear(p["in_x"], u, cfg)
+    bc = L.linear(p["in_bc"], u, cfg)
+    dt = L.linear(p["in_dt"], u, cfg)
+
+    conv_state = state["conv"] if state is not None else None
+    conv_in = jnp.concatenate([xc, bc], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    conv_out, conv_new = _causal_conv(conv_in, conv_w, p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])  # (H,) < 0
+    xh = xc.reshape(b, t, h, dh)
+
+    if state is None:
+        y = _ssd_chunked(xh.astype(jnp.float32), bmat.astype(jnp.float32),
+                         cmat.astype(jnp.float32), dt, a).astype(x.dtype)
+        ssm_new = None
+    else:
+        y, s_new = _ssd_step(state["s"], xh[:, 0].astype(jnp.float32),
+                             bmat[:, 0].astype(jnp.float32),
+                             cmat[:, 0].astype(jnp.float32), dt[:, 0], a)
+        y = y[:, None].astype(x.dtype)
+        ssm_new = s_new
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, t, d_in)
+    # gated RMS out-norm (mamba2 style)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-5)
+    y = (yf * p["out_norm"]).astype(x.dtype) * jax.nn.silu(z)
+    out = L.linear(p["out_proj"], y, cfg)
+    new_state = ({"conv": conv_new, "s": ssm_new} if state is not None else None)
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    k_embed, k_blocks, k_shared = jax.random.split(key, 3)
+    per = cfg.hybrid_attn_every
+    groups = cfg.n_layers // per
+    keys = jax.random.split(k_blocks, cfg.n_layers).reshape(groups, per)
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        # (groups, per, ...) stacked mamba params
+        "mamba": jax.vmap(jax.vmap(lambda k: init_mamba_block(k, cfg)))(keys),
+        # ONE shared transformer block (attention + MLP), reused every group
+        "shared": TF.init_block(k_shared, cfg),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _trunk(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    shared = params["shared"]
+
+    def group_body(carry, group_p):
+        y = constrain_batch(carry)
+
+        def inner(c, bp):
+            c, _ = mamba_block_fwd(bp, constrain_batch(c), cfg)
+            return c, jnp.float32(0.0)
+
+        if cfg.remat:
+            inner = jax.checkpoint(inner)  # hierarchical remat (inner level)
+        y, _ = jax.lax.scan(inner, y, group_p)
+        y, _, _ = TF.block_fwd(shared, y, cfg)  # shared-weight attention block
+        return y, jnp.float32(0.0)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x, params["mamba"])
+    return L.norm(params["final_norm"], x, cfg)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = _trunk(params, tokens, cfg)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = _trunk(params, batch["tokens"], cfg)
+    ce = chunked_cross_entropy(x, params["embed"].T, batch["labels"],
+                               batch.get("mask"))
+    return ce, {"loss": ce, "ce": ce}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """Mamba states (O(1)/layer) + per-application shared-attn cache."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    n, h, dh = cfg.ssm_state, _n_heads(cfg), cfg.ssm_head_dim
+    per = cfg.hybrid_attn_every
+    groups = cfg.n_layers // per
+    dtype = jnp.dtype(cfg.dtype)
+    mamba_one = {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * n), dtype),
+        "s": jnp.zeros((batch, h, dh, n), jnp.float32),
+    }
+    mamba = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None, None], (groups, per, *x.shape)), mamba_one)
+    if cfg.attention_impl == "taylor_linear":
+        attn_one = L.init_taylor_linear_cache(cfg, batch, dtype)
+    else:
+        attn_one = L.init_kv_cache(cfg, batch, max_seq, dtype)
+    attn = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (groups, *x.shape)), attn_one)
+    return {"mamba": mamba, "attn": attn}
+
+
+def decode_step(params: Params, caches: Params, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    shared = params["shared"]
+
+    def group_body(carry, xs):
+        group_p, m_cache, a_cache = xs
+        y = carry
+
+        def inner(c, inp):
+            bp, st = inp
+            c, st_new = mamba_block_fwd(bp, c, cfg, state=st)
+            return c, st_new
+
+        y, m_new = jax.lax.scan(inner, y, (group_p, m_cache))
+        if cfg.attention_impl == "taylor_linear":
+            h = L.norm(shared["ln1"], y, cfg)
+            att, a_new = L.taylor_linear_decode(shared["attn"], h, cfg,
+                                                cache=a_cache, pos=pos)
+            y = y + att
+            hh = L.norm(shared["ln2"], y, cfg)
+            y = y + L.mlp(shared["mlp"], hh, cfg)
+        else:
+            y, a_new, _ = TF.block_fwd(shared, y, cfg, pos=pos, cache=a_cache)
+        return y, (m_new, a_new)
+
+    x, (m_caches, a_caches) = jax.lax.scan(
+        group_body, x, (params["mamba"], caches["mamba"], caches["attn"]))
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, {"mamba": m_caches, "attn": a_caches}
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    x = _trunk(params, tokens, cfg)
+    return x[:, -1:] @ params["embed"].T.astype(x.dtype)

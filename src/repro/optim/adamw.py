@@ -1,0 +1,166 @@
+"""AdamW with optional fixed-point (int8) moment storage.
+
+The paper's Table-2 encode/decode applied beyond the paper (DESIGN.md §2):
+Adam's m/v moments are stored as blockwise-quantized int8 codes — 8× less
+optimizer-state HBM than f32 — and decoded/re-encoded around each update.
+This is what makes the deepseek-v2-236b ``train_4k`` cell fit a v5e pod
+(EXPERIMENTS.md §Roofline).
+
+Layout: codes keep the PARAM'S OWN SHAPE (int8) with one f32 absmax scale per
+last-axis row — so a moment leaf accepts the same PartitionSpec as its
+parameter and the whole optimizer state shards under FSDP/TP unchanged.
+(Per-row scales, not per-tensor: Adam moments span orders of magnitude
+within a tensor.)  Leaves with <2 dims stay f32 (negligible bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AdamWConfig", "init", "apply_updates", "adamw_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_bits: int = 32  # 8 → fixed-point moments (paper C1 beyond-paper)
+
+
+# ---------------------------------------------------------------------------
+# blockwise fixed-point moment codec
+# ---------------------------------------------------------------------------
+
+
+def _q_encode(x: jax.Array) -> Dict[str, jax.Array]:
+    """Shape-preserving int8 codes + per-row (last axis) f32 scales."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale.astype(jnp.float32)}
+
+
+def _q_decode(q: Dict[str, jax.Array], shape) -> jax.Array:
+    return q["codes"].astype(jnp.float32) * q["scale"]
+
+
+def _quantizable(leaf) -> bool:
+    return leaf.ndim >= 2
+
+
+def _moment_init(leaf, bits: int):
+    if bits == 8 and _quantizable(leaf):
+        return _q_encode(jnp.zeros(leaf.shape, jnp.float32))
+    return jnp.zeros(leaf.shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def init(params, cfg: AdamWConfig):
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"codes", "scale"}
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(lambda p: _moment_init(p, cfg.state_bits), params),
+        "v": jax.tree_util.tree_map(lambda p: _moment_init(p, cfg.state_bits), params),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr: Optional[jax.Array] = None):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr if lr is None else lr
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    bits = cfg.state_bits
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_q, v_q):
+        g = g.astype(jnp.float32) * clip
+        q = bits == 8 and _quantizable(p)
+        m = _q_decode(m_q, p.shape) if q else m_q
+        v = _q_decode(v_q, p.shape) if q else v_q
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        # int8 moments: a channel whose v rounds to code 0 while its m does
+        # not would take an O(m/ε) step — bound the denominator by the v
+        # codes' per-row resolution (the trust region can't be finer than
+        # the quantization grid).  Without this the int8 path diverges.
+        denom = jnp.sqrt(vhat) + cfg.eps
+        if q:
+            denom = denom + jnp.sqrt(v_q["scale"] * 0.5 / bc2)
+        delta = mhat / denom + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        new_m = _q_encode(m) if q else m
+        new_v = _q_encode(v) if q else v
+        return new_p, new_m, new_v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+def adamw_step(loss_fn, params, state, batch, cfg: AdamWConfig,
+               lr: Optional[jax.Array] = None, accum_steps: int = 1):
+    """value_and_grad + AdamW update in one jit-able function (what the
+    dry-run lowers for ``train_*`` cells: full training semantics).
+
+    ``accum_steps > 1`` scans over microbatches accumulating f32 gradients —
+    live activations shrink ÷k at the cost of one param-sized f32 buffer
+    (how the 236B config fits a v5e pod).
+    """
+    if accum_steps <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        new_params, new_state, opt_metrics = apply_updates(
+            params, grads, state, cfg, lr)
+        return new_params, new_state, {**metrics, **opt_metrics, "loss": loss}
+
+    micro = jax.tree_util.tree_map(
+        lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                            *x.shape[1:]), batch)
+
+    def mb(carry, mbatch):
+        g_acc, loss_acc = carry
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mbatch)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+        return (g_acc, loss_acc + loss), None
+
+    g0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss_sum), _ = jax.lax.scan(mb, (g0, jnp.float32(0.0)), micro)
+    grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+    loss = loss_sum / accum_steps
+    new_params, new_state, opt_metrics = apply_updates(params, grads, state, cfg, lr)
+    return new_params, new_state, {**opt_metrics, "loss": loss}

@@ -1,0 +1,295 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture is instantiated at a REDUCED config of the same
+family (same structural features: GQA ratio, MoE top-k, MLA ranks, hybrid
+period, enc-dec split) and runs a real forward/train step on CPU asserting
+output shapes + finite values.  Decode paths run a few steps against prefill
+logits where the family supports exact equivalence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.models import build_model
+
+BATCH, SEQ = 2, 16
+
+
+def _batch_for(model, b=BATCH, s=SEQ, seed=0):
+    cfg = model.cfg
+    rng = np.random.default_rng(seed)
+    s_text = s - (cfg.n_patches if cfg.family == "vlm" else 0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s_text))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s_text))),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_patches, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_NAMES)
+def arch(request):
+    return request.param
+
+
+class TestSmoke:
+    def test_forward_and_loss(self, arch):
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = _batch_for(model)
+        loss, metrics = jax.jit(model.loss_fn)(params, batch)
+        assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+        assert float(loss) > 0
+
+    def test_train_step_reduces_loss(self, arch):
+        """A couple of SGD steps on one batch must reduce the loss — checks
+        gradients flow through every family's machinery (scan, MoE routing,
+        chunked recurrences, cross-attention)."""
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        batch = _batch_for(model)
+
+        @jax.jit
+        def step(p):
+            (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(p, batch)
+            new_p = jax.tree_util.tree_map(lambda w, g: w - 0.5 * g, p, grads)
+            return new_p, loss
+
+        losses = []
+        for _ in range(4):
+            params, loss = step(params)
+            losses.append(float(loss))
+        assert all(np.isfinite(l) for l in losses), f"{arch}: NaN in training"
+        assert losses[-1] < losses[0], f"{arch}: loss did not decrease {losses}"
+
+    def test_gradients_cover_all_params(self, arch):
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(2))
+        batch = _batch_for(model)
+        (_, _), grads = jax.jit(jax.value_and_grad(model.loss_fn, has_aux=True))(
+            params, batch)
+        flat = jax.tree_util.tree_leaves_with_path(grads)
+        zero_frac = [(jax.tree_util.keystr(p), float(jnp.mean(g == 0)))
+                     for p, g in flat]
+        # every leaf receives some gradient signal (MoE: routed experts may
+        # be partially untouched at tiny batch; allow those)
+        dead = [n for n, z in zero_frac if z == 1.0
+                and "router" not in n and "w_gate" not in n
+                and "w_up" not in n and "w_down" not in n]
+        assert not dead, f"{arch}: dead params {dead}"
+
+    def test_decode_matches_prefill(self, arch):
+        """Token-by-token decode logits == full-sequence forward logits.
+
+        Exact-equivalence families: dense/moe/vlm (KV cache) and encdec.
+        Recurrent families (rwkv6/hybrid) use chunked-vs-recurrent forms —
+        checked with a looser tolerance.
+        """
+        cfg = reduced(get_config(arch)).replace(remat=False)
+        if cfg.n_experts:
+            # capacity drops differ between prefill- and decode-sized groups;
+            # equivalence is checked in the dropless regime
+            cfg = cfg.replace(moe_capacity_factor=float(cfg.n_experts))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(3))
+        b, s = 2, 8
+        batch = _batch_for(model, b=b, s=s, seed=7)
+        tokens = batch["tokens"]
+
+        if cfg.family == "vlm":
+            pytest.skip("decode covered by dense path; patch prefix cache "
+                        "handled in serving integration test")
+        if cfg.family == "encdec":
+            from repro.models import encdec as E
+            logits_full, _ = E.forward(params, tokens, cfg, frames=batch["frames"])
+            caches = model.init_caches(b, s)
+            caches = E.precompute_cross(params, batch["frames"], cfg, caches)
+        else:
+            fwd = {"dense": None, "moe": None, "vlm": None}
+            if cfg.family in fwd:
+                from repro.models import transformer as T
+                logits_full, _ = T.forward(params, tokens, cfg)
+            elif cfg.family == "rwkv6":
+                from repro.models import rwkv6 as R
+                logits_full, _ = R.forward(params, tokens, cfg)
+            else:
+                from repro.models import ssm as S
+                logits_full, _ = S.forward(params, tokens, cfg)
+            caches = model.init_caches(b, s)
+
+        decode = jax.jit(model.decode_step)
+        outs = []
+        for t in range(tokens.shape[1]):
+            pos = jnp.full((b,), t, jnp.int32)
+            logits, caches = decode(params, caches, tokens[:, t:t + 1], pos)
+            outs.append(logits[:, 0])
+        dec = jnp.stack(outs, axis=1).astype(jnp.float32)
+        full = logits_full.astype(jnp.float32)
+        tol = 0.08 if cfg.family in ("rwkv6", "hybrid") else 0.03
+        err = jnp.abs(dec - full).max() / (jnp.abs(full).max() + 1e-6)
+        assert float(err) < tol, f"{arch}: decode≠prefill rel err {float(err):.4f}"
+
+    def test_full_config_param_count(self, arch):
+        """Full (non-reduced) configs match their published parameter scale."""
+        from repro.configs.base import param_count
+        cfg = get_config(arch)
+        n = param_count(cfg)
+        expected = {
+            "gemma-7b": (7.7e9, 9.5e9),  # 8.5B incl. 256k embed
+            "qwen2-1.5b": (1.2e9, 2.0e9),
+            "chatglm3-6b": (5.5e9, 7.5e9),
+            "granite-20b": (18e9, 23e9),
+            "rwkv6-3b": (2.5e9, 3.6e9),
+            "granite-moe-3b-a800m": (2.5e9, 3.9e9),
+            "deepseek-v2-236b": (210e9, 250e9),
+            # backbone-only count (real zamba2 adds per-application LoRAs on
+            # the shared block, which we omit — DESIGN.md §5)
+            "zamba2-2.7b": (2.0e9, 3.0e9),
+            "pixtral-12b": (11e9, 14e9),
+            "whisper-base": (0.05e9, 0.12e9),
+        }[arch]
+        assert expected[0] < n < expected[1], f"{arch}: {n/1e9:.2f}B params"
+
+
+class TestNumericModes:
+    """The paper's numerics applied to LM blocks (C1/C2 at framework scale)."""
+
+    @pytest.mark.parametrize("mode", ["w8a8_sim", "w8a8_int"])
+    def test_quant_modes_run_and_approximate_fp(self, mode):
+        cfg = reduced(get_config("qwen2-1.5b")).replace(quant_mode="fp", remat=False)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = _batch_for(model)
+        logits_fp = jax.jit(lambda p, b: build_model(cfg).prefill(p, tokens=b["tokens"]))(
+            params, batch)
+        cfg_q = cfg.replace(quant_mode=mode)
+        model_q = build_model(cfg_q)
+        logits_q = jax.jit(lambda p, b: model_q.prefill(p, tokens=b["tokens"]))(
+            params, batch)
+        a = np.asarray(logits_fp, np.float32)
+        bq = np.asarray(logits_q, np.float32)
+        nmse = ((a - bq) ** 2).mean() / (a ** 2).mean()
+        assert np.isfinite(bq).all()
+        assert nmse < 0.15, f"{mode}: NMSE {nmse}"  # the paper's Fig-3 budget
+
+    @pytest.mark.parametrize("order", [1, 3, 5])
+    def test_taylor_activation_modes(self, order):
+        cfg = reduced(get_config("gemma-7b")).replace(taylor_order=order, remat=False)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = _batch_for(model)
+        loss, _ = jax.jit(model.loss_fn)(params, batch)
+        assert np.isfinite(float(loss))
+
+    def test_taylor_linear_attention_close_to_full_for_small_logits(self):
+        from repro.models import layers as L
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(2, 32, 4, 16)), jnp.float32) * 0.3
+        k = jnp.asarray(rng.normal(size=(2, 32, 4, 16)), jnp.float32) * 0.3
+        v = jnp.asarray(rng.normal(size=(2, 32, 4, 16)), jnp.float32)
+        cfg = reduced(get_config("zamba2-2.7b"))
+        full = L._sdpa_causal(q, k, v, cfg)
+        lin = L.taylor_linear_attention(q, k, v, chunk=8)
+        # Taylor-softmax ≈ softmax for small logits: directionally close
+        cos = np.sum(np.asarray(full) * np.asarray(lin)) / (
+            np.linalg.norm(full) * np.linalg.norm(lin))
+        assert cos > 0.98
+
+    def test_chunked_attention_matches_exact(self):
+        """Flash-style chunked causal attention == materialized attention."""
+        from repro.models import layers as L
+        rng = np.random.default_rng(1)
+        cfg = reduced(get_config("gemma-7b"))
+        q = jnp.asarray(rng.normal(size=(2, 640, 4, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 640, 4, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 640, 4, 32)), jnp.float32)
+        exact = L._sdpa_causal(q[:, :512], k[:, :512], v[:, :512], cfg)
+        chunked = L._sdpa_causal_chunked(q[:, :512], k[:, :512], v[:, :512],
+                                         cfg, chunk=128)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(exact),
+                                   atol=2e-5)
+        # padded (640 % 128 ≠ 0 path) against chunk=640 exact
+        full = L._sdpa_causal_chunked(q, k, v, cfg, chunk=640)
+        part = L._sdpa_causal_chunked(q, k, v, cfg, chunk=96)
+        np.testing.assert_allclose(np.asarray(part), np.asarray(full), atol=2e-5)
+
+    def test_flash_attention_gradients_match_exact(self):
+        """Custom-VJP flash backward == autodiff through exact attention."""
+        from repro.models.flash import flash_attention
+        rng = np.random.default_rng(3)
+        b, h, s, d = 2, 3, 256, 16
+        q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32) * 0.4
+        k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32) * 0.4
+        v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+
+        def exact(q, k, v):
+            logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+            mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+            logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+            p = jax.nn.softmax(logits, -1)
+            return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+        def loss_flash(q, k, v):
+            return (flash_attention(q, k, v, True, 64) ** 2).sum()
+
+        def loss_exact(q, k, v):
+            return (exact(q, k, v) ** 2).sum()
+
+        out_f = flash_attention(q, k, v, True, 64)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(exact(q, k, v)),
+                                   atol=1e-5)
+        gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+        ge = jax.grad(loss_exact, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gf, ge):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=3e-4, rtol=1e-3)
+
+    def test_flash_attention_noncausal_and_padded(self):
+        from repro.models.flash import flash_attention
+        rng = np.random.default_rng(4)
+        b, h, s, d = 1, 2, 200, 8  # 200 % 64 ≠ 0 → padding path
+        q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32) * 0.3
+        k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32) * 0.3
+        v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+        out = flash_attention(q, k, v, False, 64)
+        p = jax.nn.softmax(jnp.einsum("bhqd,bhkd->bhqk", q, k), -1)
+        want = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+    def test_chunked_cross_entropy_matches_exact(self):
+        from repro.core import losses
+        rng = np.random.default_rng(2)
+        h = jnp.asarray(rng.normal(size=(2, 40, 16)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(16, 77)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 77, (2, 40)))
+        exact = losses.cross_entropy_logits(h @ w, labels)
+        chunked = losses.chunked_cross_entropy(h, w, labels, chunk=16)
+        assert abs(float(exact) - float(chunked)) < 1e-4
+        # gradients flow
+        g = jax.grad(lambda hh: losses.chunked_cross_entropy(hh, w, labels,
+                                                             chunk=16))(h)
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_kv_cache_int8(self):
+        cfg = reduced(get_config("chatglm3-6b")).replace(kv_cache_bits=8, remat=False)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        b, s = 2, 8
+        caches = model.init_caches(b, s)
+        leaf = jax.tree_util.tree_leaves(caches)[0]
+        assert leaf.dtype in (jnp.int8, jnp.float32)  # codes + scales
+        tokens = jnp.zeros((b, 1), jnp.int32)
+        logits, caches = jax.jit(model.decode_step)(
+            params, caches, tokens, jnp.zeros((b,), jnp.int32))
+        assert np.isfinite(np.asarray(logits, np.float32)).all()

@@ -1,0 +1,123 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle across a
+shape/dtype sweep, plus numerical properties against float references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantize as qz
+from repro.core import taylor as ty
+from repro.kernels import ops, ref
+from repro.kernels.fixedpoint_matmul import fixedpoint_matmul_pallas
+from repro.kernels.taylor_activation import taylor_activation_pallas
+
+
+def _rand_qdata(rng, m, k, n):
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    x_codes, x_scale = qz.absmax_quantize(jnp.asarray(x), axis=-1)
+    w_codes, w_scale = qz.absmax_quantize(jnp.asarray(w), axis=0)
+    return x, w, x_codes, w_codes, x_scale, w_scale
+
+
+class TestFixedpointMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [
+        (256, 512, 256),      # exactly one block
+        (512, 1024, 512),     # multi-block every axis
+        (256, 1536, 256),     # deep K loop
+        (768, 512, 1024),     # rectangular
+    ])
+    def test_matches_oracle_blocked(self, m, k, n):
+        rng = np.random.default_rng(m + k + n)
+        _, _, xc, wc, xs, ws = _rand_qdata(rng, m, k, n)
+        got = fixedpoint_matmul_pallas(xc, wc, xs, ws, interpret=True)
+        want = ref.fixedpoint_matmul_ref(xc, wc, xs, ws)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("m,k,n", [(100, 300, 50), (1, 512, 7), (257, 513, 129)])
+    def test_wrapper_pads_arbitrary_shapes(self, m, k, n):
+        rng = np.random.default_rng(m * 7 + n)
+        _, _, xc, wc, xs, ws = _rand_qdata(rng, m, k, n)
+        got = ops.fixedpoint_matmul(xc, wc, xs, ws, backend="pallas")
+        want = ref.fixedpoint_matmul_ref(xc, wc, xs, ws)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_int_accumulation_exact(self):
+        """int8·int8 products accumulate exactly in int32 — no float error."""
+        rng = np.random.default_rng(0)
+        xc = jnp.asarray(rng.integers(-128, 128, (256, 512)), jnp.int8)
+        wc = jnp.asarray(rng.integers(-128, 128, (512, 256)), jnp.int8)
+        ones_r = jnp.ones((256, 1), jnp.float32)
+        ones_c = jnp.ones((1, 256), jnp.float32)
+        got = fixedpoint_matmul_pallas(xc, wc, ones_r, ones_c, interpret=True)
+        want = np.asarray(xc, np.int64) @ np.asarray(wc, np.int64)  # exact ref
+        np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+    def test_quantized_gemm_approximates_float(self):
+        rng = np.random.default_rng(3)
+        x, w, xc, wc, xs, ws = _rand_qdata(rng, 256, 512, 256)
+        got = np.asarray(fixedpoint_matmul_pallas(xc, wc, xs, ws, interpret=True))
+        nmse = ((got - x @ w) ** 2).mean() / ((x @ w) ** 2).mean()
+        assert nmse < 1e-3  # int8 per-channel GEMM error budget
+
+    @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_block_multiples_property(self, a, b, c):
+        m, k, n = 256 * a, 512 * b, 256 * c
+        rng = np.random.default_rng(a * 100 + b * 10 + c)
+        _, _, xc, wc, xs, ws = _rand_qdata(rng, m, k, n)
+        got = fixedpoint_matmul_pallas(xc, wc, xs, ws, interpret=True)
+        want = ref.fixedpoint_matmul_ref(xc, wc, xs, ws)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+class TestTaylorActivationKernel:
+    @pytest.mark.parametrize("order", [1, 3, 5])
+    @pytest.mark.parametrize("shape", [(256, 512), (512, 1024)])
+    def test_matches_oracle(self, order, shape):
+        rng = np.random.default_rng(order)
+        frac = 12
+        coeffs = ty.scaled_constants("sigmoid", order, frac)
+        x = jnp.asarray(rng.integers(-3 * 2**frac, 3 * 2**frac, shape), jnp.int32)
+        got = taylor_activation_pallas(x, tuple(int(c) for c in coeffs), frac,
+                                       interpret=True)
+        clamp = (1 << 14) - 1
+        want = ref.taylor_activation_ref(jnp.clip(x, -clamp, clamp),
+                                         np.asarray(coeffs), frac)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("nelem", [17, 1000, 256 * 512 + 3])
+    def test_wrapper_arbitrary_shapes(self, nelem):
+        rng = np.random.default_rng(nelem)
+        frac = 10
+        coeffs = ty.scaled_constants("sigmoid", 3, frac)
+        x = jnp.asarray(rng.integers(-2**13, 2**13, (nelem,)), jnp.int32)
+        got = ops.taylor_activation(x, coeffs, frac, backend="pallas")
+        want = ops.taylor_activation(x, coeffs, frac, backend="ref")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_float_sigmoid(self):
+        """End-to-end: integer kernel ≈ float sigmoid (paper §4 accuracy)."""
+        frac = 12
+        coeffs = ty.scaled_constants("sigmoid", 5, frac)
+        xs = np.linspace(-1.5, 1.5, 1024).astype(np.float32)
+        xq = jnp.asarray(np.round(xs * 2**frac), jnp.int32).reshape(2, 512)
+        got = np.asarray(ops.taylor_activation(xq, coeffs, frac,
+                                               backend="pallas")) / 2.0**frac
+        want = 1 / (1 + np.exp(-xs.reshape(2, 512)))
+        nmse = ((got - want) ** 2).mean() / (want ** 2).mean()
+        assert nmse < 1e-4
+
+    def test_dtype_is_int32_throughout(self):
+        frac = 8
+        coeffs = ty.scaled_constants("sigmoid", 3, frac)
+        x = jnp.zeros((256, 512), jnp.int32)
+        out = taylor_activation_pallas(x, tuple(int(c) for c in coeffs), frac,
+                                       interpret=True)
+        assert out.dtype == jnp.int32
+        assert int(out[0, 0]) == int(coeffs[0])  # σ(0) = 0.5 on the grid
