@@ -100,6 +100,15 @@ class ControlPlane:
     ``frac_bits`` is shared by features and weights — the paper: "To reduce
     arbitration, we assume input features and weights follow the same
     fractional and integer bits."
+
+    Installs are **double-buffered**: a writer mutates a *copy* of the live
+    host tables and atomically swaps the front pointer (bumping the
+    generation counter).  ``tables()`` returns a device snapshot cached per
+    generation, so (a) a batch in flight keeps the old device buffers — an
+    ``install()`` racing it can never tear a table mid-inference — and (b)
+    steady-state serving re-uploads nothing: the same device buffers are
+    re-fed to the jit'd data plane until a writer publishes a new
+    generation.  Shapes never change, so swaps cause zero retraces.
     """
 
     def __init__(self, *, max_models: int = 16, max_layers: int = 4,
@@ -118,7 +127,20 @@ class ControlPlane:
         self._out_dim = np.zeros((max_models,), np.int32)
         self._id_map = np.full((65536,), -1, np.int32)
         self._slots: Dict[int, int] = {}
+        self._free_slots: List[int] = []  # recycled by remove()
+        self._next_slot = 0
         self._version = 0
+        self._snapshot: Optional[Tuple[int, "ModelTables"]] = None
+
+    def _begin_write(self) -> None:
+        """Copy-on-write: detach the back buffers from any published
+        snapshot before mutating (caller holds the lock)."""
+        self._w = self._w.copy()
+        self._b = self._b.copy()
+        self._act = self._act.copy()
+        self._layer_on = self._layer_on.copy()
+        self._out_dim = self._out_dim.copy()
+        self._id_map = self._id_map.copy()
 
     # -- control-plane writes -------------------------------------------
 
@@ -136,29 +158,43 @@ class ControlPlane:
             raise ValueError(f"model has {len(layers)} layers > max {self.max_layers}")
         acts = list(activations) + [final_activation]
         acts = acts[: len(layers)]
+        # Validate + quantize everything BEFORE touching any table state, so
+        # a bad model can never leave a half-installed network behind (the
+        # generation swap must be all-or-nothing).
+        quantized = []
+        for l, (w, bias) in enumerate(layers):
+            w = np.asarray(w, np.float32)
+            bias = np.asarray(bias, np.float32)
+            din, dout = w.shape
+            if din > self.max_width or dout > self.max_width:
+                raise ValueError(f"layer {l} ({din}x{dout}) exceeds max width")
+            opcode = ACTIVATIONS[acts[l]]  # KeyError before any mutation
+            wq = np.asarray(encode(w, self.frac_bits, total_bits=self.fmt.total_bits))
+            # bias pre-shifted onto the accumulator grid (2*frac bits)
+            bq = np.asarray(encode(bias, 2 * self.frac_bits, total_bits=32))
+            quantized.append((din, dout, wq, bq, opcode))
         with self._lock:
             slot = self._slots.get(model_id)
+            if slot is None and not self._free_slots \
+                    and self._next_slot >= self.max_models:
+                raise ValueError("control plane table full")
+            self._begin_write()
             if slot is None:
-                slot = len(self._slots)
-                if slot >= self.max_models:
-                    raise ValueError("control plane table full")
+                # prefer recycled slots: a fresh index for every install
+                # would collide live models once remove() had been used
+                slot = (self._free_slots.pop() if self._free_slots
+                        else self._next_slot)
+                if slot == self._next_slot:
+                    self._next_slot += 1
                 self._slots[model_id] = slot
                 self._id_map[model_id] = slot
             self._w[slot] = 0
             self._b[slot] = 0
             self._layer_on[slot] = 0
-            for l, (w, bias) in enumerate(layers):
-                w = np.asarray(w, np.float32)
-                bias = np.asarray(bias, np.float32)
-                din, dout = w.shape
-                if din > self.max_width or dout > self.max_width:
-                    raise ValueError(f"layer {l} ({din}x{dout}) exceeds max width")
-                wq = np.asarray(encode(w, self.frac_bits, total_bits=self.fmt.total_bits))
-                # bias pre-shifted onto the accumulator grid (2*frac bits)
-                bq = np.asarray(encode(bias, 2 * self.frac_bits, total_bits=32))
+            for l, (din, dout, wq, bq, opcode) in enumerate(quantized):
                 self._w[slot, l, :din, :dout] = wq
                 self._b[slot, l, :dout] = bq
-                self._act[slot, l] = ACTIVATIONS[acts[l]]
+                self._act[slot, l] = opcode
                 self._layer_on[slot, l] = 1
             self._out_dim[slot] = layers[-1][0].shape[1]
             self._version += 1
@@ -169,27 +205,49 @@ class ControlPlane:
             slot = self._slots.pop(model_id, None)
             if slot is None:
                 return
+            self._begin_write()
             self._id_map[model_id] = -1
             self._layer_on[slot] = 0
+            self._free_slots.append(slot)
             self._version += 1
 
     # -- data-plane reads -------------------------------------------------
 
     def tables(self) -> ModelTables:
-        """Snapshot the tables as device arrays (fresh buffers each call —
-        the data plane never captures them as constants)."""
+        """Device snapshot of the current table generation.
+
+        The snapshot is cached until the next write bumps the generation, so
+        repeated batches feed the *same* device buffers to the jit'd data
+        plane (no per-batch host→device upload) while an in-flight batch
+        holding an older generation keeps its buffers alive — the
+        double-buffer read side.  The arrays are traced arguments of the
+        data plane, never captured constants, so a generation swap is just
+        different buffers: zero retraces.
+        """
         with self._lock:
-            return ModelTables(
-                w=jnp.asarray(self._w),
-                b=jnp.asarray(self._b),
-                act=jnp.asarray(self._act),
-                layer_on=jnp.asarray(self._layer_on),
-                out_dim=jnp.asarray(self._out_dim),
-                id_map=jnp.asarray(self._id_map),
-            )
+            if self._snapshot is None or self._snapshot[0] != self._version:
+                self._snapshot = (self._version, ModelTables(
+                    w=jnp.asarray(self._w),
+                    b=jnp.asarray(self._b),
+                    act=jnp.asarray(self._act),
+                    layer_on=jnp.asarray(self._layer_on),
+                    out_dim=jnp.asarray(self._out_dim),
+                    id_map=jnp.asarray(self._id_map),
+                ))
+            return self._snapshot[1]
+
+    def invalidate_snapshot(self) -> None:
+        """Drop the cached device snapshot so the next ``tables()`` call
+        re-uploads from host buffers.  Not needed in normal operation (the
+        generation counter invalidates automatically); exists for benchmarks
+        emulating the pre-double-buffer per-batch-upload behavior and for
+        tests that want to force a fresh transfer."""
+        with self._lock:
+            self._snapshot = None
 
     @property
     def version(self) -> int:
+        """Table generation — bumped by every install/remove swap."""
         return self._version
 
     def table_bytes(self) -> int:

@@ -1,126 +1,137 @@
-"""The data-plane inference engine (paper Fig 2, §2 "FPGA inference").
+"""The batched multi-model data-plane engine (paper Fig 2, §2 "FPGA inference").
 
 One jit-compiled program is the whole pipeline:
 
     parse header → Model-ID table lookup → fixed-point MLP forward with
     Taylor-approximated activations → deparse (outputs replace features)
 
+and it serves a **mixed-model batch**: every packet in the batch may target a
+different installed model (the paper's "one synthesized data plane, many
+control-plane models" property, exercised at batch scale).  Two dispatch
+strategies implement the Model-ID path:
+
+  * ``dispatch="fused"`` (default) — the stacked control-plane tables are
+    handed whole to the fused MLP kernel (``repro.kernels.fixedpoint_mlp``);
+    the per-packet model select is folded into one masked GEMM per layer over
+    the fused (model, feature) axis, so arbitrary interleavings of installed
+    models cost one XLA program with **no per-packet weight gather** and no
+    per-layer host round trips.  On TPU this is a single Pallas kernel whose
+    layer loop keeps the accumulator tile in VMEM; on CPU the bit-identical
+    jnp oracle runs (still one dense dot per layer).
+  * ``dispatch="gather"`` — the seed path, kept as a cross-check and
+    baseline: gather this packet's ``(L, W, W)`` weights per packet, then run
+    a per-layer einsum + activation.  Same integer semantics, ``L·W²`` table
+    bytes of traffic per packet.
+
 All arithmetic inside the program is integer (int32 accumulate, rounding
 arithmetic shifts) — bit-exact with what the P4/FPGA pipeline would compute —
 and every parameter is a traced argument fetched from the control plane, so
-weight updates never recompile (asserted by ``trace_count``).
+weight updates never recompile (asserted by ``trace_count``).  The control
+plane double-buffers its tables: ``run()`` snapshots the current generation,
+so an ``install()`` racing an in-flight batch is safe (the batch keeps the
+old buffers; the next batch picks up the new generation).
+
+``run(pkts, block=False)`` dispatches without waiting for the device —
+callers (``launch.serve.PacketServer``) overlap host-side packet encode with
+device compute and reconcile timing at drain.
 """
 
 from __future__ import annotations
 
 import time
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .control_plane import (ACT_HARD_SIGMOID, ACT_LEAKY_RELU, ACT_NONE,
-                            ACT_RELU, ACT_SIGMOID, ControlPlane, ModelTables)
-from .fixedpoint import _rounding_shift_right
+from ..kernels.ops import fused_mlp
+from ..kernels.ref import fused_mlp_gather_ref
+from .control_plane import ControlPlane, ModelTables
 from .packet import ParsedBatch, emit_results, parse_packets
 from .taylor import scaled_constants
 
 __all__ = ["DataPlaneEngine"]
 
 
-def _apply_activation(x_q: jax.Array, opcode: jax.Array, frac: int,
-                      taylor_order: int, leaky_alpha_q: int) -> jax.Array:
-    """Integer activation dispatch. ``x_q`` carries ``frac`` fractional bits.
-
-    Every variant is computed (they are a handful of VPU ops on a small
-    tile) and the opcode selects — the dataflow analogue of a P4 action
-    table, and cheaper than a per-packet branch on TPU.
-    """
-    relu = jnp.maximum(x_q, 0)
-    # leaky: alpha * x for x<0, alpha in Q(frac): (x*alpha)>>frac
-    leaky = jnp.where(x_q > 0, x_q,
-                      _rounding_shift_right(x_q * leaky_alpha_q, frac))
-    # sigmoid via integer Horner on the paper's scaled constants, evaluated
-    # at the feature scale then brought back onto the feature grid.
-    coeffs = scaled_constants("sigmoid", taylor_order, frac)
-    sig = jnp.full(x_q.shape, int(coeffs[-1]), jnp.int32)
-    xc = jnp.clip(x_q, -(1 << 14), (1 << 14))  # |x|<2^14 keeps int32 products safe
-    for c in coeffs[-2::-1]:
-        sig = _rounding_shift_right(sig * xc, frac) + jnp.int32(int(c))
-    # hard sigmoid: clip(0.5 + x/4) on the integer grid
-    half = jnp.int32(1 << (frac - 1))
-    one = jnp.int32(1 << frac)
-    hsig = jnp.clip(half + _rounding_shift_right(x_q, 2), 0, one)
-
-    out = x_q
-    out = jnp.where(opcode == ACT_RELU, relu, out)
-    out = jnp.where(opcode == ACT_SIGMOID, sig, out)
-    out = jnp.where(opcode == ACT_LEAKY_RELU, leaky, out)
-    out = jnp.where(opcode == ACT_HARD_SIGMOID, hsig, out)
-    return out
-
-
 class DataPlaneEngine:
-    """Batched packet-inference pipeline over a :class:`ControlPlane`.
+    """Batched mixed-model packet-inference pipeline over a :class:`ControlPlane`.
 
     Parameters
     ----------
     control_plane:
-        Table owner.  The engine reads ``control_plane.tables()`` each batch.
+        Table owner.  The engine snapshots ``control_plane.tables()`` (the
+        current double-buffer generation) each batch.
     max_features:
         Static parser bound (P4 header-stack depth).
     taylor_order:
         Sigmoid polynomial order (paper Table 3: 1, 3 or 5).
+    dispatch:
+        ``"fused"`` (stacked-table masked-GEMM kernel, default) or
+        ``"gather"`` (per-packet weight gather — the seed baseline).
+    backend:
+        Kernel backend for the fused path: ``"auto"`` (Pallas on TPU, jnp
+        oracle on CPU), ``"pallas"`` (force kernel, interpreted off-TPU) or
+        ``"ref"``.
     """
 
     def __init__(self, control_plane: ControlPlane, *, max_features: int = 16,
                  taylor_order: int = 3, leaky_alpha: float = 0.01,
+                 dispatch: str = "fused", backend: str = "auto",
                  interpret_only: bool = False):
+        if dispatch not in ("fused", "gather"):
+            raise ValueError(f"unknown dispatch strategy: {dispatch!r}")
+        if backend not in ("auto", "pallas", "ref"):
+            raise ValueError(f"unknown kernel backend: {backend!r}")
         self.cp = control_plane
         self.max_features = max_features
         self.taylor_order = taylor_order
+        self.dispatch = dispatch
+        self.backend = backend
         self.frac = control_plane.frac_bits
         self._leaky_alpha_q = int(round(leaky_alpha * (1 << self.frac)))
+        self._sig_coeffs = tuple(
+            int(c) for c in scaled_constants("sigmoid", taylor_order, self.frac))
         self.trace_count = 0
         self.stats = {"packets": 0, "bytes_in": 0, "bytes_out": 0, "seconds": 0.0}
         self._process = jax.jit(self._process_impl)
 
     # -- the data plane ----------------------------------------------------
 
+    def _forward_gathered(self, x: jax.Array, slot: jax.Array,
+                          tables: ModelTables) -> jax.Array:
+        """Seed dispatch: per-packet weight gather + per-layer matvec.
+
+        Delegates to the shared jnp implementation in ``kernels.ref`` — the
+        integer semantics (rounding shifts, opcode-selected activations)
+        must stay in one place so the bit-exact contract cannot drift.
+        """
+        return fused_mlp_gather_ref(
+            x, slot, tables.w, tables.b, tables.act, tables.layer_on,
+            frac=self.frac, sig_coeffs=self._sig_coeffs,
+            leaky_alpha_q=self._leaky_alpha_q)
+
     def _process_impl(self, pkts: jax.Array, tables: ModelTables) -> jax.Array:
         self.trace_count += 1  # python side effect: fires once per trace
         parsed = parse_packets(pkts, self.max_features)
 
-        slot = tables.id_map[parsed.model_id]  # (B,)
+        slot = tables.id_map[parsed.model_id]  # (B,) — mixed models allowed
         valid = slot >= 0
         slot = jnp.maximum(slot, 0)
 
-        # gather this packet's model: (B, L, W, W), (B, L, W), (B, L)
-        w = tables.w[slot]
-        b = tables.b[slot]
-        act = tables.act[slot]
-        layer_on = tables.layer_on[slot]
-
-        width = w.shape[-1]
+        width = tables.w.shape[-1]
         x = parsed.features_q  # (B, F) codes at self.frac
         if x.shape[1] < width:
             x = jnp.pad(x, ((0, 0), (0, width - x.shape[1])))
         else:
             x = x[:, :width]
 
-        frac = self.frac
-        for l in range(self.cp.max_layers):
-            # int32 accumulate at 2*frac fractional bits; bias pre-shifted
-            acc = jnp.einsum("bi,bij->bj", x, w[:, l].astype(jnp.int32),
-                             preferred_element_type=jnp.int32)
-            acc = acc + b[:, l]
-            y = _rounding_shift_right(acc, frac)  # back to frac bits
-            y = _apply_activation(y, act[:, l][:, None], frac,
-                                  self.taylor_order, self._leaky_alpha_q)
-            on = layer_on[:, l][:, None] > 0
-            x = jnp.where(on, y, x)
+        if self.dispatch == "fused":
+            x = fused_mlp(x, slot, tables.w, tables.b, tables.act,
+                          tables.layer_on, frac=self.frac,
+                          sig_coeffs=self._sig_coeffs,
+                          leaky_alpha_q=self._leaky_alpha_q,
+                          backend=self.backend)
+        else:
+            x = self._forward_gathered(x, slot, tables)
 
         # zero lanes beyond each model's output count; invalid model → 0
         lane = jnp.arange(width)[None, :]
@@ -131,19 +142,34 @@ class DataPlaneEngine:
 
     # -- host API -----------------------------------------------------------
 
-    def process(self, pkts) -> jax.Array:
-        """Run one batch of ingress packets; returns egress packets."""
+    def run(self, pkts, *, block: bool = True) -> jax.Array:
+        """Run one mixed-model batch of ingress packets → egress packets.
+
+        ``block=False`` returns as soon as the batch is *dispatched*: the
+        returned array is a device future, so callers can pipeline host-side
+        encode/decode of neighbouring batches against device compute (see
+        ``PacketServer.submit_async``).  Packet/byte counters update
+        immediately; wall-clock is accounted by the blocking caller.
+        """
         pkts = jnp.asarray(pkts, jnp.uint8)
-        tables = self.cp.tables()
+        tables = self.cp.tables()  # current generation snapshot
         t0 = time.perf_counter()
         out = self._process(pkts, tables)
-        out.block_until_ready()
-        dt = time.perf_counter() - t0
         self.stats["packets"] += int(pkts.shape[0])
         self.stats["bytes_in"] += int(pkts.size)
         self.stats["bytes_out"] += int(out.size)
-        self.stats["seconds"] += dt
+        if block:
+            out.block_until_ready()
+            self.stats["seconds"] += time.perf_counter() - t0
         return out
+
+    def process(self, pkts) -> jax.Array:
+        """Blocking alias of :meth:`run` (the seed API)."""
+        return self.run(pkts, block=True)
+
+    def add_seconds(self, dt: float) -> None:
+        """Credit wall-clock spent by an external async drain loop."""
+        self.stats["seconds"] += dt
 
     def throughput_gbps(self) -> float:
         s = self.stats

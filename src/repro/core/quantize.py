@@ -68,11 +68,37 @@ def w8a8_matmul_int(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array,
     return acc.astype(jnp.float32) * x_scale * w_scale
 
 
-def w8a8_matmul_sim(x: jax.Array, w: jax.Array, frac_bits: int = 6,
+def _calibrated_fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Snap onto a power-of-two fixed-point grid whose step is *calibrated*
+    from the data (the paper's per-tensor Scale field), straight-through
+    gradient.
+
+    A hard-coded ``frac_bits`` grid saturates unnormalized LM activations
+    (|x| can far exceed the ±2 range of a Q8.6 grid) — the paper instead
+    calibrates ``s`` so the amplitude fits (§3.1, and ``calibrate_scale``).
+    Tracing-safe: the step is computed with float ops, not a static shift.
+    """
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    absmax = jnp.maximum(absmax, 1e-12)
+    # smallest power-of-two step that still covers absmax: 2^ceil(log2(m/qmax))
+    step = 2.0 ** jnp.ceil(jnp.log2(absmax / qmax))
+    q = jnp.clip(jnp.round(x / step), -qmax - 1, qmax) * step
+    return x + jax.lax.stop_gradient(q - x)  # STE
+
+
+def w8a8_matmul_sim(x: jax.Array, w: jax.Array, frac_bits: int = None,
                     bits: int = 8) -> jax.Array:
-    """Fake-quant GEMM on the fixed-point grid (QAT / accuracy simulation)."""
-    xq = fake_quant(x, frac_bits, bits)
-    wq = fake_quant(w, frac_bits, bits)
+    """Fake-quant GEMM on the fixed-point grid (QAT / accuracy simulation).
+
+    ``frac_bits=None`` (default) calibrates a per-tensor power-of-two step
+    for activations and a per-output-channel step for weights; passing an
+    integer pins the legacy fixed grid (Q·.frac_bits) for both operands.
+    """
+    if frac_bits is not None:
+        return fake_quant(x, frac_bits, bits) @ fake_quant(w, frac_bits, bits)
+    xq = _calibrated_fake_quant(x, bits)
+    wq = _calibrated_fake_quant(w, bits, axis=-2)  # per-output-channel
     return xq @ wq
 
 

@@ -120,8 +120,14 @@ def _split_computations(text: str) -> Tuple[Dict[str, List[_Op]], Optional[str]]
 
 def _dot_flops(op: _Op, symtab: Dict[str, str]) -> float:
     out_b, out_e = _shape_info(op.type_str)
-    # operands: first two %names in rest
-    names = re.findall(r"%?([\w\.\-]+)", op.rest.split(")")[0])
+    # operands: first two %names in rest.  The '%' sigil is required — making
+    # it optional matches the operand's *dtype* token ("f32") first, which
+    # never resolves in the symbol table and silently degrades every dot to
+    # the degenerate 2·out_elems fallback (trip counts then look unmultiplied).
+    oper_str = op.rest.split(")")[0]
+    names = re.findall(r"%([\w\.\-]+)", oper_str)
+    if not names:  # HLO prints without sigils: keep only resolvable tokens
+        names = [t for t in re.findall(r"[\w\.\-]+", oper_str) if t in symtab]
     lhs_type = symtab.get(names[0]) if names else None
     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
     if lhs_type is None or cdims is None:

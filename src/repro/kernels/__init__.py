@@ -2,6 +2,10 @@
 
   * ``fixedpoint_matmul``  — W8A8 int8→int32 MXU GEMM + Table-2 rescale (C1)
   * ``taylor_activation``  — fused integer-Horner polynomial activation (C2)
+  * ``fixedpoint_mlp``     — fused multi-model MLP: the whole batched
+                             data-plane layer loop (masked Model-ID GEMM,
+                             bias, requantize, opcode-selected activation)
+                             in one kernel over the stacked tables
   * ``wkv_scan``           — chunked RWKV-6 WKV scan with the recurrent
                              state resident in VMEM across chunks (the
                              §Perf rwkv hillclimb's end-state)
@@ -11,8 +15,8 @@ dispatch by platform (TPU: native Pallas; CPU: oracle / interpret mode).
 """
 
 from . import ops, ref, wkv_scan
-from .ops import fixedpoint_matmul, taylor_activation
+from .ops import fixedpoint_matmul, fused_mlp, taylor_activation
 from .wkv_scan import wkv_scan_pallas
 
 __all__ = ["ops", "ref", "wkv_scan", "fixedpoint_matmul",
-           "taylor_activation", "wkv_scan_pallas"]
+           "taylor_activation", "fused_mlp", "wkv_scan_pallas"]

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused multi-model fixed-point MLP (the whole data plane
+compute stage in one kernel).
+
+The batched data plane (core/inference.py) serves a *mixed-model* packet
+batch: every packet carries a Model ID resolved to a table slot, and the
+forward pass must use that packet's own weights.  The naive formulation
+gathers per-packet weight tensors — ``w[slot]`` materializes ``(B, L, W, W)``
+codes, i.e. ``L·W²`` table bytes *per packet* of HBM traffic, then runs one
+``einsum`` + one activation round-trip per layer.
+
+This kernel instead keeps the **stacked** tables (all ``M`` models) resident
+in VMEM — at paper scale the whole match-action RAM is ~128 KiB, smaller than
+one activation tile — and folds the Model-ID dispatch into the GEMM itself:
+
+    z[p, (m·W+i)] = onehot[p, m] · x[p, i]          (mask, VPU)
+    acc[p, j]     = Σ_{m,i} z[p, (m·W+i)] · w[l, (m·W+i), j]   (one MXU dot)
+
+Summing over the fused ``(model, feature)`` axis computes, for every packet,
+exactly its own model's layer — other models' terms are zeroed by the mask —
+so ``M`` interleaved models cost **one** ``(B, M·W) × (M·W, W)`` GEMM per
+layer instead of ``B`` gathered vector-matrix products.  Bias add, the
+rounding-shift requantize and the opcode-selected activation (ReLU / leaky /
+Taylor-sigmoid Horner / hard-sigmoid) all happen on the accumulator tile
+while it is still in VMEM: the full ``L``-layer loop touches HBM once for
+the packet tile in and once for the result out.
+
+Integer discipline matches the P4/FPGA pipeline bit-for-bit: int32
+accumulation, biases pre-shifted to ``2·frac`` bits, rounding arithmetic
+shifts (ties away from zero), Taylor constants as immediates.
+
+Off-TPU the kernel runs under the Pallas interpreter (bit-exact with the
+jnp oracle ``ref.fused_mlp_ref``, which is also the fast CPU path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The integer semantics (rounding shift, opcode-gated activation) live in
+# exactly one place — ref.py — and are traced into the kernel from there, so
+# the kernel/oracle bit-exact contract cannot drift.
+from .ref import _select_activation_ref, rounding_rshift
+
+__all__ = ["fixedpoint_mlp_pallas", "BB"]
+
+# Batch-tile rows per grid step.  The lane-dim (table width W) rides along
+# unpadded: at paper scale W ≤ 32 and the whole working set is VMEM-tiny.
+BB = 256
+
+
+def _kernel(x_ref, slot_ref, w_ref, b_ref, act_ref, on_ref, o_ref, *,
+            n_layers: int, n_models: int, frac: int, sig_coeffs: tuple,
+            leaky_alpha_q: int):
+    x = x_ref[...]  # (bb, W) int32 feature codes
+    slot = slot_ref[...]  # (bb, 1) int32, pre-clamped to [0, M)
+    bb, width = x.shape
+
+    m_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, n_models), 1)
+    onehot = (slot == m_iota).astype(jnp.int32)  # (bb, M)
+
+    for l in range(n_layers):  # static: max_layers is a synthesis-time bound
+        # Model-ID dispatch fused into the GEMM: mask, then contract the
+        # combined (model, feature) axis against the stacked layer table.
+        z = (onehot[:, :, None] * x[:, None, :]).reshape(bb, n_models * width)
+        acc = jax.lax.dot_general(z, w_ref[l],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        acc = acc + jax.lax.dot_general(onehot, b_ref[l],
+                                        (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.int32)
+        y = rounding_rshift(acc, frac)  # 2·frac-bit accumulator → frac bits
+        opcode = jax.lax.dot_general(onehot, act_ref[l],
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.int32)
+        y = _select_activation_ref(y, opcode, frac=frac,
+                                   sig_coeffs=sig_coeffs,
+                                   leaky_alpha_q=leaky_alpha_q)
+        on = jax.lax.dot_general(onehot, on_ref[l],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32) > 0
+        x = jnp.where(on, y, x)  # inactive layer: identity (padded depth)
+
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("frac", "sig_coeffs",
+                                             "leaky_alpha_q", "bb",
+                                             "interpret"))
+def fixedpoint_mlp_pallas(x_q: jax.Array, slot: jax.Array, w: jax.Array,
+                          b: jax.Array, act: jax.Array, layer_on: jax.Array,
+                          *, frac: int, sig_coeffs: tuple,
+                          leaky_alpha_q: int, bb: int = BB,
+                          interpret: bool = False) -> jax.Array:
+    """Fused multi-model MLP forward on integer codes.
+
+    x_q       (B, W)        int32 feature codes at ``frac`` fractional bits
+    slot      (B, 1)        int32 table slot per packet, in ``[0, M)``
+    w         (L, M·W, W)   int32 stacked weight codes (layer-major)
+    b         (L, M, W)     int32 bias codes at ``2·frac`` bits
+    act       (L, M, 1)     int32 activation opcodes
+    layer_on  (L, M, 1)     int32 layer-exists flags
+    Returns   (B, W)        int32 output codes at ``frac`` bits.
+
+    ``B % bb == 0`` (the ops.py wrapper pads).  The tables ride whole into
+    VMEM each grid step (M·L·W² ≤ a few hundred KiB at paper scale).
+    """
+    n_batch, width = x_q.shape
+    n_layers, mw, _ = w.shape
+    n_models = mw // width
+    if n_batch % bb:
+        # a floor-divided grid would silently leave the tail rows unwritten
+        raise ValueError(f"batch {n_batch} not a multiple of tile {bb}; "
+                         "use ops.fused_mlp, which pads")
+    grid = (n_batch // bb,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_layers=n_layers, n_models=n_models,
+                          frac=frac,
+                          sig_coeffs=tuple(int(c) for c in sig_coeffs),
+                          leaky_alpha_q=leaky_alpha_q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, width), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n_layers, mw, width), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, n_models, width), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, n_models, 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers, n_models, 1), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_batch, width), jnp.int32),
+        interpret=interpret,
+    )(x_q, slot, w, b, act, layer_on)

@@ -23,9 +23,10 @@ import numpy as np
 
 from . import ref
 from .fixedpoint_matmul import BK, BM, BN, fixedpoint_matmul_pallas
+from .fixedpoint_mlp import BB, fixedpoint_mlp_pallas
 from .taylor_activation import BC, BR, taylor_activation_pallas
 
-__all__ = ["fixedpoint_matmul", "taylor_activation", "on_tpu"]
+__all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -54,6 +55,63 @@ def fixedpoint_matmul(x_codes: jax.Array, w_codes: jax.Array,
     ws = _pad_to(w_scale, (1, BN))
     out = fixedpoint_matmul_pallas(xp, wp, xs, ws, interpret=not on_tpu())
     return out[:m, :n]
+
+
+def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
+              act: jax.Array, layer_on: jax.Array, *, frac: int,
+              sig_coeffs, leaky_alpha_q: int,
+              backend: str = "auto") -> jax.Array:
+    """Fused multi-model fixed-point MLP over *stacked* control-plane tables.
+
+    Layout prep lives here so callers hand over tables exactly as the
+    control plane stores them:
+
+      x_q (B, W) int32 · slot (B,) int32 · w (M, L, W, W) · b (M, L, W) ·
+      act (M, L) · layer_on (M, L)  →  (B, W) int32 output codes.
+
+    The kernel wants layer-major stacked operands — w as ``(L, M·W, W)`` so
+    the per-packet model select becomes one GEMM over the fused (model,
+    feature) axis — and a batch padded to the tile size.  Padded rows run
+    slot 0 and are sliced off (outputs for real rows are unaffected: the
+    masked GEMM is row-independent).
+    """
+    if backend not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown backend: {backend!r}")
+    n_batch, width = x_q.shape
+    n_models, n_layers = act.shape
+    use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    coeffs = tuple(int(c) for c in np.asarray(sig_coeffs).tolist())
+    if backend == "auto" and not on_tpu():
+        # CPU lowering: XLA:CPU scalarizes wide s32 GEMMs, so the masked-GEMM
+        # form is slow there — the bit-identical gathered batched-matvec
+        # (elementwise multiply + reduce, fully vectorized in int32) wins.
+        # Still one XLA program for the whole layer loop.
+        return ref.fused_mlp_gather_ref(
+            x_q, slot.astype(jnp.int32), w, b, act, layer_on, frac=frac,
+            sig_coeffs=coeffs, leaky_alpha_q=leaky_alpha_q)
+    # Layer-major stacked operands for the kernel/oracle (masked-GEMM form).
+    # These transposes are retraced per batch; they scale with M·L·W² (table
+    # size, ~KBs at paper scale), not batch size.  Hoisting them into the
+    # per-generation ControlPlane snapshot is the known TPU optimization
+    # (ROADMAP: multi-backend fused kernel) — needs a layer-major ModelTables
+    # variant and a device to measure on.
+    wl = jnp.transpose(w, (1, 0, 2, 3)).astype(jnp.int32).reshape(
+        n_layers, n_models * width, width)
+    bl = jnp.transpose(b, (1, 0, 2)).astype(jnp.int32)
+    al = jnp.transpose(act, (1, 0)).astype(jnp.int32)[:, :, None]
+    onl = jnp.transpose(layer_on, (1, 0)).astype(jnp.int32)[:, :, None]
+    slot2 = slot.astype(jnp.int32)[:, None]
+    if not use_pallas:  # backend == "ref": the literal kernel oracle
+        return ref.fused_mlp_ref(x_q, slot2, wl, bl, al, onl, frac=frac,
+                                 sig_coeffs=coeffs,
+                                 leaky_alpha_q=leaky_alpha_q)
+    xp = _pad_to(x_q, (BB, 1))
+    sp = _pad_to(slot2, (BB, 1))
+    out = fixedpoint_mlp_pallas(xp, sp, wl, bl, al, onl, frac=frac,
+                                sig_coeffs=coeffs,
+                                leaky_alpha_q=leaky_alpha_q,
+                                interpret=not on_tpu())
+    return out[:n_batch]
 
 
 def taylor_activation(x_q: jax.Array, coeffs, x_frac: int,

@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "rounding_rshift",
-           "wkv_scan_ref"]
+__all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "fused_mlp_ref",
+           "fused_mlp_gather_ref", "rounding_rshift", "wkv_scan_ref"]
 
 
 def wkv_scan_ref(a: jax.Array, b: jax.Array, v: jax.Array, tot: jax.Array,
@@ -61,6 +61,92 @@ def fixedpoint_matmul_ref(x_codes: jax.Array, w_codes: jax.Array,
     if bias is not None:
         out = out + bias
     return out
+
+
+def _select_activation_ref(y: jax.Array, opcode: jax.Array, *, frac: int,
+                           sig_coeffs, leaky_alpha_q: int) -> jax.Array:
+    """Opcode-gated integer activation (opcodes as in core.control_plane:
+    1=relu, 2=taylor-sigmoid, 3=leaky-relu, 4=hard-sigmoid)."""
+    relu = jnp.maximum(y, 0)
+    leaky = jnp.where(y > 0, y,
+                      rounding_rshift(y * jnp.int32(leaky_alpha_q), frac))
+    xc = jnp.clip(y, -(1 << 14), 1 << 14)
+    sig = jnp.full(y.shape, int(sig_coeffs[-1]), jnp.int32)
+    for c in sig_coeffs[-2::-1]:
+        sig = rounding_rshift(sig * xc, frac) + jnp.int32(int(c))
+    half = jnp.int32(1 << (frac - 1))
+    one = jnp.int32(1 << frac)
+    hsig = jnp.clip(half + rounding_rshift(y, 2), 0, one)
+    out = y
+    out = jnp.where(opcode == 1, relu, out)
+    out = jnp.where(opcode == 2, sig, out)
+    out = jnp.where(opcode == 3, leaky, out)
+    out = jnp.where(opcode == 4, hsig, out)
+    return out
+
+
+def fused_mlp_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
+                  act: jax.Array, layer_on: jax.Array, *, frac: int,
+                  sig_coeffs, leaky_alpha_q: int) -> jax.Array:
+    """Oracle for the fused multi-model MLP kernel — identical masked-GEMM
+    formulation in plain jnp.  This is the *cross-check* path
+    (``backend="ref"``): the production CPU lowering is
+    :func:`fused_mlp_gather_ref` below (XLA:CPU scalarizes wide s32 GEMMs,
+    so the gathered batched-matvec form wins there; ``ops.fused_mlp``
+    selects it for ``backend="auto"`` off-TPU).
+
+    Shapes as in ``fixedpoint_mlp_pallas``: x_q (B, W) int32; slot (B, 1)
+    int32 in [0, M); w (L, M·W, W) int32; b (L, M, W) int32; act/layer_on
+    (L, M, 1) int32.
+    """
+    n_batch, width = x_q.shape
+    n_layers, mw, _ = w.shape
+    n_models = mw // width
+    onehot = (slot == jnp.arange(n_models, dtype=jnp.int32)[None, :]
+              ).astype(jnp.int32)  # (B, M)
+    x = x_q
+    for l in range(n_layers):
+        z = (onehot[:, :, None] * x[:, None, :]).reshape(n_batch, mw)
+        acc = jax.lax.dot_general(z, w[l], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        acc = acc + jax.lax.dot_general(onehot, b[l], (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.int32)
+        y = rounding_rshift(acc, frac)
+        opcode = jax.lax.dot_general(onehot, act[l], (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.int32)
+        y = _select_activation_ref(y, opcode, frac=frac,
+                                   sig_coeffs=sig_coeffs,
+                                   leaky_alpha_q=leaky_alpha_q)
+        on = jax.lax.dot_general(onehot, layer_on[l],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32) > 0
+        x = jnp.where(on, y, x)
+    return x
+
+
+def fused_mlp_gather_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array,
+                         b: jax.Array, act: jax.Array, layer_on: jax.Array,
+                         *, frac: int, sig_coeffs,
+                         leaky_alpha_q: int) -> jax.Array:
+    """Bit-identical CPU realization of the fused MLP: per-packet table
+    gather + int32 batched matvec (``bi,bij->bj``), which XLA:CPU vectorizes,
+    unlike wide s32 GEMMs.  Tables in control-plane layout: w (M, L, W, W),
+    b (M, L, W), act/layer_on (M, L); slot (B,)."""
+    wg = w[slot]          # (B, L, W, W)
+    bg = b[slot]          # (B, L, W)
+    ag = act[slot]        # (B, L)
+    og = layer_on[slot]   # (B, L)
+    n_layers = w.shape[1]
+    x = x_q
+    for l in range(n_layers):
+        acc = jnp.einsum("bi,bij->bj", x, wg[:, l].astype(jnp.int32),
+                         preferred_element_type=jnp.int32) + bg[:, l]
+        y = rounding_rshift(acc, frac)
+        y = _select_activation_ref(y, ag[:, l][:, None], frac=frac,
+                                   sig_coeffs=sig_coeffs,
+                                   leaky_alpha_q=leaky_alpha_q)
+        x = jnp.where(og[:, l][:, None] > 0, y, x)
+    return x
 
 
 def taylor_activation_ref(x_q: jax.Array, coeffs_q: np.ndarray,

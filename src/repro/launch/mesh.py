@@ -9,7 +9,23 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "HW"]
+__all__ = ["make_mesh", "make_production_mesh", "HW"]
+
+
+def make_mesh(shape, axes):
+    """Version-portable ``jax.make_mesh``.
+
+    ``axis_types=(AxisType.Auto, …)`` only exists from jax 0.5; on 0.4.x the
+    keyword (and ``jax.sharding.AxisType`` itself) is absent and plain meshes
+    are implicitly Auto.  Every mesh in this repo is fully-Auto, so the two
+    spellings are semantically identical.
+    """
+    try:
+        axis_type = jax.sharding.AxisType.Auto
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,8 +33,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod:   (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 class HW:

@@ -2,7 +2,16 @@
 
   * :class:`PacketServer` — the paper's actual system: the in-network data
     plane processing encapsulated feature packets against control-plane
-    tables (µs-scale inference, weight hot-swap without recompile).
+    tables (µs-scale inference, weight hot-swap without recompile).  The
+    batch path is **asynchronous**: ``submit_async()`` dispatches a batch to
+    the device and returns immediately (the jit'd data plane is a device
+    future), keeping up to ``max_inflight`` batches in flight so host-side
+    packet encode/decode of neighbouring batches overlaps device compute —
+    the software analogue of the NIC's ingress pipeline staying full.
+    ``drain()`` retires the in-flight window and reconciles wall-clock into
+    the engine's throughput stats.  ``install()`` during serving is safe and
+    retrace-free: the control plane publishes a new table generation while
+    in-flight batches keep the old buffers (double buffering).
   * :class:`LMServer` — the framework-scale generalization: batched LM
     decode with KV caches, W8A8 fixed-point weights (C1), Taylor activations
     (C2), and the same control-plane hot-swap semantics via WeightRegistry.
@@ -11,7 +20,8 @@
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from collections import deque
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,28 +36,73 @@ __all__ = ["PacketServer", "LMServer"]
 
 
 class PacketServer:
-    """Thin deployment wrapper: ControlPlane + DataPlaneEngine + stats."""
+    """Deployment wrapper: ControlPlane + batched DataPlaneEngine + async loop."""
 
     def __init__(self, *, max_models: int = 16, max_layers: int = 4,
                  max_width: int = 32, frac_bits: int = 8,
-                 taylor_order: int = 3):
+                 taylor_order: int = 3, dispatch: str = "fused",
+                 max_inflight: int = 8):
         self.control_plane = ControlPlane(
             max_models=max_models, max_layers=max_layers,
             max_width=max_width, frac_bits=frac_bits)
         self.engine = DataPlaneEngine(self.control_plane,
                                       max_features=max_width,
-                                      taylor_order=taylor_order)
+                                      taylor_order=taylor_order,
+                                      dispatch=dispatch)
+        self.max_inflight = max_inflight
+        self._inflight: deque = deque()
+        self._window_t0: Optional[float] = None
 
     def install(self, model_id: int, layers, activations, **kw) -> int:
+        """Quantize + install (hot-swap) a model — safe mid-serving: the new
+        table generation applies from the next submitted batch, zero
+        retraces, in-flight batches unaffected."""
         return self.control_plane.install(model_id, layers, activations, **kw)
 
     def process(self, packets):
+        """Synchronous single-batch path (blocks until egress is ready).
+
+        Closes any open async window first — a blocking call inside the
+        window would otherwise credit its wall-clock to the engine twice
+        (once here, once when ``drain()`` credits the whole window).
+        """
+        if self._window_t0 is not None:
+            self.drain()
         return self.engine.process(packets)
+
+    # -- async serving loop ------------------------------------------------
+
+    def submit_async(self, packets) -> jax.Array:
+        """Dispatch one ingress batch without blocking; returns the egress
+        device future.  When ``max_inflight`` batches are pending, the
+        oldest is retired first (bounded queue → bounded device memory)."""
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        while len(self._inflight) >= self.max_inflight:
+            self._inflight.popleft().block_until_ready()
+        out = self.engine.run(packets, block=False)
+        self._inflight.append(out)
+        return out
+
+    def drain(self) -> List[jax.Array]:
+        """Block until every in-flight batch has retired; credit the whole
+        submit→drain window's wall-clock to the engine's throughput stats.
+        Returns the batches still in flight (submission order) — every
+        ``submit_async`` call already handed its own future to the caller."""
+        outs = list(self._inflight)
+        self._inflight.clear()
+        for o in outs:
+            o.block_until_ready()
+        if self._window_t0 is not None:
+            self.engine.add_seconds(time.perf_counter() - self._window_t0)
+            self._window_t0 = None
+        return outs
 
     def stats(self) -> Dict[str, float]:
         return {"packets_per_s": self.engine.packets_per_second(),
                 "throughput_gbps": self.engine.throughput_gbps(),
-                "recompiles": self.engine.trace_count}
+                "recompiles": self.engine.trace_count,
+                "table_generation": self.control_plane.version}
 
 
 class LMServer:

@@ -1,0 +1,5 @@
+"""Test-support utilities (dev-dependency shims, deterministic generators)."""
+
+from .hypothesis_shim import install_hypothesis_shim
+
+__all__ = ["install_hypothesis_shim"]

@@ -1,0 +1,266 @@
+"""Tentpole tests: batched multi-model dispatch, the fused Pallas MLP kernel,
+double-buffered table installs, and the async serving loop.
+
+The fused kernel must be bit-exact with (a) its jnp oracle, (b) the fast CPU
+lowering, and (c) the seed per-packet-gather engine path — the data plane's
+integer semantics are the contract (P4/FPGA bit-equivalence, DESIGN.md §2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packet as pk
+from repro.core.control_plane import ControlPlane
+from repro.core.inference import DataPlaneEngine
+from repro.core.taylor import scaled_constants
+from repro.kernels.ops import fused_mlp
+
+FRAC = 8
+
+
+def _install_zoo(cp, rng, n_models, width, scale=0.3):
+    """Install ``n_models`` MLPs exercising every activation opcode and
+    several depths/widths (padded tables must mask correctly)."""
+    acts = ["relu", "sigmoid", "leaky_relu", "hard_sigmoid", "none"]
+    for m in range(n_models):
+        depth = 1 + m % cp.max_layers
+        dims = [width] * depth + [1 + m % width]
+        layers = [(rng.normal(size=(a, b)).astype(np.float32) * scale,
+                   rng.normal(size=(b,)).astype(np.float32) * scale)
+                  for a, b in zip(dims[:-1], dims[1:])]
+        hidden = [acts[(m + i) % len(acts)] for i in range(depth - 1)]
+        cp.install(100 + m, layers, hidden,
+                   final_activation=acts[m % len(acts)])
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("width,n_models,batch", [(8, 4, 64), (16, 16, 300)])
+    def test_backends_bit_exact(self, width, n_models, batch):
+        """pallas(interpret) == masked-GEMM oracle == CPU gather lowering ==
+        the seed per-packet-gather engine loop, bit for bit."""
+        rng = np.random.default_rng(width + n_models)
+        cp = ControlPlane(max_models=n_models, max_layers=3, max_width=width,
+                          frac_bits=FRAC)
+        _install_zoo(cp, rng, n_models, width)
+        t = cp.tables()
+        x = jnp.asarray(rng.integers(-2000, 2000, (batch, width)), jnp.int32)
+        slot = jnp.asarray(rng.integers(0, n_models, batch), jnp.int32)
+        coeffs = scaled_constants("sigmoid", 3, FRAC)
+        kw = dict(frac=FRAC, sig_coeffs=coeffs, leaky_alpha_q=3)
+
+        outs = {b: np.asarray(fused_mlp(x, slot, t.w, t.b, t.act, t.layer_on,
+                                        backend=b, **kw))
+                for b in ("ref", "pallas", "auto")}
+        eng = DataPlaneEngine(cp, max_features=width, dispatch="gather")
+        gathered = np.asarray(
+            jax.jit(eng._forward_gathered)(x, slot, t))
+
+        np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+        np.testing.assert_array_equal(outs["auto"], outs["ref"])
+        np.testing.assert_array_equal(gathered, outs["ref"])
+
+    def test_pallas_padding_path(self):
+        """Batch sizes that are not tile multiples round-trip unharmed."""
+        rng = np.random.default_rng(0)
+        cp = ControlPlane(max_models=2, max_layers=2, max_width=4,
+                          frac_bits=FRAC)
+        _install_zoo(cp, rng, 2, 4)
+        t = cp.tables()
+        coeffs = scaled_constants("sigmoid", 3, FRAC)
+        kw = dict(frac=FRAC, sig_coeffs=coeffs, leaky_alpha_q=3)
+        for batch in (1, 7, 257):
+            x = jnp.asarray(rng.integers(-500, 500, (batch, 4)), jnp.int32)
+            slot = jnp.asarray(rng.integers(0, 2, batch), jnp.int32)
+            a = np.asarray(fused_mlp(x, slot, t.w, t.b, t.act, t.layer_on,
+                                     backend="pallas", **kw))
+            b = np.asarray(fused_mlp(x, slot, t.w, t.b, t.act, t.layer_on,
+                                     backend="ref", **kw))
+            np.testing.assert_array_equal(a, b)
+
+
+class TestBatchedEngine:
+    def _engine(self, dispatch="fused", n_models=8, width=8):
+        rng = np.random.default_rng(42)
+        cp = ControlPlane(max_models=n_models, max_layers=3, max_width=width,
+                          frac_bits=FRAC)
+        _install_zoo(cp, rng, n_models, width)
+        return cp, DataPlaneEngine(cp, max_features=width, dispatch=dispatch)
+
+    def test_fused_matches_gather_engine(self):
+        """Whole-pipeline equality on an arbitrarily interleaved batch,
+        including unknown Model IDs (zeroed egress)."""
+        rng = np.random.default_rng(3)
+        cp_f, eng_f = self._engine("fused")
+        cp_g, eng_g = self._engine("gather")
+        b = 200
+        mids = rng.integers(100, 110, b).astype(np.int32)  # 108/109 unknown
+        codes = rng.integers(-2000, 2000, (b, 8)).astype(np.int32)
+        pkts = pk.encode_packets(jnp.asarray(mids), jnp.int32(FRAC),
+                                 jnp.asarray(codes))
+        np.testing.assert_array_equal(np.asarray(eng_f.process(pkts)),
+                                      np.asarray(eng_g.process(pkts)))
+
+    def test_mixed_batch_matches_float_reference(self):
+        """Each packet's output ≈ its own model's float forward pass."""
+        rng = np.random.default_rng(5)
+        width = 8
+        cp = ControlPlane(max_models=4, max_layers=2, max_width=width,
+                          frac_bits=10)
+        models = {}
+        for m in range(4):
+            w = rng.normal(size=(width, 2)).astype(np.float32) * 0.4
+            bias = rng.normal(size=(2,)).astype(np.float32) * 0.2
+            cp.install(50 + m, [(w, bias)], [])
+            models[50 + m] = (w, bias)
+        eng = DataPlaneEngine(cp, max_features=width)
+        b = 128
+        mids = rng.integers(50, 54, b).astype(np.int32)
+        x = (rng.normal(size=(b, width)) * 0.5).astype(np.float32)
+        xq = np.round(x * 2.0 ** 10).astype(np.int32)
+        pkts = pk.encode_packets(jnp.asarray(mids), jnp.int32(10),
+                                 jnp.asarray(xq))
+        parsed = pk.parse_packets(eng.process(pkts), max_features=2)
+        got = np.asarray(parsed.features_q[:, :2]) / 2.0 ** 10
+        want = np.stack([x[i] @ models[int(mids[i])][0]
+                         + models[int(mids[i])][1] for i in range(b)])
+        np.testing.assert_allclose(got, want, atol=0.02)
+
+    def test_zero_retraces_across_installs(self):
+        rng = np.random.default_rng(6)
+        cp, eng = self._engine("fused")
+        pkts = pk.encode_packets(jnp.int32(100), jnp.int32(FRAC),
+                                 jnp.zeros((16, 8), jnp.int32))
+        eng.process(pkts)
+        assert eng.trace_count == 1
+        for _ in range(4):
+            _install_zoo(cp, rng, 8, 8)  # hot-swap every model
+            eng.process(pkts)
+        assert eng.trace_count == 1  # no data-plane re-synthesis
+
+
+class TestDoubleBufferedInstall:
+    def test_inflight_generation_isolated(self):
+        """A snapshot taken before install() keeps serving the old weights —
+        the writer swaps a generation, never mutates published buffers."""
+        cp = ControlPlane(max_models=2, max_layers=1, max_width=2,
+                          frac_bits=FRAC)
+        w_old = np.eye(2, dtype=np.float32)
+        w_new = np.eye(2, dtype=np.float32) * 3.0
+        cp.install(7, [(w_old, np.zeros(2, np.float32))], [])
+        before = cp.tables()  # "in-flight" batch's generation
+        gen0 = cp.version
+        cp.install(7, [(w_new, np.zeros(2, np.float32))], [])
+        after = cp.tables()
+        assert cp.version == gen0 + 1
+        # old snapshot untouched; new snapshot carries the retrained weights
+        one = int(round(2.0 ** FRAC))
+        assert int(before.w[0, 0, 0, 0]) == one
+        assert int(after.w[0, 0, 0, 0]) == 3 * one
+
+    def test_snapshot_cached_per_generation(self):
+        """Steady-state serving re-feeds the same device buffers (no
+        per-batch host→device upload); a write publishes fresh ones."""
+        cp = ControlPlane(max_models=1, max_layers=1, max_width=2)
+        cp.install(1, [(np.eye(2, dtype=np.float32), np.zeros(2, np.float32))], [])
+        t1, t2 = cp.tables(), cp.tables()
+        assert t1 is t2
+        cp.install(1, [(np.eye(2, dtype=np.float32), np.zeros(2, np.float32))], [])
+        assert cp.tables() is not t1
+
+    def test_remove_is_copy_on_write(self):
+        cp = ControlPlane(max_models=2, max_layers=1, max_width=2)
+        cp.install(1, [(np.eye(2, dtype=np.float32), np.zeros(2, np.float32))], [])
+        before = cp.tables()
+        cp.remove(1)
+        assert int(before.id_map[1]) >= 0      # old generation still routes
+        assert int(cp.tables().id_map[1]) == -1
+
+    def test_remove_recycles_slot_without_collision(self):
+        """A slot freed by remove() must never be handed to a new model while
+        still routing a live one."""
+        eye = [(np.eye(2, dtype=np.float32), np.zeros(2, np.float32))]
+        two = [(np.eye(2, dtype=np.float32) * 2, np.zeros(2, np.float32))]
+        cp = ControlPlane(max_models=2, max_layers=1, max_width=2)
+        s1 = cp.install(1, eye, [])
+        s2 = cp.install(2, two, [])
+        cp.remove(1)
+        s3 = cp.install(3, eye, [])
+        assert s3 == s1 and s3 != s2  # recycled, not colliding with model 2
+        t = cp.tables()
+        one = 1 << cp.frac_bits
+        assert int(t.w[s2, 0, 0, 0]) == 2 * one  # model 2's weights intact
+        with pytest.raises(ValueError):  # both slots live again → table full
+            cp.install(4, eye, [])
+
+    def test_failed_install_leaves_no_trace(self):
+        """install() is transactional: a rejected model must not consume a
+        slot, register an ID, or leave partial tables behind."""
+        cp = ControlPlane(max_models=2, max_layers=2, max_width=2)
+        good = (np.eye(2, dtype=np.float32), np.zeros(2, np.float32))
+        wide = (np.ones((2, 5), np.float32), np.zeros(5, np.float32))
+        gen = cp.version
+        with pytest.raises(ValueError):
+            cp.install(9, [good, wide], ["relu"])
+        with pytest.raises(KeyError):
+            cp.install(9, [good], ["not_an_activation"])
+        assert cp.version == gen
+        assert int(cp.tables().id_map[9]) == -1
+        s = cp.install(9, [good], [])  # the fixed model installs cleanly
+        assert int(cp.tables().layer_on[s, 0]) == 1
+
+
+class TestAsyncServing:
+    def _server(self, **kw):
+        from repro.launch.serve import PacketServer
+        rng = np.random.default_rng(9)
+        srv = PacketServer(max_models=8, max_layers=2, max_width=8,
+                           frac_bits=FRAC, **kw)
+        _install_zoo(srv.control_plane, rng, 8, 8)
+        return srv
+
+    def test_async_results_match_sync(self):
+        rng = np.random.default_rng(11)
+        srv = self._server(max_inflight=3)
+        batches = []
+        for _ in range(7):
+            mids = rng.integers(100, 108, 64).astype(np.int32)
+            codes = rng.integers(-1000, 1000, (64, 8)).astype(np.int32)
+            batches.append(pk.encode_packets(jnp.asarray(mids),
+                                             jnp.int32(FRAC),
+                                             jnp.asarray(codes)))
+        futures = [srv.submit_async(p) for p in batches]
+        srv.drain()
+        for p, f in zip(batches, futures):
+            np.testing.assert_array_equal(np.asarray(f),
+                                          np.asarray(srv.process(p)))
+
+    def test_inflight_bounded_and_stats(self):
+        srv = self._server(max_inflight=2)
+        pkts = pk.encode_packets(jnp.int32(100), jnp.int32(FRAC),
+                                 jnp.zeros((32, 8), jnp.int32))
+        for _ in range(5):
+            srv.submit_async(pkts)
+        assert len(srv._inflight) <= 2
+        srv.drain()
+        assert not srv._inflight
+        st = srv.stats()
+        assert st["packets_per_s"] > 0
+        assert st["recompiles"] == 1
+
+    def test_install_mid_flight_zero_retraces(self):
+        """The acceptance property end-to-end: hot-swapping every model
+        between async submits never recompiles and next batches see the new
+        generation."""
+        rng = np.random.default_rng(13)
+        srv = self._server()
+        pkts = pk.encode_packets(jnp.int32(100), jnp.int32(FRAC),
+                                 jnp.full((16, 8), 64, jnp.int32))
+        srv.submit_async(pkts)
+        gen = srv.control_plane.version
+        _install_zoo(srv.control_plane, rng, 8, 8, scale=0.5)
+        srv.submit_async(pkts)
+        srv.drain()
+        assert srv.engine.trace_count == 1
+        assert srv.control_plane.version > gen

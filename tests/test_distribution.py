@@ -116,18 +116,18 @@ class TestCompressedAllReduce:
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
             import sys; sys.path.insert(0, "src")
             import jax, jax.numpy as jnp, numpy as np
-            from repro.distributed.collectives import compressed_all_reduce
-            mesh = jax.make_mesh((8,), ("d",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.distributed.collectives import compressed_all_reduce, shard_map
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((8,), ("d",))
             rng = np.random.default_rng(0)
             x = jnp.asarray(rng.normal(size=(8, 1000)), jnp.float32)
 
             def f(x):
                 return compressed_all_reduce(x, "d")
 
-            y = jax.jit(jax.shard_map(f, mesh=mesh,
-                                      in_specs=jax.sharding.PartitionSpec("d"),
-                                      out_specs=jax.sharding.PartitionSpec("d")))(x)
+            y = jax.jit(shard_map(f, mesh=mesh,
+                                  in_specs=jax.sharding.PartitionSpec("d"),
+                                  out_specs=jax.sharding.PartitionSpec("d")))(x)
             want = np.asarray(x).sum(0)
             got = np.asarray(y)[0]
             rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)

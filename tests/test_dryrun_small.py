@@ -25,13 +25,13 @@ _SCRIPT = textwrap.dedent("""
     from repro.distributed.constrain import activation_mesh
     from repro.distributed.hlo_cost import parse_hlo_cost
     from repro.distributed.sharding import logical_batch_sharding, make_plan
+    from repro.launch.mesh import make_mesh
     from repro.models import build_model
     from repro.optim import AdamWConfig, adamw_step
     from repro.optim import adamw as adamw_mod
 
     arch = sys.argv[1]
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = reduced(get_config(arch), d_model=256, n_heads=8,
                   n_kv_heads=4, head_dim=32, d_ff=512, accum_steps=1)
     model = build_model(cfg)
