@@ -1,0 +1,153 @@
+"""Gate the Fig-1 benchmark against a checked-in baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        BENCH_fig1.json benchmarks/baselines/BENCH_fig1.baseline.json
+
+Fails (exit 1) when any tracked throughput metric regresses by more than
+``--tolerance`` (default 30%) relative to the baseline, or when a boolean
+invariant (monotone Fig-1 trend, zero retraces) flips to false.  Improvements
+and noise inside the band pass.  ``--update`` rewrites the baseline from the
+current results instead of comparing (for intentional re-baselining on the
+machine that owns the baseline).
+
+Throughput metrics are machine-dependent, which is why the band is wide and
+the baseline records the machine's reduced-mode numbers; the boolean
+invariants and the ratio metrics (``speedup_vs_pr1``, hit rates) are
+machine-independent and carry most of the signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+# metric path → kind:
+#   "throughput"     — baseline-relative lower bound (machine-dependent;
+#                      skipped by --ratios-only)
+#   ("floor", x)     — absolute lower bound, the PR acceptance criterion
+#                      itself; machine-independent but NOT baseline-relative,
+#                      because under heavy background load both sides of a
+#                      ratio swing and the ratio itself gets noisy — the
+#                      acceptance floor is the stable contract
+#   "bool"           — must stay truthy if the baseline has it truthy
+TRACKED = {
+    ("mixed", "batched_pps"): "throughput",
+    ("mixed", "speedup_mixed"): ("floor", 3.0),   # PR-1 acceptance: >= 3x
+    ("mixed", "install_zero_retraces"): "bool",
+    ("pipeline", "pipeline_pps"): "throughput",
+    ("pipeline", "speedup_vs_pr1"): ("floor", 2.0),   # PR-2 acceptance
+    ("pipeline", "cold_short_circuit_rate"): ("floor", 0.45),  # ~50% dup
+    ("pipeline", "ragged_zero_retraces"): "bool",
+    ("trend_validated",): "bool",
+}
+
+
+def _get(doc: dict, path: tuple):
+    cur = doc
+    for p in path:
+        if not isinstance(cur, dict) or p not in cur:
+            return None
+        cur = cur[p]
+    return cur
+
+
+def _fig1_rows(doc: dict) -> dict:
+    return {r["features"]: r["packets_per_s"]
+            for r in doc.get("fig1_rows", [])}
+
+
+def compare(current: dict, baseline: dict, tolerance: float,
+            ratios_only: bool = False) -> list:
+    """Returns a list of human-readable failure strings (empty = pass).
+
+    ``ratios_only`` skips the absolute-throughput metrics (pkt/s), leaving
+    the machine-independent ratios and boolean invariants — the right gate
+    on CI runners whose raw speed differs from the machine that cut the
+    baseline."""
+    failures = []
+    floor = 1.0 - tolerance
+    for path, kind in TRACKED.items():
+        if ratios_only and kind == "throughput":
+            continue
+        base = _get(baseline, path)
+        cur = _get(current, path)
+        name = ".".join(path)
+        if isinstance(kind, tuple):  # ("floor", x): absolute acceptance bound
+            if cur is None:
+                failures.append(f"{name}: missing from current results")
+            elif cur < kind[1]:
+                failures.append(
+                    f"{name}: {cur:.4g} below the acceptance floor "
+                    f"{kind[1]:.4g}")
+            continue
+        if base is None:
+            continue  # metric added after the baseline was cut
+        if cur is None:
+            failures.append(f"{name}: missing from current results")
+            continue
+        if kind == "bool":
+            if bool(base) and not bool(cur):
+                failures.append(f"{name}: was true in baseline, now false")
+        else:
+            if cur < base * floor:
+                failures.append(
+                    f"{name}: {cur:.4g} < {floor:.0%} of baseline "
+                    f"{base:.4g} ({cur / base:.0%})")
+    if not ratios_only:
+        base_rows = _fig1_rows(baseline)
+        cur_rows = _fig1_rows(current)
+        for nf, base_pps in base_rows.items():
+            cur_pps = cur_rows.get(nf)
+            if cur_pps is None:
+                failures.append(f"fig1_rows[features={nf}]: missing")
+            elif cur_pps < base_pps * floor:
+                failures.append(
+                    f"fig1_rows[features={nf}].packets_per_s: {cur_pps:.4g} "
+                    f"< {floor:.0%} of baseline {base_pps:.4g} "
+                    f"({cur_pps / base_pps:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="freshly generated BENCH_fig1.json")
+    ap.add_argument("baseline", help="checked-in baseline json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression (default 0.30)")
+    ap.add_argument("--ratios-only", action="store_true",
+                    help="gate only machine-independent ratios and boolean "
+                         "invariants (for CI runners of unknown speed)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from current instead of "
+                         "comparing")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if current.get("reduced") != baseline.get("reduced"):
+        print(f"note: comparing reduced={current.get('reduced')} results "
+              f"against reduced={baseline.get('reduced')} baseline")
+    failures = compare(current, baseline, args.tolerance, args.ratios_only)
+    if failures:
+        print(f"PERF REGRESSION ({len(failures)} metric(s) beyond "
+              f"{args.tolerance:.0%}):")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    scope = "ratio/invariant" if args.ratios_only else "tracked"
+    print(f"perf gate OK (all {scope} metrics within {args.tolerance:.0%} "
+          f"of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -71,16 +71,32 @@ class DataPlaneEngine:
         Kernel backend for the fused path: ``"auto"`` (Pallas on TPU, jnp
         oracle on CPU), ``"pallas"`` (force kernel, interpreted off-TPU) or
         ``"ref"``.
+    kernel_variant:
+        Weight lane of the fused kernel (``kernels.KERNEL_VARIANTS``):
+        ``"int16"`` (default, int32-operand dot) or ``"int8"`` — the
+        saturating int8 weight-lane (int8×int8→int32 dot, v5e MXU native
+        rate).  The int8 lane requires the control plane to quantize weights
+        at ``weight_bits <= 8``; a wider format is rejected here so the
+        narrowing cast can never silently truncate installed models.
     """
 
     def __init__(self, control_plane: ControlPlane, *, max_features: int = 16,
                  taylor_order: int = 3, leaky_alpha: float = 0.01,
                  dispatch: str = "fused", backend: str = "auto",
+                 kernel_variant: str = "int16",
                  interpret_only: bool = False):
         if dispatch not in ("fused", "gather"):
             raise ValueError(f"unknown dispatch strategy: {dispatch!r}")
         if backend not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown kernel backend: {backend!r}")
+        if kernel_variant not in ("int16", "int8"):
+            raise ValueError(f"unknown kernel variant: {kernel_variant!r}")
+        if kernel_variant == "int8" and control_plane.fmt.total_bits > 8:
+            raise ValueError(
+                f"kernel_variant='int8' needs weight_bits <= 8, but the "
+                f"control plane quantizes at {control_plane.fmt.total_bits} "
+                "bits — construct it with ControlPlane(weight_bits=8)")
+        self.kernel_variant = kernel_variant
         self.cp = control_plane
         self.max_features = max_features
         self.taylor_order = taylor_order
@@ -107,7 +123,8 @@ class DataPlaneEngine:
         return fused_mlp_gather_ref(
             x, slot, tables.w, tables.b, tables.act, tables.layer_on,
             frac=self.frac, sig_coeffs=self._sig_coeffs,
-            leaky_alpha_q=self._leaky_alpha_q)
+            leaky_alpha_q=self._leaky_alpha_q,
+            lane_bits=8 if self.kernel_variant == "int8" else None)
 
     def _process_impl(self, pkts: jax.Array, tables: ModelTables) -> jax.Array:
         self.trace_count += 1  # python side effect: fires once per trace
@@ -129,7 +146,8 @@ class DataPlaneEngine:
                           tables.layer_on, frac=self.frac,
                           sig_coeffs=self._sig_coeffs,
                           leaky_alpha_q=self._leaky_alpha_q,
-                          backend=self.backend)
+                          backend=self.backend,
+                          variant=self.kernel_variant)
         else:
             x = self._forward_gathered(x, slot, tables)
 
@@ -170,6 +188,14 @@ class DataPlaneEngine:
     def add_seconds(self, dt: float) -> None:
         """Credit wall-clock spent by an external async drain loop."""
         self.stats["seconds"] += dt
+
+    def credit_packets(self, n: int) -> None:
+        """Adjust the served-packet counter on behalf of the ingress
+        pipeline: positive for packets it served without a device dispatch
+        (cache hits, coalesced duplicates), negative for dead padding rows
+        inside a dispatched batch — so ``packets_per_second()`` reflects
+        packets actually served, not device rows."""
+        self.stats["packets"] += int(n)
 
     def throughput_gbps(self) -> float:
         s = self.stats

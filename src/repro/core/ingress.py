@@ -1,0 +1,794 @@
+"""Zero-copy ingress pipeline: coalescing batch queue + duplicate-result cache.
+
+The data plane (``core/inference.py``) is batch-shaped: one jit'd program per
+``(batch, wire_len)`` shape.  Real ingress traffic is nothing like that —
+per-connection packet chunks arrive ragged, and on QoS/anomaly flows the same
+feature vector shows up over and over (per-flow telemetry repeats until the
+flow changes state).  Feeding ragged arrivals straight to the engine retraces
+per shape; feeding duplicates pays a full device round trip for bytes the
+device has already answered.
+
+This module is the host-side stage in front of the engine, split into the
+three pieces the paper's NIC gets for free from hardware:
+
+  * :class:`ResultCache` — a generation-aware egress-row cache.  The key is
+    the exact ingress wire row (Model ID, Scale, flags and the quantized
+    feature block — i.e. ``(model_id, quantized feature vector)`` by
+    construction) plus the control-plane **table generation**, so an
+    ``install()``/``remove()`` invalidates automatically: the generation
+    bump makes every cached key unreachable before the new tables can ever
+    serve a lookup.  Storage is a flat open-addressing hash table held in
+    numpy arrays, keyed on the wire row packed into uint64 words; lookups
+    and inserts for a whole packet chunk are single vectorized probe sweeps
+    — no per-packet Python on the hot path.
+  * :class:`IngressPipeline` — the coalescing queue.  ``submit()`` accepts a
+    ragged per-connection chunk, resolves cache hits immediately, dedupes the
+    misses (byte-identical packets in one chunk dispatch once), and packs
+    unique rows into **fixed-shape** staging batches; partially-filled
+    batches are padded with dead rows at ``flush()`` so the engine only ever
+    sees one shape — zero retraces no matter how ragged the arrivals are.
+    Host staging is multi-buffered: while batch N computes on the device,
+    batch N+1 is being packed into the next staging buffer (the buffer for a
+    dispatched batch is not reused until its results retire, so dispatch
+    hands the engine a stable view with no defensive copy).
+  * per-packet **tickets** — every submitted packet gets a ticket; results
+    (or :class:`PacketError` slots for malformed packets) are delivered in
+    exact submission order regardless of which packets hit the cache, which
+    were coalesced, and which rode which device batch.
+
+Packet-level flow::
+
+    submit(chunk) ──▶ validate ──▶ cache lookup ──▶ hit: resolve ticket
+                                        │miss
+                                        ▼
+                            dedupe (row-hash) ──▶ staging buffer ──▶ full?
+                                                        │ yes
+                                                        ▼
+                                   engine.run(batch, block=False)  (async)
+                                                        │ retire
+                                                        ▼
+                      scatter to tickets + cache.insert(generation at dispatch)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from .packet import FEATURE_BYTES, HEADER_BYTES
+
+__all__ = ["PacketError", "BatchError", "ResultCache", "IngressPipeline",
+           "pack_rows", "STATUS_PENDING", "STATUS_READY", "STATUS_ERROR"]
+
+STATUS_PENDING = 0
+STATUS_READY = 1
+STATUS_ERROR = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketError:
+    """Per-packet error slot: delivered in the packet's submission-order
+    position instead of an egress row."""
+
+    ticket: int
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchError:
+    """Batch-level rejection marker for the legacy ``PacketServer`` drain
+    path: occupies the rejected batch's submission-order slot and expands to
+    per-packet error slots."""
+
+    reason: str
+    n_packets: int
+
+    @property
+    def per_packet(self) -> List[PacketError]:
+        return [PacketError(ticket=i, reason=self.reason)
+                for i in range(self.n_packets)]
+
+
+# ---------------------------------------------------------------------------
+# Row hashing/packing — the shared vectorized primitives
+# ---------------------------------------------------------------------------
+
+# splitmix64 finalizer constants (public-domain mix; uint64 wrap-around is the
+# point, numpy unsigned arithmetic wraps silently)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+# deterministic odd multipliers, one per packed key word.  64 words cover
+# wire rows up to 512 bytes (max_features 126) — far beyond paper scale;
+# ResultCache validates the bound so an oversized key fails loudly at
+# construction instead of deep inside hash_words.
+_MULTS = ((np.random.default_rng(0xC0FFEE).integers(
+    0, 2 ** 63, 64, np.uint64) << np.uint64(1)) | np.uint64(1))
+
+
+def pack_rows(rows: np.ndarray, n_words: int) -> np.ndarray:
+    """Pack uint8 rows ``(N, L)`` into ``(N, n_words)`` uint64 words
+    (zero-padded).  Packing is injective for a fixed ``L``, so word equality
+    is byte equality — every comparison in the cache runs 8 bytes at a
+    time."""
+    n, length = rows.shape
+    buf = np.zeros((n, n_words * 8), np.uint8)
+    buf[:, :length] = rows
+    return buf.view(np.uint64).reshape(n, n_words)
+
+
+def hash_words(words: np.ndarray) -> np.ndarray:
+    """64-bit mixing hash of packed rows — vectorized over the chunk.
+
+    Unrolled column accumulation: one (N,) multiply-add per key word beats
+    the ``(N, K)`` temporary + axis reduce by a wide margin at chunk scale.
+    """
+    h = words[:, 0] * _MULTS[0]
+    for k in range(1, words.shape[1]):
+        h = h + words[:, k] * _MULTS[k]
+    h ^= h >> np.uint64(30)
+    h *= _MIX1
+    h ^= h >> np.uint64(27)
+    h *= _MIX2
+    h ^= h >> np.uint64(31)
+    return h
+
+
+def _dedup_rows(words: np.ndarray, hashes: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact first-occurrence dedup of packed rows.
+
+    Sorts by the 64-bit hash (a scalar sort — much cheaper than
+    ``np.unique(axis=0)``'s structured sort) and verifies full word equality
+    between sort-neighbours, so a hash collision can only ever *miss* a
+    coalescing opportunity, never merge two distinct packets.  Returns
+    ``(uniq_idx, inverse)`` with ``rows[uniq_idx][inverse] == rows``.
+    """
+    n = words.shape[0]
+    order = np.argsort(hashes, kind="stable")
+    sw = words[order]
+    new = np.empty(n, bool)
+    new[0] = True
+    new[1:] = (hashes[order][1:] != hashes[order][:-1]) \
+        | (sw[1:] != sw[:-1]).any(axis=1)
+    group = np.cumsum(new) - 1
+    inverse = np.empty(n, np.int64)
+    inverse[order] = group
+    return order[new], inverse
+
+
+# ---------------------------------------------------------------------------
+# ResultCache — vectorized open-addressing egress-row cache
+# ---------------------------------------------------------------------------
+
+
+class ResultCache:
+    """Generation-scoped ``ingress row → egress row`` cache.
+
+    * A lookup or insert whose ``generation`` is **newer** than the cache's
+      flushes the whole table first — entries computed under old tables can
+      never be served once ``ControlPlane.install()``/``remove()`` has
+      bumped the generation.  An insert carrying an **older** generation
+      (results of a batch that was already in flight when a writer swapped
+      tables) is dropped: stale rows never enter the table.
+    * ``drop_model()`` tombstones one model's entries (used by explicit
+      ``remove()`` paths; the generation bump already guarantees staleness
+      safety, this just releases the slots immediately).
+    * Storage is bounded: when the table passes its load limit it is flushed
+      wholesale (epoch eviction).  Cheap, branch-free, and a cache miss is
+      always safe — the pipeline simply dispatches.
+
+    Keys are ingress rows packed into uint64 words (:func:`pack_rows`); all
+    operations take the whole packet chunk at once and run as vectorized
+    numpy probe sweeps (double hashing over a power-of-two table).
+    """
+
+    def __init__(self, key_words: int, val_bytes: int, *,
+                 capacity_pow2: int = 15, max_probe: int = 32,
+                 load_limit: float = 0.7):
+        if not 0 < key_words <= _MULTS.size:
+            raise ValueError(
+                f"key_words={key_words} outside (0, {_MULTS.size}] — wire "
+                f"rows beyond {_MULTS.size * 8} bytes are not supported")
+        cap = 1 << capacity_pow2
+        self._cap = cap
+        self._mask = np.int64(cap - 1)
+        self._max_probe = max_probe
+        self._load_limit = load_limit
+        self.key_words = key_words
+        self.val_bytes = val_bytes
+        self._keys = np.zeros((cap, key_words), np.uint64)
+        self._vals = np.zeros((cap, val_bytes), np.uint8)
+        self._state = np.zeros(cap, np.uint8)  # 0 empty · 1 full · 2 tombstone
+        self._model = np.full(cap, -1, np.int64)
+        self._count = 0
+        self._gen = -1
+        self.hits = 0
+        self.misses = 0
+        self.insertions = 0
+        self.flushes = 0
+        self.stale_inserts_dropped = 0
+
+    # -- internals --------------------------------------------------------
+
+    def _slots_steps(self, hashes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        slot = (hashes & np.uint64(self._mask)).astype(np.int64)
+        # odd step → full-cycle double hashing over the power-of-two table
+        step = ((((hashes >> np.uint64(32)) << np.uint64(1)) | np.uint64(1))
+                .astype(np.int64)) & self._mask
+        return slot, step
+
+    def _sync_generation(self, generation: int) -> bool:
+        """Flush on a newer generation; return False if ``generation`` is
+        stale (strictly older than the cache's)."""
+        if generation == self._gen:
+            return True
+        if self._gen != -1 and generation < self._gen:
+            return False
+        self.clear()
+        self._gen = generation
+        return True
+
+    # -- public API -------------------------------------------------------
+
+    def clear(self) -> None:
+        self._state[:] = 0
+        self._count = 0
+        self.flushes += 1
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def generation(self) -> int:
+        return self._gen
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def lookup(self, words: np.ndarray, generation: int,
+               hashes: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Probe a whole chunk of packed rows.  Returns ``(hit_mask, vals)``
+        where ``hit_mask`` is ``(N,)`` bool and ``vals`` is
+        ``(hit_mask.sum(), val_bytes)`` — egress rows for the hits, in chunk
+        order."""
+        n = words.shape[0]
+        if n == 0 or not self._sync_generation(generation) or self._count == 0:
+            self.misses += n
+            return np.zeros(n, bool), np.zeros((0, self.val_bytes), np.uint8)
+        if hashes is None:
+            hashes = hash_words(words)
+        slot, _ = self._slots_steps(hashes)
+        # fast first round, no indirection: with load < load_limit almost
+        # every probe resolves at its home slot
+        st = self._state[slot]
+        match = (self._keys[slot] == words).all(axis=1) & (st == 1)
+        hit_slot = np.where(match, slot, np.int64(-1))
+        # keep probing through tombstones and colliding keys; an empty slot
+        # terminates the probe chain → definitive miss
+        pending = np.nonzero(~match & (st != 0))[0]
+        if pending.size:
+            _, step = self._slots_steps(hashes[pending])
+            cur = (slot[pending] + step) & self._mask
+            active = np.arange(pending.size)
+            for _ in range(self._max_probe - 1):
+                if active.size == 0:
+                    break
+                s = cur[active]
+                rows = pending[active]
+                st = self._state[s]
+                m = (self._keys[s] == words[rows]).all(axis=1) & (st == 1)
+                hit_slot[rows[m]] = s[m]
+                keep = ~m & (st != 0)
+                active = active[keep]
+                cur[active] = (cur[active] + step[active]) & self._mask
+        hits = hit_slot >= 0
+        n_hit = int(hits.sum())
+        self.hits += n_hit
+        self.misses += n - n_hit
+        return hits, self._vals[hit_slot[hits]]
+
+    def insert(self, words: np.ndarray, vals: np.ndarray,
+               model_ids: np.ndarray, generation: int,
+               hashes: Optional[np.ndarray] = None) -> int:
+        """Insert a chunk of ``(packed ingress row → egress row)`` pairs
+        computed under table ``generation``.  Returns the number of rows
+        admitted (stale generations and probe-exhausted rows are dropped —
+        the cache is best-effort by design)."""
+        n = words.shape[0]
+        if n == 0:
+            return 0
+        if not self._sync_generation(generation):
+            self.stale_inserts_dropped += n
+            return 0
+        if hashes is None:
+            hashes = hash_words(words)
+        # dedupe within the call so two identical rows never race one slot
+        uidx, _ = _dedup_rows(words, hashes)
+        if uidx.size != n:
+            words, vals = words[uidx], vals[uidx]
+            model_ids, hashes = model_ids[uidx], hashes[uidx]
+            n = uidx.size
+        if self._count + n > self._cap * self._load_limit:
+            self.clear()
+            self._gen = generation
+        slot, step = self._slots_steps(hashes)
+        admitted = 0
+
+        def _settle(rows: np.ndarray, s: np.ndarray) -> np.ndarray:
+            """One probe round for rows (indices into the chunk) at slots
+            ``s``: refresh matches, claim empties/tombstones (np.unique
+            arbitration — distinct rows colliding on one empty slot must
+            not both write), return the still-unresolved row indices."""
+            nonlocal admitted
+            st = self._state[s]
+            full = st == 1
+            match = (self._keys[s] == words[rows]).all(axis=1) & full
+            if match.any():
+                self._vals[s[match]] = vals[rows[match]]
+            resolved = match
+            claim = ~full & ~match
+            if claim.any():
+                ci = np.nonzero(claim)[0]
+                _, first = np.unique(s[ci], return_index=True)
+                wi = ci[first]
+                ws = s[wi]
+                rw = rows[wi]
+                self._keys[ws] = words[rw]
+                self._vals[ws] = vals[rw]
+                self._model[ws] = model_ids[rw]
+                self._state[ws] = 1
+                self._count += ws.size
+                admitted += ws.size
+                resolved = resolved.copy()
+                resolved[wi] = True
+            return rows[~resolved]
+
+        pending = _settle(np.arange(n), slot)  # fast home-slot round
+        if pending.size:
+            stepp = step[pending]
+            cur = (slot[pending] + stepp) & self._mask
+            for _ in range(self._max_probe - 1):
+                if pending.size == 0:
+                    break
+                before = pending
+                pending = _settle(before, cur)
+                if pending.size:
+                    keep = np.isin(before, pending, assume_unique=True)
+                    stepp = stepp[keep]
+                    cur = (cur[keep] + stepp) & self._mask
+        self.insertions += admitted
+        return admitted
+
+    def drop_model(self, model_id: int) -> int:
+        """Tombstone every entry belonging to ``model_id``; returns the
+        number of entries dropped."""
+        sel = (self._state == 1) & (self._model == int(model_id))
+        n = int(sel.sum())
+        if n:
+            self._state[sel] = 2
+            self._count -= n
+        return n
+
+    def contains_model(self, model_id: int) -> bool:
+        return bool(((self._state == 1) & (self._model == int(model_id))).any())
+
+
+# ---------------------------------------------------------------------------
+# IngressPipeline — coalescing fixed-shape batch queue over the engine
+# ---------------------------------------------------------------------------
+
+
+class _RowStore:
+    """Growable 2-D uint8 row store (amortized append, vectorized reads)."""
+
+    def __init__(self, width: int, cap: int = 1024):
+        self._a = np.empty((cap, width), np.uint8)
+        self.n = 0
+
+    def ensure(self, n: int) -> None:
+        if n > self._a.shape[0]:
+            cap = self._a.shape[0]
+            while cap < n:
+                cap *= 2
+            a = np.empty((cap, self._a.shape[1]), np.uint8)
+            a[: self.n] = self._a[: self.n]
+            self._a = a
+
+    @property
+    def a(self) -> np.ndarray:
+        return self._a
+
+    def reset(self) -> None:
+        self.n = 0
+
+
+@dataclasses.dataclass
+class _InFlight:
+    future: object          # engine device future (egress batch)
+    base: int               # global miss index of row 0
+    count: int              # real (non-padding) rows in the batch
+    buf_idx: int            # staging buffer holding the ingress rows
+    generation: Optional[int]  # table generation at dispatch (None = ambiguous)
+
+
+@dataclasses.dataclass
+class _ChunkRecord:
+    tickets: np.ndarray     # tickets of this chunk's cache-missing packets
+    miss_idx: np.ndarray    # global miss index per missing packet
+    hi: int                 # 1 + max(miss_idx): resolvable once retired past
+
+
+class IngressPipeline:
+    """Coalescing ingress queue + result cache in front of a
+    :class:`~repro.core.inference.DataPlaneEngine`.
+
+    Parameters
+    ----------
+    engine:
+        The batched data-plane engine.  Its ``max_features`` fixes the wire
+        shape; its control plane's generation counter drives cache
+        invalidation.
+    batch_size:
+        Fixed device batch (every dispatch is exactly this many rows — ragged
+        arrivals never retrace).
+    max_inflight:
+        Device batches in flight before dispatch blocks on the oldest.
+        ``max_inflight + 1`` staging buffers are held so the buffer backing a
+        dispatched batch is never written until its results retire.
+    use_cache / cache_capacity_pow2:
+        Duplicate-result short-circuit (on by default).
+    """
+
+    def __init__(self, engine, *, batch_size: int = 2048,
+                 max_inflight: int = 2, use_cache: bool = True,
+                 cache_capacity_pow2: int = 15):
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        if max_inflight <= 0:
+            raise ValueError("max_inflight must be positive")
+        self.engine = engine
+        self.cp = engine.cp
+        self.batch_size = batch_size
+        self.max_inflight = max_inflight
+        self.wire_bytes = HEADER_BYTES + FEATURE_BYTES * engine.max_features
+        out_feats = min(engine.max_features, int(engine.cp.max_width))
+        self.out_bytes = HEADER_BYTES + FEATURE_BYTES * out_feats
+        self.key_words = (self.wire_bytes + 7) // 8
+        self.cache: Optional[ResultCache] = (
+            ResultCache(self.key_words, self.out_bytes,
+                        capacity_pow2=cache_capacity_pow2)
+            if use_cache else None)
+        # pending-window index: rows staged or in flight → global miss index,
+        # so a duplicate arriving before its original has even retired
+        # coalesces onto the same dispatch instead of re-dispatching.  Same
+        # generation discipline as the result cache (values are 8-byte
+        # little-endian miss indices).
+        self._pending: Optional[ResultCache] = (
+            ResultCache(self.key_words, 8,
+                        capacity_pow2=cache_capacity_pow2)
+            if use_cache else None)
+
+        if self.key_words > _MULTS.size:
+            raise ValueError(
+                f"wire rows of {self.wire_bytes} bytes exceed the "
+                f"{_MULTS.size * 8}-byte hashing bound "
+                f"(max_features={engine.max_features})")
+
+        # double-buffered host staging: one buffer being packed + up to
+        # max_inflight whose batches are still on the device.  The packed
+        # words/hashes computed at submit time ride along so the retire-side
+        # cache insert never re-packs or re-hashes a row.
+        self._staging = [np.zeros((batch_size, self.wire_bytes), np.uint8)
+                         for _ in range(max_inflight + 1)]
+        self._staging_words = [np.zeros((batch_size, self.key_words),
+                                        np.uint64)
+                               for _ in range(max_inflight + 1)]
+        self._staging_hashes = [np.zeros(batch_size, np.uint64)
+                                for _ in range(max_inflight + 1)]
+        self._sbuf = 0
+        self._fill = 0
+
+        self._inflight: Deque[_InFlight] = deque()
+        self._chunks: Deque[_ChunkRecord] = deque()
+
+        self._n_tickets = 0
+        self._results = _RowStore(self.out_bytes)
+        self._status = np.zeros(1024, np.uint8)
+        self._errors: Dict[int, PacketError] = {}
+
+        self._n_miss = 0       # global miss-row indices assigned so far
+        self._disp_base = 0    # global index of the next row to dispatch
+        self._miss_done = 0    # retired prefix of the miss-row sequence
+        self._miss_out = _RowStore(self.out_bytes)
+
+        self.stats = {"packets": 0, "cache_hits": 0, "coalesced": 0,
+                      "dispatched_rows": 0, "padded_rows": 0, "batches": 0,
+                      "errors": 0}
+
+    # -- ticket bookkeeping ------------------------------------------------
+
+    def _alloc_tickets(self, n: int) -> np.ndarray:
+        t0 = self._n_tickets
+        self._n_tickets += n
+        self._results.ensure(self._n_tickets)
+        self._results.n = self._n_tickets
+        if self._n_tickets > self._status.shape[0]:
+            cap = self._status.shape[0]
+            while cap < self._n_tickets:
+                cap *= 2
+            status = np.zeros(cap, np.uint8)
+            status[: t0] = self._status[: t0]
+            self._status = status
+        return np.arange(t0, t0 + n, dtype=np.int64)
+
+    def _mark_errors(self, tickets: np.ndarray, reason: str) -> None:
+        self._status[tickets] = STATUS_ERROR
+        for t in tickets.tolist():
+            self._errors[t] = PacketError(ticket=t, reason=reason)
+        self.stats["errors"] += tickets.size
+
+    # -- ingress -----------------------------------------------------------
+
+    def submit(self, pkts) -> Tuple[int, int]:
+        """Accept one ragged per-connection chunk of ingress packets.
+
+        Returns ``(first_ticket, n_packets)``.  Malformed packets occupy
+        error slots; everything else resolves from cache or rides a device
+        batch.  Never blocks on the device unless the in-flight window is
+        full.
+        """
+        arr = np.asarray(pkts)
+        if arr.ndim != 2:
+            raise ValueError("packet chunk must be 2-D (n_packets, wire_len)")
+        arr = np.ascontiguousarray(arr, np.uint8)
+        n, length = arr.shape
+        first = self._n_tickets
+        tickets = self._alloc_tickets(n)
+        if n == 0:
+            return first, 0
+        self.stats["packets"] += n
+        if length < HEADER_BYTES or length > self.wire_bytes:
+            self._mark_errors(
+                tickets, f"wire length {length} outside "
+                         f"[{HEADER_BYTES}, {self.wire_bytes}]")
+            return first, n
+
+        if length < self.wire_bytes:  # fixed wire shape: zero-pad the tail
+            rows = np.zeros((n, self.wire_bytes), np.uint8)
+            rows[:, :length] = arr
+        else:
+            rows = arr
+
+        # per-packet validation: declared feature count must fit the parser's
+        # static bound (P4 header-stack depth)
+        fcnt = rows[:, 2].astype(np.int64)
+        bad = fcnt > self.engine.max_features
+        if bad.any():
+            self._mark_errors(
+                tickets[bad],
+                f"feature count exceeds max_features={self.engine.max_features}")
+            good = ~bad
+            rows_g = rows[good]
+            tickets_g = tickets[good]
+            if rows_g.shape[0] == 0:
+                return first, n
+        else:
+            rows_g, tickets_g = rows, tickets
+
+        words = pack_rows(rows_g, self.key_words)
+        hashes = hash_words(words)
+        generation = self.cp.version
+        if self.cache is not None:
+            hit_mask, hit_vals = self.cache.lookup(words, generation, hashes)
+        else:
+            hit_mask = np.zeros(rows_g.shape[0], bool)
+        if hit_mask.any():
+            ht = tickets_g[hit_mask]
+            self._results.a[ht] = hit_vals
+            self._status[ht] = STATUS_READY
+            n_hit = int(hit_mask.sum())
+            self.stats["cache_hits"] += n_hit
+            self.engine.credit_packets(n_hit)  # served without a dispatch
+            miss = ~hit_mask
+            miss_rows = rows_g[miss]
+            miss_tickets = tickets_g[miss]
+            miss_words, miss_hashes = words[miss], hashes[miss]
+        else:
+            miss_rows, miss_tickets = rows_g, tickets_g
+            miss_words, miss_hashes = words, hashes
+        if miss_rows.shape[0] == 0:
+            return first, n
+
+        # coalesce byte-identical packets within the chunk: uniques dispatch
+        # once, every duplicate ticket rides the same result row
+        uniq_idx, inverse = _dedup_rows(miss_words, miss_hashes)
+        n_uniq = uniq_idx.size
+        uniq_words = miss_words[uniq_idx]
+        uniq_hashes = miss_hashes[uniq_idx]
+
+        # coalesce against the pending window: a unique row already staged or
+        # in flight attaches to that dispatch's miss index instead of paying
+        # a second device trip
+        uniq_global = np.empty(n_uniq, np.int64)
+        if self._pending is not None:
+            pend_mask, pend_vals = self._pending.lookup(
+                uniq_words, generation, uniq_hashes)
+            if pend_mask.any():
+                uniq_global[pend_mask] = pend_vals.view(np.int64).ravel()
+            fresh = ~pend_mask
+        else:
+            fresh = np.ones(n_uniq, bool)
+        n_fresh = int(fresh.sum())
+        base = self._n_miss
+        uniq_global[fresh] = base + np.arange(n_fresh)
+        self._n_miss += n_fresh
+        n_coalesced = miss_rows.shape[0] - n_fresh
+        self.stats["coalesced"] += n_coalesced
+        self.engine.credit_packets(n_coalesced)  # ride an existing dispatch
+
+        miss_idx = uniq_global[inverse]
+        self._chunks.append(_ChunkRecord(
+            tickets=miss_tickets,
+            miss_idx=miss_idx,
+            hi=int(miss_idx.max()) + 1))
+        if n_fresh:
+            fresh_rows = miss_rows[uniq_idx[fresh]]
+            if self._pending is not None:
+                idx_bytes = uniq_global[fresh].reshape(-1, 1).view(np.uint8)
+                mids = (fresh_rows[:, 0].astype(np.int64) << 8) \
+                    | fresh_rows[:, 1]
+                self._pending.insert(uniq_words[fresh], idx_bytes, mids,
+                                     generation, uniq_hashes[fresh])
+            self._stage(fresh_rows, uniq_words[fresh], uniq_hashes[fresh])
+        self._resolve_ready_chunks()
+        return first, n
+
+    def _stage(self, rows: np.ndarray, words: np.ndarray,
+               hashes: np.ndarray) -> None:
+        """Append unique miss rows (plus their packed words/hashes) to
+        staging, dispatching every time the staging buffer reaches the fixed
+        batch size."""
+        pos = 0
+        total = rows.shape[0]
+        while pos < total:
+            space = self.batch_size - self._fill
+            take = min(space, total - pos)
+            lo, hi = self._fill, self._fill + take
+            self._staging[self._sbuf][lo:hi] = rows[pos: pos + take]
+            self._staging_words[self._sbuf][lo:hi] = words[pos: pos + take]
+            self._staging_hashes[self._sbuf][lo:hi] = hashes[pos: pos + take]
+            self._fill += take
+            pos += take
+            if self._fill == self.batch_size:
+                self._dispatch()
+
+    def _dispatch(self) -> None:
+        if self._fill == 0:
+            return
+        while len(self._inflight) >= self.max_inflight:
+            self._retire_oldest()
+        buf = self._staging[self._sbuf]
+        count = self._fill
+        if count < self.batch_size:
+            # dead padding rows: all-zero header → Model ID 0, which the
+            # id_map resolves to "not installed" → zeroed egress, discarded
+            buf[count:] = 0
+            self.stats["padded_rows"] += self.batch_size - count
+            # engine.run counts the whole batch — padding is not traffic
+            self.engine.credit_packets(count - self.batch_size)
+        gen_before = self.cp.version
+        future = self.engine.run(buf, block=False)
+        generation = gen_before if self.cp.version == gen_before else None
+        # staging order == global miss-index order, so this batch covers
+        # exactly the next `count` rows of the dispatch sequence
+        self._inflight.append(_InFlight(
+            future=future, base=self._disp_base, count=count,
+            buf_idx=self._sbuf, generation=generation))
+        self._disp_base += count
+        self.stats["dispatched_rows"] += self.batch_size
+        self.stats["batches"] += 1
+        self._sbuf = (self._sbuf + 1) % len(self._staging)
+        self._fill = 0
+
+    # -- retire ------------------------------------------------------------
+
+    def _retire_oldest(self) -> None:
+        rec = self._inflight.popleft()
+        out = np.asarray(rec.future)  # blocks until the device batch is done
+        hi = rec.base + rec.count
+        self._miss_out.ensure(hi)
+        self._miss_out.a[rec.base: hi] = out[: rec.count, : self.out_bytes]
+        self._miss_out.n = hi
+        self._miss_done = hi
+        if self.cache is not None and rec.generation is not None:
+            rows = self._staging[rec.buf_idx][: rec.count]
+            words = self._staging_words[rec.buf_idx][: rec.count]
+            hashes = self._staging_hashes[rec.buf_idx][: rec.count]
+            mids = (rows[:, 0].astype(np.int64) << 8) | rows[:, 1]
+            self.cache.insert(words, self._miss_out.a[rec.base: hi], mids,
+                              rec.generation, hashes)
+        self._resolve_ready_chunks()
+
+    def _resolve_ready_chunks(self) -> None:
+        """Deliver results for head chunks whose every miss row has retired
+        (chunks attaching only to already-retired rows resolve straight from
+        submit — no further device traffic involved)."""
+        while self._chunks and self._chunks[0].hi <= self._miss_done:
+            ch = self._chunks.popleft()
+            self._results.a[ch.tickets] = self._miss_out.a[ch.miss_idx]
+            self._status[ch.tickets] = STATUS_READY
+
+    def flush(self) -> None:
+        """Dispatch the partial staging batch (padded to the fixed shape) and
+        retire every in-flight batch; afterwards every submitted ticket is
+        READY or ERROR."""
+        self._dispatch()
+        while self._inflight:
+            self._retire_oldest()
+        self._resolve_ready_chunks()
+        assert not self._chunks, "unresolved chunks after full retire"
+
+    # -- egress ------------------------------------------------------------
+
+    def results_array(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized egress view: ``(status, rows)`` over all tickets in
+        submission order (rows of ERROR tickets are unspecified).  Call
+        :meth:`flush` first to guarantee nothing is PENDING."""
+        n = self._n_tickets
+        return self._status[:n].copy(), self._results.a[:n].copy()
+
+    def drain(self) -> List[Union[np.ndarray, PacketError]]:
+        """Flush, then return one entry per submitted packet in submission
+        order — an egress row, or a :class:`PacketError` slot — and reset
+        ticket state (the cache persists across drains)."""
+        self.flush()
+        status, rows = self.results_array()
+        if not self._errors:  # common case: one vectorized unpack
+            out: List[Union[np.ndarray, PacketError]] = list(rows)
+        else:
+            out = [self._errors[t] if status[t] == STATUS_ERROR else rows[t]
+                   for t in range(self._n_tickets)]
+        self.reset_tickets()
+        return out
+
+    def reset_tickets(self) -> None:
+        """Forget delivered tickets/results (between serving windows).
+
+        Any unfinished work is discarded: staged-but-undispatched rows are
+        dropped and in-flight batches are retired to the floor (blocking
+        first, so a staging buffer is never overwritten while the device
+        may still read it).  Miss indices restart at zero, so stale chunk
+        records or pending-window mappings must never survive the reset.
+        """
+        for rec in self._inflight:
+            rec.future.block_until_ready()
+        self._inflight.clear()
+        self._chunks.clear()
+        self._fill = 0
+        self._n_tickets = 0
+        self._results.reset()
+        self._status[:] = 0
+        self._errors.clear()
+        self._n_miss = 0
+        self._disp_base = 0
+        self._miss_done = 0
+        self._miss_out.reset()
+        if self._pending is not None:
+            self._pending.clear()
+
+    # -- maintenance hooks -------------------------------------------------
+
+    def on_model_removed(self, model_id: int) -> None:
+        """Drop a removed model's cached egress rows immediately (the
+        generation bump already makes them unreachable; this frees slots)."""
+        if self.cache is not None:
+            self.cache.drop_model(model_id)
+
+    def cache_hit_rate(self) -> float:
+        return self.cache.hit_rate() if self.cache is not None else 0.0

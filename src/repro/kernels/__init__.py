@@ -5,7 +5,12 @@
   * ``fixedpoint_mlp``     — fused multi-model MLP: the whole batched
                              data-plane layer loop (masked Model-ID GEMM,
                              bias, requantize, opcode-selected activation)
-                             in one kernel over the stacked tables
+                             in one kernel over the stacked tables.  Two
+                             weight-lane variants (``KERNEL_VARIANTS``):
+                             ``"int16"`` (int32-operand dot) and ``"int8"``
+                             (saturating int8 lane, int8×int8→int32 dot —
+                             v5e MXU native rate), both bit-exact against
+                             their jnp oracles
   * ``wkv_scan``           — chunked RWKV-6 WKV scan with the recurrent
                              state resident in VMEM across chunks (the
                              §Perf rwkv hillclimb's end-state)
@@ -15,8 +20,10 @@ dispatch by platform (TPU: native Pallas; CPU: oracle / interpret mode).
 """
 
 from . import ops, ref, wkv_scan
-from .ops import fixedpoint_matmul, fused_mlp, taylor_activation
+from .ops import (KERNEL_VARIANTS, fixedpoint_matmul, fused_mlp,
+                  taylor_activation)
 from .wkv_scan import wkv_scan_pallas
 
 __all__ = ["ops", "ref", "wkv_scan", "fixedpoint_matmul",
-           "taylor_activation", "fused_mlp", "wkv_scan_pallas"]
+           "taylor_activation", "fused_mlp", "wkv_scan_pallas",
+           "KERNEL_VARIANTS"]

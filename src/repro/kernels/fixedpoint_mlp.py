@@ -40,12 +40,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# The integer semantics (rounding shift, opcode-gated activation) live in
-# exactly one place — ref.py — and are traced into the kernel from there, so
-# the kernel/oracle bit-exact contract cannot drift.
-from .ref import _select_activation_ref, rounding_rshift
+# The integer semantics (rounding shift, opcode-gated activation, lane
+# saturation) live in exactly one place — ref.py — and are traced into the
+# kernel from there, so the kernel/oracle bit-exact contract cannot drift.
+from .ref import _select_activation_ref, lane_clamp, rounding_rshift
 
-__all__ = ["fixedpoint_mlp_pallas", "BB"]
+__all__ = ["fixedpoint_mlp_pallas", "BB", "KERNEL_VARIANTS"]
+
+# Weight-lane variants of the fused kernel:
+#   * "int16" — the PR-1 lane: int32 operands into the dot (weights encoded
+#     at up to 16 bits), plain int32 MXU accumulation.
+#   * "int8"  — the int8 weight-lane (ROADMAP: v5e MXU native-rate variant):
+#     weights are int8 codes, feature codes are saturated into the int8 lane
+#     at entry and after every layer's requantize+activation, and the layer
+#     dot is an int8×int8→int32 contraction.  Bit-exact against
+#     ``ref.fused_mlp_ref(..., lane_bits=8)``.
+KERNEL_VARIANTS = ("int16", "int8")
 
 # Batch-tile rows per grid step.  The lane-dim (table width W) rides along
 # unpadded: at paper scale W ≤ 32 and the whole working set is VMEM-tiny.
@@ -54,18 +64,25 @@ BB = 256
 
 def _kernel(x_ref, slot_ref, w_ref, b_ref, act_ref, on_ref, o_ref, *,
             n_layers: int, n_models: int, frac: int, sig_coeffs: tuple,
-            leaky_alpha_q: int):
+            leaky_alpha_q: int, variant: str):
     x = x_ref[...]  # (bb, W) int32 feature codes
     slot = slot_ref[...]  # (bb, 1) int32, pre-clamped to [0, M)
     bb, width = x.shape
+    lane_bits = 8 if variant == "int8" else None
 
     m_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, n_models), 1)
     onehot = (slot == m_iota).astype(jnp.int32)  # (bb, M)
 
+    x = lane_clamp(x, lane_bits)
     for l in range(n_layers):  # static: max_layers is a synthesis-time bound
         # Model-ID dispatch fused into the GEMM: mask, then contract the
         # combined (model, feature) axis against the stacked layer table.
         z = (onehot[:, :, None] * x[:, None, :]).reshape(bb, n_models * width)
+        if variant == "int8":
+            # the saturated codes fit int8 exactly, so narrowing both dot
+            # operands is lossless — and on v5e runs at the MXU's native
+            # int8 rate (w_ref already carries int8 codes)
+            z = z.astype(jnp.int8)
         acc = jax.lax.dot_general(z, w_ref[l],
                                   (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.int32)
@@ -79,6 +96,7 @@ def _kernel(x_ref, slot_ref, w_ref, b_ref, act_ref, on_ref, o_ref, *,
         y = _select_activation_ref(y, opcode, frac=frac,
                                    sig_coeffs=sig_coeffs,
                                    leaky_alpha_q=leaky_alpha_q)
+        y = lane_clamp(y, lane_bits)
         on = jax.lax.dot_general(onehot, on_ref[l],
                                  (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.int32) > 0
@@ -89,17 +107,19 @@ def _kernel(x_ref, slot_ref, w_ref, b_ref, act_ref, on_ref, o_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("frac", "sig_coeffs",
                                              "leaky_alpha_q", "bb",
-                                             "interpret"))
+                                             "variant", "interpret"))
 def fixedpoint_mlp_pallas(x_q: jax.Array, slot: jax.Array, w: jax.Array,
                           b: jax.Array, act: jax.Array, layer_on: jax.Array,
                           *, frac: int, sig_coeffs: tuple,
                           leaky_alpha_q: int, bb: int = BB,
+                          variant: str = "int16",
                           interpret: bool = False) -> jax.Array:
     """Fused multi-model MLP forward on integer codes.
 
     x_q       (B, W)        int32 feature codes at ``frac`` fractional bits
     slot      (B, 1)        int32 table slot per packet, in ``[0, M)``
-    w         (L, M·W, W)   int32 stacked weight codes (layer-major)
+    w         (L, M·W, W)   stacked weight codes, layer-major — int32 for
+                            ``variant="int16"``, int8 for ``variant="int8"``
     b         (L, M, W)     int32 bias codes at ``2·frac`` bits
     act       (L, M, 1)     int32 activation opcodes
     layer_on  (L, M, 1)     int32 layer-exists flags
@@ -108,6 +128,8 @@ def fixedpoint_mlp_pallas(x_q: jax.Array, slot: jax.Array, w: jax.Array,
     ``B % bb == 0`` (the ops.py wrapper pads).  The tables ride whole into
     VMEM each grid step (M·L·W² ≤ a few hundred KiB at paper scale).
     """
+    if variant not in KERNEL_VARIANTS:
+        raise ValueError(f"unknown kernel variant: {variant!r}")
     n_batch, width = x_q.shape
     n_layers, mw, _ = w.shape
     n_models = mw // width
@@ -120,7 +142,7 @@ def fixedpoint_mlp_pallas(x_q: jax.Array, slot: jax.Array, w: jax.Array,
         functools.partial(_kernel, n_layers=n_layers, n_models=n_models,
                           frac=frac,
                           sig_coeffs=tuple(int(c) for c in sig_coeffs),
-                          leaky_alpha_q=leaky_alpha_q),
+                          leaky_alpha_q=leaky_alpha_q, variant=variant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, width), lambda i: (i, 0)),

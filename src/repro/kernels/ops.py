@@ -23,10 +23,11 @@ import numpy as np
 
 from . import ref
 from .fixedpoint_matmul import BK, BM, BN, fixedpoint_matmul_pallas
-from .fixedpoint_mlp import BB, fixedpoint_mlp_pallas
+from .fixedpoint_mlp import BB, KERNEL_VARIANTS, fixedpoint_mlp_pallas
 from .taylor_activation import BC, BR, taylor_activation_pallas
 
-__all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp", "on_tpu"]
+__all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp", "on_tpu",
+           "KERNEL_VARIANTS"]
 
 
 def on_tpu() -> bool:
@@ -60,7 +61,7 @@ def fixedpoint_matmul(x_codes: jax.Array, w_codes: jax.Array,
 def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
               act: jax.Array, layer_on: jax.Array, *, frac: int,
               sig_coeffs, leaky_alpha_q: int,
-              backend: str = "auto") -> jax.Array:
+              backend: str = "auto", variant: str = "int16") -> jax.Array:
     """Fused multi-model fixed-point MLP over *stacked* control-plane tables.
 
     Layout prep lives here so callers hand over tables exactly as the
@@ -74,13 +75,24 @@ def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
     feature) axis — and a batch padded to the tile size.  Padded rows run
     slot 0 and are sliced off (outputs for real rows are unaffected: the
     masked GEMM is row-independent).
+
+    ``variant`` selects the weight lane (``kernels.KERNEL_VARIANTS``):
+    ``"int16"`` is the PR-1 int32-operand dot; ``"int8"`` saturates feature
+    codes into the int8 lane per layer and narrows both dot operands to int8
+    (v5e MXU native rate).  Weight codes must already fit int8 — install
+    models through a ``ControlPlane(weight_bits=8)``; the engine rejects an
+    int8-variant configuration over a wider weight format rather than let
+    the lane cast silently truncate a model the caller believes is 16-bit.
     """
     if backend not in ("auto", "pallas", "ref"):
         raise ValueError(f"unknown backend: {backend!r}")
+    if variant not in KERNEL_VARIANTS:
+        raise ValueError(f"unknown kernel variant: {variant!r}")
     n_batch, width = x_q.shape
     n_models, n_layers = act.shape
     use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
     coeffs = tuple(int(c) for c in np.asarray(sig_coeffs).tolist())
+    lane_bits = 8 if variant == "int8" else None
     if backend == "auto" and not on_tpu():
         # CPU lowering: XLA:CPU scalarizes wide s32 GEMMs, so the masked-GEMM
         # form is slow there — the bit-identical gathered batched-matvec
@@ -88,7 +100,8 @@ def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
         # Still one XLA program for the whole layer loop.
         return ref.fused_mlp_gather_ref(
             x_q, slot.astype(jnp.int32), w, b, act, layer_on, frac=frac,
-            sig_coeffs=coeffs, leaky_alpha_q=leaky_alpha_q)
+            sig_coeffs=coeffs, leaky_alpha_q=leaky_alpha_q,
+            lane_bits=lane_bits)
     # Layer-major stacked operands for the kernel/oracle (masked-GEMM form).
     # These transposes are retraced per batch; they scale with M·L·W² (table
     # size, ~KBs at paper scale), not batch size.  Hoisting them into the
@@ -104,12 +117,19 @@ def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
     if not use_pallas:  # backend == "ref": the literal kernel oracle
         return ref.fused_mlp_ref(x_q, slot2, wl, bl, al, onl, frac=frac,
                                  sig_coeffs=coeffs,
-                                 leaky_alpha_q=leaky_alpha_q)
+                                 leaky_alpha_q=leaky_alpha_q,
+                                 lane_bits=lane_bits)
+    if variant == "int8":
+        # the int8 lane feeds the MXU int8 weight codes directly; the cast
+        # is exact because the control plane's weight_bits=8 format already
+        # saturated the codes into the lane
+        wl = wl.astype(jnp.int8)
     xp = _pad_to(x_q, (BB, 1))
     sp = _pad_to(slot2, (BB, 1))
     out = fixedpoint_mlp_pallas(xp, sp, wl, bl, al, onl, frac=frac,
                                 sig_coeffs=coeffs,
                                 leaky_alpha_q=leaky_alpha_q,
+                                variant=variant,
                                 interpret=not on_tpu())
     return out[:n_batch]
 

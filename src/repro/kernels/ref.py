@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "fused_mlp_ref",
-           "fused_mlp_gather_ref", "rounding_rshift", "wkv_scan_ref"]
+           "fused_mlp_gather_ref", "rounding_rshift", "lane_clamp",
+           "wkv_scan_ref"]
 
 
 def wkv_scan_ref(a: jax.Array, b: jax.Array, v: jax.Array, tot: jax.Array,
@@ -43,6 +44,15 @@ def rounding_rshift(x: jax.Array, shift: int) -> jax.Array:
     rounding = jnp.where(x >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1
                          ).astype(x.dtype)
     return jnp.right_shift(x + rounding, shift)
+
+
+def lane_clamp(x: jax.Array, lane_bits: int | None) -> jax.Array:
+    """Saturate codes into a ``lane_bits``-wide signed lane (the int8
+    weight-lane variant's requantize boundary); identity when ``None``."""
+    if lane_bits is None:
+        return x
+    hi = (1 << (lane_bits - 1)) - 1
+    return jnp.clip(x, -hi - 1, hi)
 
 
 def fixedpoint_matmul_ref(x_codes: jax.Array, w_codes: jax.Array,
@@ -87,7 +97,8 @@ def _select_activation_ref(y: jax.Array, opcode: jax.Array, *, frac: int,
 
 def fused_mlp_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
                   act: jax.Array, layer_on: jax.Array, *, frac: int,
-                  sig_coeffs, leaky_alpha_q: int) -> jax.Array:
+                  sig_coeffs, leaky_alpha_q: int,
+                  lane_bits: int | None = None) -> jax.Array:
     """Oracle for the fused multi-model MLP kernel — identical masked-GEMM
     formulation in plain jnp.  This is the *cross-check* path
     (``backend="ref"``): the production CPU lowering is
@@ -98,13 +109,21 @@ def fused_mlp_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
     Shapes as in ``fixedpoint_mlp_pallas``: x_q (B, W) int32; slot (B, 1)
     int32 in [0, M); w (L, M·W, W) int32; b (L, M, W) int32; act/layer_on
     (L, M, 1) int32.
+
+    ``lane_bits=8`` is the **int8 weight-lane** contract: feature codes are
+    saturated into the int8 lane on entry and after every layer's
+    requantize+activation, and weight codes are assumed to already fit int8
+    (the control plane's ``weight_bits=8`` format).  The arithmetic below is
+    int32 throughout, which is bit-identical to an int8×int8→int32 MXU dot
+    over the same saturated values — that is the oracle the Pallas
+    ``variant="int8"`` kernel must reproduce.
     """
     n_batch, width = x_q.shape
     n_layers, mw, _ = w.shape
     n_models = mw // width
     onehot = (slot == jnp.arange(n_models, dtype=jnp.int32)[None, :]
               ).astype(jnp.int32)  # (B, M)
-    x = x_q
+    x = lane_clamp(x_q, lane_bits)
     for l in range(n_layers):
         z = (onehot[:, :, None] * x[:, None, :]).reshape(n_batch, mw)
         acc = jax.lax.dot_general(z, w[l], (((1,), (0,)), ((), ())),
@@ -117,6 +136,7 @@ def fused_mlp_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
         y = _select_activation_ref(y, opcode, frac=frac,
                                    sig_coeffs=sig_coeffs,
                                    leaky_alpha_q=leaky_alpha_q)
+        y = lane_clamp(y, lane_bits)
         on = jax.lax.dot_general(onehot, layer_on[l],
                                  (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.int32) > 0
@@ -127,17 +147,19 @@ def fused_mlp_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
 def fused_mlp_gather_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array,
                          b: jax.Array, act: jax.Array, layer_on: jax.Array,
                          *, frac: int, sig_coeffs,
-                         leaky_alpha_q: int) -> jax.Array:
+                         leaky_alpha_q: int,
+                         lane_bits: int | None = None) -> jax.Array:
     """Bit-identical CPU realization of the fused MLP: per-packet table
     gather + int32 batched matvec (``bi,bij->bj``), which XLA:CPU vectorizes,
     unlike wide s32 GEMMs.  Tables in control-plane layout: w (M, L, W, W),
-    b (M, L, W), act/layer_on (M, L); slot (B,)."""
+    b (M, L, W), act/layer_on (M, L); slot (B,).  ``lane_bits`` selects the
+    saturating weight-lane variant (see :func:`fused_mlp_ref`)."""
     wg = w[slot]          # (B, L, W, W)
     bg = b[slot]          # (B, L, W)
     ag = act[slot]        # (B, L)
     og = layer_on[slot]   # (B, L)
     n_layers = w.shape[1]
-    x = x_q
+    x = lane_clamp(x_q, lane_bits)
     for l in range(n_layers):
         acc = jnp.einsum("bi,bij->bj", x, wg[:, l].astype(jnp.int32),
                          preferred_element_type=jnp.int32) + bg[:, l]
@@ -145,6 +167,7 @@ def fused_mlp_gather_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array,
         y = _select_activation_ref(y, ag[:, l][:, None], frac=frac,
                                    sig_coeffs=sig_coeffs,
                                    leaky_alpha_q=leaky_alpha_q)
+        y = lane_clamp(y, lane_bits)
         x = jnp.where(og[:, l][:, None] > 0, y, x)
     return x
 

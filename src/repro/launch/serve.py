@@ -2,16 +2,19 @@
 
   * :class:`PacketServer` — the paper's actual system: the in-network data
     plane processing encapsulated feature packets against control-plane
-    tables (µs-scale inference, weight hot-swap without recompile).  The
-    batch path is **asynchronous**: ``submit_async()`` dispatches a batch to
-    the device and returns immediately (the jit'd data plane is a device
-    future), keeping up to ``max_inflight`` batches in flight so host-side
-    packet encode/decode of neighbouring batches overlaps device compute —
-    the software analogue of the NIC's ingress pipeline staying full.
-    ``drain()`` retires the in-flight window and reconciles wall-clock into
-    the engine's throughput stats.  ``install()`` during serving is safe and
-    retrace-free: the control plane publishes a new table generation while
-    in-flight batches keep the old buffers (double buffering).
+    tables (µs-scale inference, weight hot-swap without recompile).  Serving
+    runs through the **ingress pipeline** (``core/ingress.py``): ragged
+    per-connection chunks are coalesced into fixed-shape mixed-model batches
+    (zero retraces), byte-identical duplicate packets short-circuit through
+    a generation-aware result cache (invalidated automatically by
+    ``install()``/``remove()``), and host staging is double-buffered so
+    packing batch N+1 overlaps device compute of batch N.  The legacy
+    batch-level async API (``submit_async()``/``drain()``) is kept for
+    callers that already batch their traffic; rejected batches occupy
+    **error slots** in submission order instead of silently vanishing from
+    the drain.  ``install()`` during serving is safe and retrace-free: the
+    control plane publishes a new table generation while in-flight batches
+    keep the old buffers (double buffering).
   * :class:`LMServer` — the framework-scale generalization: batched LM
     decode with KV caches, W8A8 fixed-point weights (C1), Taylor activations
     (C2), and the same control-plane hot-swap semantics via WeightRegistry.
@@ -21,7 +24,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,25 +33,53 @@ import numpy as np
 from ..configs import get_config, reduced
 from ..core.control_plane import ControlPlane, WeightRegistry
 from ..core.inference import DataPlaneEngine
+from ..core.ingress import BatchError, IngressPipeline
+from ..core.packet import HEADER_BYTES
 from ..models import build_model
 
-__all__ = ["PacketServer", "LMServer"]
+__all__ = ["PacketServer", "LMServer", "BatchError"]
 
 
 class PacketServer:
-    """Deployment wrapper: ControlPlane + batched DataPlaneEngine + async loop."""
+    """Deployment wrapper: ControlPlane + DataPlaneEngine + ingress pipeline.
+
+    Two serving surfaces:
+
+      * **stream API** — ``submit_packets()`` accepts ragged per-connection
+        chunks; ``drain_packets()`` returns per-packet egress rows (or
+        per-packet error slots) in exact submission order.  This is the
+        paper-shaped path: coalescing queue → duplicate cache → fused
+        kernel → deparse.
+      * **legacy batch API** — ``submit_async()``/``drain()`` dispatch
+        caller-formed batches with up to ``max_inflight`` device futures
+        outstanding.  A batch failing validation occupies a
+        :class:`~repro.core.ingress.BatchError` slot in the drain (order
+        preserved, per-packet errors attached) instead of raising away the
+        submissions behind it.
+    """
 
     def __init__(self, *, max_models: int = 16, max_layers: int = 4,
                  max_width: int = 32, frac_bits: int = 8,
-                 taylor_order: int = 3, dispatch: str = "fused",
-                 max_inflight: int = 8):
+                 weight_bits: int = 16, taylor_order: int = 3,
+                 dispatch: str = "fused", kernel_variant: str = "int16",
+                 max_inflight: int = 8, ingress_batch: int = 2048,
+                 use_cache: bool = True):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
         self.control_plane = ControlPlane(
             max_models=max_models, max_layers=max_layers,
-            max_width=max_width, frac_bits=frac_bits)
+            max_width=max_width, weight_bits=weight_bits,
+            frac_bits=frac_bits)
         self.engine = DataPlaneEngine(self.control_plane,
                                       max_features=max_width,
                                       taylor_order=taylor_order,
-                                      dispatch=dispatch)
+                                      dispatch=dispatch,
+                                      kernel_variant=kernel_variant)
+        # the pipeline holds max_inflight+1 staging buffers of
+        # ingress_batch x wire_bytes each — the same window the batch API gets
+        self.ingress = IngressPipeline(
+            self.engine, batch_size=ingress_batch,
+            max_inflight=max_inflight, use_cache=use_cache)
         self.max_inflight = max_inflight
         self._inflight: deque = deque()
         self._window_t0: Optional[float] = None
@@ -56,8 +87,15 @@ class PacketServer:
     def install(self, model_id: int, layers, activations, **kw) -> int:
         """Quantize + install (hot-swap) a model — safe mid-serving: the new
         table generation applies from the next submitted batch, zero
-        retraces, in-flight batches unaffected."""
+        retraces, in-flight batches unaffected.  The result cache keys on
+        the table generation, so the bumped counter instantly orphans every
+        cached egress row computed under the old weights."""
         return self.control_plane.install(model_id, layers, activations, **kw)
+
+    def remove(self, model_id: int) -> None:
+        """Uninstall a model and drop its cached egress rows."""
+        self.control_plane.remove(model_id)
+        self.ingress.on_model_removed(model_id)
 
     def process(self, packets):
         """Synchronous single-batch path (blocks until egress is ready).
@@ -70,39 +108,145 @@ class PacketServer:
             self.drain()
         return self.engine.process(packets)
 
-    # -- async serving loop ------------------------------------------------
+    # -- streaming ingress (coalescing queue + duplicate cache) ------------
 
-    def submit_async(self, packets) -> jax.Array:
-        """Dispatch one ingress batch without blocking; returns the egress
-        device future.  When ``max_inflight`` batches are pending, the
-        oldest is retired first (bounded queue → bounded device memory)."""
+    def submit_packets(self, packets) -> tuple:
+        """Feed one ragged per-connection chunk into the ingress pipeline.
+        Returns ``(first_ticket, n_packets)``; results arrive in submission
+        order via :meth:`drain_packets`."""
         if self._window_t0 is None:
             self._window_t0 = time.perf_counter()
-        while len(self._inflight) >= self.max_inflight:
-            self._inflight.popleft().block_until_ready()
-        out = self.engine.run(packets, block=False)
-        self._inflight.append(out)
+        return self.ingress.submit(packets)
+
+    def drain_packets(self) -> list:
+        """Flush the pipeline and return one entry per submitted packet in
+        submission order: an egress row (``np.ndarray``) or a
+        :class:`~repro.core.ingress.PacketError` slot."""
+        out = self.ingress.drain()
+        self._close_window()
         return out
 
-    def drain(self) -> List[jax.Array]:
-        """Block until every in-flight batch has retired; credit the whole
-        submit→drain window's wall-clock to the engine's throughput stats.
-        Returns the batches still in flight (submission order) — every
-        ``submit_async`` call already handed its own future to the caller."""
-        outs = list(self._inflight)
-        self._inflight.clear()
-        for o in outs:
-            o.block_until_ready()
+    def _close_window(self) -> None:
         if self._window_t0 is not None:
             self.engine.add_seconds(time.perf_counter() - self._window_t0)
             self._window_t0 = None
+
+    # -- async serving loop (legacy batch-level API) -----------------------
+
+    def _validate_batch(self, packets):
+        """Shape/dtype validation that never materializes a device array:
+        jax arrays are inspected through their metadata so the async hot
+        path stays free of device→host round trips.  Returns the batch in a
+        form ``engine.run`` accepts."""
+        shape = getattr(packets, "shape", None)
+        dtype = getattr(packets, "dtype", None)
+        if shape is None or dtype is None:
+            packets = np.asarray(packets)  # list-of-lists etc.; may raise
+            shape, dtype = packets.shape, packets.dtype
+        if len(shape) != 2:
+            raise ValueError(
+                f"packet batch must be 2-D (n_packets, wire_len), "
+                f"got shape {tuple(shape)}")
+        if shape[1] < HEADER_BYTES:
+            raise ValueError(
+                f"wire length {shape[1]} shorter than the "
+                f"{HEADER_BYTES}-byte encapsulation header")
+        if dtype != np.uint8:
+            if not np.issubdtype(np.dtype(dtype), np.integer):
+                raise ValueError(f"packet bytes must be integer, "
+                                 f"got dtype {dtype}")
+            # host arrays get a cheap range check; device arrays keep the
+            # engine's modular uint8 cast (the pre-existing batch semantics)
+            if isinstance(packets, np.ndarray) and packets.size \
+                    and (packets.min() < 0 or packets.max() > 255):
+                raise ValueError("packet byte values outside [0, 255]")
+        return packets
+
+    def submit_async(self, packets) -> Union[jax.Array, BatchError]:
+        """Dispatch one ingress batch without blocking; returns the egress
+        device future.  When ``max_inflight`` batches are pending, the
+        oldest is retired first (bounded queue → bounded device memory).
+
+        A batch that fails wire-format validation is **rejected in place**:
+        instead of raising (which used to silently drop the batch's slot and
+        reorder everything drained after it), a :class:`BatchError` carrying
+        per-packet error slots is queued in the batch's submission-order
+        position and returned to the caller.  ``n_packets`` is the leading
+        dimension when the input is recognizably 2-D, else 0 (unknown).
+        Error slots are bounded: past ``_MAX_ERROR_SLOTS`` undrained
+        rejections the oldest slots are pruned, so a caller that never
+        drains cannot grow the window without bound.
+        """
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        try:
+            arr = self._validate_batch(packets)
+        except (ValueError, TypeError) as e:
+            n = 0
+            try:
+                shape = getattr(packets, "shape", None)
+                if shape is not None and len(shape) == 2:
+                    n = int(shape[0])
+            except Exception:
+                pass
+            err = BatchError(reason=str(e), n_packets=n)
+            self._inflight.append(err)
+            self._prune_error_slots()
+            return err
+        while self._count_pending() >= self.max_inflight:
+            self._retire_one()
+        out = self.engine.run(arr, block=False)
+        self._inflight.append(out)
+        return out
+
+    _MAX_ERROR_SLOTS = 1024
+
+    def _prune_error_slots(self) -> None:
+        n_err = sum(1 for o in self._inflight if isinstance(o, BatchError))
+        i = 0
+        while n_err > self._MAX_ERROR_SLOTS and i < len(self._inflight):
+            if isinstance(self._inflight[i], BatchError):
+                del self._inflight[i]
+                n_err -= 1
+            else:
+                i += 1
+
+    def _count_pending(self) -> int:
+        return sum(1 for o in self._inflight if not isinstance(o, BatchError))
+
+    def _retire_one(self) -> None:
+        """Block on the oldest pending device future (skipping error slots,
+        which stay queued for the drain).  Index-based removal: jax arrays
+        overload ``==`` elementwise, so ``deque.remove`` must not be used."""
+        for i, o in enumerate(self._inflight):
+            if not isinstance(o, BatchError):
+                o.block_until_ready()
+                del self._inflight[i]
+                return
+
+    def drain(self) -> List[Union[jax.Array, BatchError]]:
+        """Block until every in-flight batch has retired; credit the whole
+        submit→drain window's wall-clock to the engine's throughput stats.
+        Returns the entries still in flight **in submission order** — device
+        batches interleaved with the :class:`BatchError` slots of rejected
+        batches (every ``submit_async`` call already handed its own
+        future/error to the caller)."""
+        outs = list(self._inflight)
+        self._inflight.clear()
+        for o in outs:
+            if not isinstance(o, BatchError):
+                o.block_until_ready()
+        self._close_window()
         return outs
 
     def stats(self) -> Dict[str, float]:
         return {"packets_per_s": self.engine.packets_per_second(),
                 "throughput_gbps": self.engine.throughput_gbps(),
                 "recompiles": self.engine.trace_count,
-                "table_generation": self.control_plane.version}
+                "table_generation": self.control_plane.version,
+                "cache_hit_rate": self.ingress.cache_hit_rate(),
+                "cache_entries": (len(self.ingress.cache)
+                                  if self.ingress.cache is not None else 0)}
 
 
 class LMServer:
