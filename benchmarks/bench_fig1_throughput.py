@@ -29,6 +29,15 @@ every chunk, full device round trip per packet) and the coalescing pipeline
 single pass (cache flushed) reports the short-circuit rate and device-row
 savings attributable to dedup/coalescing alone.
 
+Fourth section (PR-3 tentpole): **mixed MLP+forest serving**.  Half the
+16-model zoo is replaced by compiled random forests (the pForest/Planter
+tree-to-table family) and the same interleaved traffic is served through
+``PacketServer`` — per-packet Model IDs route each packet to the fused MLP
+lane or the tree-traversal lane inside one jit'd program.  The acceptance
+contract is an absolute floor: mixed MLP+forest throughput must stay at or
+above the PR-1 16-MLP baseline (1.24M pkt/s CPU min-of-K), i.e. opening the
+tree-ensemble workload costs the MLP deployment nothing.
+
 Every ``run()`` writes the machine-readable ``BENCH_fig1.json`` (env
 ``BENCH_JSON`` overrides the path; ``BENCH_REDUCED=1`` selects the reduced-K
 CI smoke mode) so the perf trajectory is tracked across PRs.
@@ -359,6 +368,158 @@ def _pipeline_comparison(rng, verbose: bool):
     return res
 
 
+# PR-1 recorded 16-MLP baseline (CPU min-of-K) — the absolute floor the
+# mixed MLP+forest trace must hold (ISSUE-3 acceptance criterion).
+PR1_MIXED_FLOOR_PPS = 1.24e6
+FOREST_TREES = 8
+FOREST_DEPTH = 5
+
+
+def _forest_mixed_comparison(rng, verbose: bool):
+    """PR-3 tentpole: 8 MLPs + 8 compiled random forests behind one
+    PacketServer, interleaved per packet.
+
+    Three serving measurements, all on the same mixed 16-model traffic:
+
+      * ``pipeline_steady_pps`` — the 50%-duplicate trace through the
+        ingress pipeline, steady-state min-of-K (exactly PR-2's headline
+        methodology, now over a zoo whose second half is tree ensembles).
+        This is the serving number of record and carries the PR-1 floor.
+      * ``pipeline_cold_pps`` — a fully-unique mixed trace, cache cleared,
+        one timed pass: the family-split lane dispatch with nothing
+        short-circuited (every packet pays its own lane's device work).
+      * ``async_both_lane_pps`` — ``submit_async`` of one mixed batch: the
+        single-program both-lane path (each batch pays MLP *and* forest
+        compute — the cost the lane-pure pipeline staging avoids).
+    """
+    import jax.numpy as jnp
+    from repro.core.packet import encode_packets
+    from repro.data.packets import anomaly_dataset, qos_dataset
+    from repro.forest import train_forest
+    from repro.launch.serve import PacketServer
+
+    width, layers = SERVE_WIDTH, SERVE_LAYERS
+    total, chunk = TRACE_TOTAL, TRACE_CHUNK
+    srv = PacketServer(max_models=N_MODELS, max_layers=layers,
+                       max_width=width, frac_bits=8, dispatch="fused",
+                       ingress_batch=chunk, max_inflight=2,
+                       max_forests=N_MODELS // 2, max_trees=FOREST_TREES,
+                       max_nodes=63, max_tree_depth=FOREST_DEPTH)
+    # MLP half of the zoo: ids 1..8 (same family as the PR-1 zoo)
+    r = np.random.default_rng(7)
+    for mid in range(N_MODELS // 2):
+        w1 = r.normal(size=(width, width)).astype(np.float32) * 0.3
+        w2 = r.normal(size=(width, 4)).astype(np.float32) * 0.3
+        srv.install(mid + 1, [(w1, np.zeros(width, np.float32)),
+                              (w2, np.zeros(4, np.float32))],
+                    ["relu"], final_activation="sigmoid")
+    # forest half: ids 9..16, alternating anomaly classifiers / QoS
+    # regressors trained on the synthetic packet datasets
+    forests = []
+    for k in range(N_MODELS // 2):
+        fr = np.random.default_rng(100 + k)
+        if k % 2 == 0:
+            X, y = anomaly_dataset(fr, 1024, width)
+            f = train_forest(X, y, task="classify", n_trees=FOREST_TREES,
+                             max_depth=FOREST_DEPTH, max_nodes=63,
+                             seed=200 + k)
+        else:
+            X, y = qos_dataset(fr, 1024, width)
+            f = train_forest(X, y, task="regress", n_trees=FOREST_TREES,
+                             max_depth=FOREST_DEPTH, max_nodes=63,
+                             seed=200 + k)
+        forests.append(f)
+        srv.install_forest(N_MODELS // 2 + k + 1, f)
+    pipe = srv.ingress
+
+    # 50%-dup mixed trace (ids 1..16 → half resolve to forests) and a
+    # fully-unique mixed trace, both chunked per connection
+    dup_chunks, dup_wire = _build_dup_trace(rng, total, chunk, width,
+                                            N_MODELS, DUP_FRACTION)
+    ucodes = rng.integers(-2**12, 2**12, size=(total, width)).astype(np.int32)
+    umids = rng.integers(1, N_MODELS + 1, total).astype(np.int32)
+    uniq_wire = np.asarray(encode_packets(jnp.asarray(umids), jnp.int32(8),
+                                          jnp.asarray(ucodes)))
+    uniq_chunks = [uniq_wire[i: i + chunk] for i in range(0, total, chunk)]
+    fmids = umids % (N_MODELS // 2) + N_MODELS // 2 + 1
+    forest_wire = np.asarray(encode_packets(
+        jnp.asarray(fmids), jnp.int32(8), jnp.asarray(ucodes)))
+    forest_chunks = [forest_wire[i: i + chunk]
+                     for i in range(0, total, chunk)]
+
+    def pipeline_loop(chunks):
+        pipe.reset_tickets()
+        for ch in chunks:
+            pipe.submit(ch)
+        pipe.flush()
+
+    def cold_loop(chunks):
+        pipe.reset_tickets()
+        pipe.cache.clear()
+        pipeline_loop(chunks)
+
+    # correctness cross-check (untimed): lane-split pipeline egress equals
+    # the both-lane engine on the full mixed trace, packet for packet
+    pipeline_loop(dup_chunks)
+    status, res_rows = pipe.results_array()
+    want = np.asarray(srv.engine.process(dup_wire))[:, : pipe.out_bytes]
+    if not (status == 1).all() or not np.array_equal(res_rows, want):
+        raise AssertionError("forest pipeline egress diverged from engine")
+    cold_loop(uniq_chunks)
+    cold_loop(forest_chunks)  # warm the forest-only lane too
+
+    mixed_async = jnp.asarray(dup_wire[:MIXED_BATCH])
+    def async_loop():
+        srv.submit_async(mixed_async)
+        srv.drain()
+    async_loop()
+
+    traces_before = srv.engine.trace_count
+    t_steady = t_cold = t_forest = t_async = float("inf")
+    for _ in range(SWEEPS):  # interleaved min-of-K: fair under noise
+        t_steady = min(t_steady, _min_time(lambda: pipeline_loop(dup_chunks)))
+        t_cold = min(t_cold, _min_time(lambda: cold_loop(uniq_chunks)))
+        t_forest = min(t_forest,
+                       _min_time(lambda: cold_loop(forest_chunks)))
+        t_async = min(t_async, _min_time(async_loop))
+
+    # hot-swapping retrained forests during serving must not recompile
+    for k, f in enumerate(forests):
+        srv.install_forest(N_MODELS // 2 + k + 1, f)
+    pipeline_loop(dup_chunks)
+    zero_retraces = srv.engine.trace_count == traces_before
+    lanes = pipe.stats["lane_batches"]
+
+    steady_pps = total / t_steady
+    res = {
+        "n_mlp": N_MODELS // 2,
+        "n_forests": N_MODELS // 2,
+        "trees_per_forest": FOREST_TREES,
+        "tree_depth": FOREST_DEPTH,
+        "trace_packets": total,
+        "dup_fraction": DUP_FRACTION,
+        "pipeline_steady_pps": steady_pps,
+        "pipeline_cold_pps": total / t_cold,
+        "forest_only_pps": total / t_forest,
+        "async_both_lane_pps": MIXED_BATCH / t_async,
+        "lane_pure_dispatches": {k: int(v) for k, v in lanes.items()},
+        "install_zero_retraces": bool(zero_retraces),
+        "pr1_floor_pps": PR1_MIXED_FLOOR_PPS,
+        "meets_pr1_floor": bool(steady_pps >= PR1_MIXED_FLOOR_PPS),
+    }
+    if verbose:
+        print(f"  mixed 8-MLP+8-forest steady: {steady_pps:,.0f} pkt/s  "
+              f"(PR-1 16-MLP floor {PR1_MIXED_FLOOR_PPS:,.0f}: "
+              f"{'MET' if res['meets_pr1_floor'] else 'BELOW'})")
+        print(f"  mixed cold (unique trace)  : {res['pipeline_cold_pps']:,.0f}"
+              f" pkt/s   forest-only cold: {res['forest_only_pps']:,.0f}"
+              f" pkt/s")
+        print(f"  async both-lane batch      : "
+              f"{res['async_both_lane_pps']:,.0f} pkt/s   forest hot-swap "
+              f"retraces: {0 if zero_retraces else 'NONZERO'}")
+    return res
+
+
 def _json_path() -> str:
     default = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_fig1.json")
@@ -393,12 +554,13 @@ def run(verbose: bool = True, reduced: bool | None = None,
 
         mixed = _mixed_model_comparison(rng, verbose)
         pipeline = _pipeline_comparison(rng, verbose)
+        forest = _forest_mixed_comparison(rng, verbose)
     finally:
         if saved:
             globals().update(saved)
 
     result = {"rows": rows, "trend_validated": bool(monotonic), **mixed,
-              "pipeline": pipeline}
+              "pipeline": pipeline, "forest": forest}
     payload = {
         "schema": 1,
         "bench": "fig1_throughput",
@@ -411,6 +573,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
                                         "speedup_mixed",
                                         "install_zero_retraces")},
         "pipeline": pipeline,
+        "forest": forest,
     }
     if write_json:
         path = json_path or _json_path()

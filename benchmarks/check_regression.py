@@ -40,6 +40,10 @@ TRACKED = {
     ("pipeline", "speedup_vs_pr1"): ("floor", 2.0),   # PR-2 acceptance
     ("pipeline", "cold_short_circuit_rate"): ("floor", 0.45),  # ~50% dup
     ("pipeline", "ragged_zero_retraces"): "bool",
+    ("forest", "pipeline_steady_pps"): "throughput",  # PR-3: 8 MLP+8 forest
+    ("forest", "pipeline_cold_pps"): "throughput",
+    ("forest", "forest_only_pps"): "throughput",
+    ("forest", "install_zero_retraces"): "bool",
     ("trend_validated",): "bool",
 }
 
@@ -59,17 +63,32 @@ def _fig1_rows(doc: dict) -> dict:
 
 
 def compare(current: dict, baseline: dict, tolerance: float,
-            ratios_only: bool = False) -> list:
+            ratios_only: bool = False, skipped: list = None) -> list:
     """Returns a list of human-readable failure strings (empty = pass).
 
     ``ratios_only`` skips the absolute-throughput metrics (pkt/s), leaving
     the machine-independent ratios and boolean invariants — the right gate
     on CI runners whose raw speed differs from the machine that cut the
-    baseline."""
+    baseline.
+
+    A whole **section** absent from the baseline (a bench added after that
+    baseline was cut — e.g. ``forest`` against a PR-2 baseline) is skipped,
+    not failed, for the baseline-relative kinds (``throughput``/``bool``):
+    an old baseline cannot gate a bench it never recorded.  ``floor``
+    metrics are exempt from the skip — they are absolute acceptance bounds
+    read from the current results alone, so a stale baseline must not
+    silently ungate them.  Skipped section names are appended to
+    ``skipped`` when a list is passed.
+    """
     failures = []
     floor = 1.0 - tolerance
+    skipped_sections = set()
     for path, kind in TRACKED.items():
         if ratios_only and kind == "throughput":
+            continue
+        if not isinstance(kind, tuple) and len(path) > 1 \
+                and _get(baseline, (path[0],)) is None:
+            skipped_sections.add(path[0])  # section newer than the baseline
             continue
         base = _get(baseline, path)
         cur = _get(current, path)
@@ -107,6 +126,8 @@ def compare(current: dict, baseline: dict, tolerance: float,
                     f"fig1_rows[features={nf}].packets_per_s: {cur_pps:.4g} "
                     f"< {floor:.0%} of baseline {base_pps:.4g} "
                     f"({cur_pps / base_pps:.0%})")
+    if skipped is not None:
+        skipped.extend(sorted(skipped_sections))
     return failures
 
 
@@ -136,7 +157,13 @@ def main(argv=None) -> int:
     if current.get("reduced") != baseline.get("reduced"):
         print(f"note: comparing reduced={current.get('reduced')} results "
               f"against reduced={baseline.get('reduced')} baseline")
-    failures = compare(current, baseline, args.tolerance, args.ratios_only)
+    skipped: list = []
+    failures = compare(current, baseline, args.tolerance, args.ratios_only,
+                       skipped=skipped)
+    for section in skipped:
+        print(f"note: section '{section}' missing from the baseline "
+              f"(older than this bench) — skipped, not failed; re-cut the "
+              f"baseline with --update to start gating it")
     if failures:
         print(f"PERF REGRESSION ({len(failures)} metric(s) beyond "
               f"{args.tolerance:.0%}):")

@@ -14,13 +14,25 @@ plane**.  The TPU translation (DESIGN.md §2):
 
 Tests assert the "no re-synthesis" property by counting traces.
 
-Two table families:
+Three table families:
 
-  * :class:`ControlPlane` — the paper-scale family: up to ``max_models``
-    MLP/regression models (Model ID-addressed), stacked into dense padded
-    tables so one compiled program serves every installed model.
+  * :class:`ModelTables` (owned by :class:`ControlPlane`) — the paper-scale
+    family: up to ``max_models`` MLP/regression models (Model ID-addressed),
+    stacked into dense padded tables so one compiled program serves every
+    installed model.
+  * :class:`ForestTables` (also owned by :class:`ControlPlane`) — the
+    tree-ensemble family (pForest/Planter analogue): up to ``max_forests``
+    random forests packed into dense padded node tables
+    (feature | threshold | left | right | leaf per node), installed with
+    the **same** generation-swap protocol and sharing the same generation
+    counter, so ingress caches keyed on ``version`` cover both families.
   * :class:`WeightRegistry` — the LM-scale generalization used by
     ``launch/serve.py``: named parameter pytrees with hot-swap semantics.
+
+Model IDs form one namespace across the MLP and forest families: a given ID
+resolves to exactly one of the two ``id_map`` tables (installing it in the
+other family first requires ``remove()``), which is what lets the data plane
+route a mixed batch per packet.
 """
 
 from __future__ import annotations
@@ -43,6 +55,7 @@ __all__ = [
     "ACT_HARD_SIGMOID",
     "ACTIVATIONS",
     "ModelTables",
+    "ForestTables",
     "ControlPlane",
     "WeightRegistry",
 ]
@@ -94,6 +107,39 @@ class ModelTables:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ForestTables:
+    """Dense, padded, device-resident tree-ensemble tables (the
+    pForest/Planter match-action RAM).
+
+    Shapes (``F`` forests, ``T`` trees, ``N`` nodes):
+      * ``nodes``    (F, T, N, 5)  int32 node records — field order
+                                   feature | quantized threshold | left |
+                                   right | leaf payload; leaves self-loop
+                                   (left == right == self)
+      * ``tree_on``  (F, T)        1 if the tree exists for this forest
+      * ``mode``     (F,)          vote mode (kernels.ref.FOREST_REGRESS /
+                                   FOREST_CLASSIFY)
+      * ``out_dim``  (F,)          output lanes (1 or n_classes)
+      * ``id_map``   (65536,)      Model-ID → forest slot (-1 = not a forest)
+    """
+
+    nodes: jax.Array
+    tree_on: jax.Array
+    mode: jax.Array
+    out_dim: jax.Array
+    id_map: jax.Array
+
+    def tree_flatten(self):
+        return ((self.nodes, self.tree_on, self.mode, self.out_dim,
+                 self.id_map), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
 class ControlPlane:
     """Host-side registry that owns and mutates the model tables.
 
@@ -112,7 +158,9 @@ class ControlPlane:
     """
 
     def __init__(self, *, max_models: int = 16, max_layers: int = 4,
-                 max_width: int = 32, weight_bits: int = 16, frac_bits: int = 8):
+                 max_width: int = 32, weight_bits: int = 16, frac_bits: int = 8,
+                 max_forests: int = 8, max_trees: int = 16,
+                 max_nodes: int = 64, max_tree_depth: int = 6):
         self.max_models = max_models
         self.max_layers = max_layers
         self.max_width = max_width
@@ -129,18 +177,51 @@ class ControlPlane:
         self._slots: Dict[int, int] = {}
         self._free_slots: List[int] = []  # recycled by remove()
         self._next_slot = 0
+        # -- tree-ensemble family (same swap discipline, shared generation) --
+        self.max_forests = max_forests
+        self.max_trees = max_trees
+        self.max_nodes = max_nodes
+        self.max_tree_depth = max_tree_depth
+        self._f_nodes = np.zeros((max_forests, max_trees, max_nodes, 5),
+                                 np.int32)
+        self._f_tree_on = np.zeros((max_forests, max_trees), np.int32)
+        self._f_mode = np.zeros((max_forests,), np.int32)
+        self._f_out_dim = np.zeros((max_forests,), np.int32)
+        self._f_id_map = np.full((65536,), -1, np.int32)
+        self._f_slots: Dict[int, int] = {}
+        self._f_free_slots: List[int] = []
+        self._f_next_slot = 0
+        # latched on the first forest install; the engine keys its static
+        # "compile the forest lane" decision off this, so it is monotone —
+        # at most one extra trace over the process lifetime, never a flap
+        self._forest_ever = False
         self._version = 0
+        # per-family write counters: the shared `_version` is the cache/
+        # staleness key (one counter must cover both families), but device
+        # snapshots re-upload per *family* generation, so hot-swapping one
+        # family never re-uploads the other's unchanged tables
+        self._mlp_gen = 0
+        self._forest_gen = 0
         self._snapshot: Optional[Tuple[int, "ModelTables"]] = None
+        self._forest_snapshot: Optional[Tuple[int, "ForestTables"]] = None
 
     def _begin_write(self) -> None:
-        """Copy-on-write: detach the back buffers from any published
-        snapshot before mutating (caller holds the lock)."""
+        """Copy-on-write: detach the MLP-family back buffers from any
+        published snapshot before mutating (caller holds the lock)."""
         self._w = self._w.copy()
         self._b = self._b.copy()
         self._act = self._act.copy()
         self._layer_on = self._layer_on.copy()
         self._out_dim = self._out_dim.copy()
         self._id_map = self._id_map.copy()
+
+    def _begin_write_forest(self) -> None:
+        """Copy-on-write for the forest-family back buffers."""
+        self._f_nodes = self._f_nodes.copy()
+        self._f_tree_on = self._f_tree_on.copy()
+        self._f_mode = self._f_mode.copy()
+        self._f_out_dim = self._f_out_dim.copy()
+        self._f_id_map = self._f_id_map.copy()
 
     # -- control-plane writes -------------------------------------------
 
@@ -174,6 +255,10 @@ class ControlPlane:
             bq = np.asarray(encode(bias, 2 * self.frac_bits, total_bits=32))
             quantized.append((din, dout, wq, bq, opcode))
         with self._lock:
+            if model_id in self._f_slots:
+                raise ValueError(
+                    f"model id {model_id} is installed as a forest — "
+                    "remove() it before installing an MLP under the same id")
             slot = self._slots.get(model_id)
             if slot is None and not self._free_slots \
                     and self._next_slot >= self.max_models:
@@ -197,19 +282,158 @@ class ControlPlane:
                 self._act[slot, l] = opcode
                 self._layer_on[slot, l] = 1
             self._out_dim[slot] = layers[-1][0].shape[1]
+            self._mlp_gen += 1
             self._version += 1
             return slot
 
     def remove(self, model_id: int) -> None:
+        """Uninstall a model from whichever family holds it (no-op if
+        neither does)."""
         with self._lock:
             slot = self._slots.pop(model_id, None)
-            if slot is None:
+            if slot is not None:
+                self._begin_write()
+                self._id_map[model_id] = -1
+                self._layer_on[slot] = 0
+                self._free_slots.append(slot)
+                self._mlp_gen += 1
+                self._version += 1
                 return
-            self._begin_write()
-            self._id_map[model_id] = -1
-            self._layer_on[slot] = 0
-            self._free_slots.append(slot)
+            fslot = self._f_slots.pop(model_id, None)
+            if fslot is None:
+                return
+            self._begin_write_forest()
+            self._f_id_map[model_id] = -1
+            self._f_tree_on[fslot] = 0
+            self._f_free_slots.append(fslot)
+            self._forest_gen += 1
             self._version += 1
+
+    # -- tree-ensemble family -------------------------------------------
+
+    def install_forest(self, model_id: int, forest) -> int:
+        """Quantize, pack and install (or hot-swap) a tree ensemble.
+        Returns its forest slot.
+
+        ``forest`` is a :class:`repro.forest.Forest` (packed here against
+        this plane's ``frac_bits``) or a pre-built
+        :class:`repro.forest.PackedForest`.  Same all-or-nothing
+        generation-swap discipline as :meth:`install`: everything is
+        validated and quantized before any table state is touched, and the
+        swap is one version bump — an in-flight batch keeps the old device
+        buffers, the next batch sees the new forest, zero retraces.
+        """
+        from ..forest.compile import Forest, PackedForest, pack_forest
+        if isinstance(forest, Forest):
+            packed = pack_forest(forest, frac_bits=self.frac_bits)
+        elif isinstance(forest, PackedForest):
+            packed = forest
+        else:
+            raise TypeError(
+                f"install_forest wants a Forest or PackedForest, "
+                f"got {type(forest).__name__}")
+        n_trees, n_nodes, _ = packed.nodes.shape
+        if n_trees > self.max_trees:
+            raise ValueError(
+                f"forest has {n_trees} trees > max {self.max_trees}")
+        if n_nodes > self.max_nodes:
+            raise ValueError(
+                f"forest has {n_nodes}-node trees > max {self.max_nodes}")
+        if packed.depth > self.max_tree_depth:
+            raise ValueError(
+                f"forest depth {packed.depth} exceeds the data plane's "
+                f"unroll bound max_tree_depth={self.max_tree_depth}")
+        if packed.frac_bits != self.frac_bits:
+            raise ValueError(
+                f"forest packed at {packed.frac_bits} fractional bits; "
+                f"this control plane's wire grid is {self.frac_bits}")
+        feats = packed.nodes[:, :, 0]
+        if feats.size and (int(feats.max()) >= self.max_width
+                           or int(feats.min()) < 0):
+            raise ValueError(
+                f"forest splits on feature {int(feats.max())} >= "
+                f"max_width={self.max_width}")
+        kids = packed.nodes[:, :, 2:4]
+        if kids.size and (int(kids.min()) < 0
+                          or int(kids.max()) >= n_nodes):
+            raise ValueError(
+                "forest child pointers outside [0, n_nodes) — leaves must "
+                "self-loop (pack_forest does this); dangling pointers would "
+                "break the level-bounded traversal")
+        if packed.mode == 1:  # FOREST_CLASSIFY: leaves are vote-lane indices
+            leaves = packed.nodes[:, :, 4]
+            if leaves.size and (int(leaves.min()) < 0
+                                or int(leaves.max()) >= packed.out_dim):
+                raise ValueError(
+                    f"classification leaf label outside [0, "
+                    f"{packed.out_dim}) — an out-of-range label would vote "
+                    "into a masked-off (or nonexistent) lane and silently "
+                    "vanish at egress")
+        if packed.out_dim > self.max_width:
+            raise ValueError(
+                f"forest out_dim {packed.out_dim} exceeds "
+                f"max_width={self.max_width} vote lanes")
+        with self._lock:
+            if model_id in self._slots:
+                raise ValueError(
+                    f"model id {model_id} is installed as an MLP — "
+                    "remove() it before installing a forest under the "
+                    "same id")
+            slot = self._f_slots.get(model_id)
+            if slot is None and not self._f_free_slots \
+                    and self._f_next_slot >= self.max_forests:
+                raise ValueError("forest table full")
+            self._begin_write_forest()
+            if slot is None:
+                slot = (self._f_free_slots.pop() if self._f_free_slots
+                        else self._f_next_slot)
+                if slot == self._f_next_slot:
+                    self._f_next_slot += 1
+                self._f_slots[model_id] = slot
+                self._f_id_map[model_id] = slot
+            self._f_nodes[slot] = 0
+            self._f_tree_on[slot] = 0
+            self._f_nodes[slot, :n_trees, :n_nodes] = packed.nodes
+            self._f_tree_on[slot, :n_trees] = packed.tree_on
+            self._f_mode[slot] = packed.mode
+            self._f_out_dim[slot] = packed.out_dim
+            self._forest_ever = True
+            self._forest_gen += 1
+            self._version += 1
+            return slot
+
+    def is_forest_id(self, model_ids: np.ndarray) -> np.ndarray:
+        """Vectorized host-side family lookup (current generation): True
+        where a Model ID resolves to a forest slot.  The ingress pipeline
+        uses this to stage lane-pure device batches; staleness is handled
+        there (a batch whose staging generation is not the dispatch
+        generation falls back to a both-lane dispatch)."""
+        with self._lock:
+            return self._f_id_map[np.asarray(model_ids, np.int64)] >= 0
+
+    @property
+    def forest_active(self) -> bool:
+        """True once any forest has ever been installed (monotone — the
+        engine's static forest-lane switch keys off this, so it can flip at
+        most once per process)."""
+        return self._forest_ever
+
+    def forest_tables(self) -> ForestTables:
+        """Device snapshot of the forest table generation — same caching
+        and double-buffer read semantics as :meth:`tables`.  Keyed on the
+        forest family's own write counter, so MLP hot-swaps never re-upload
+        the unchanged forest tables (and vice versa)."""
+        with self._lock:
+            if self._forest_snapshot is None \
+                    or self._forest_snapshot[0] != self._forest_gen:
+                self._forest_snapshot = (self._forest_gen, ForestTables(
+                    nodes=jnp.asarray(self._f_nodes),
+                    tree_on=jnp.asarray(self._f_tree_on),
+                    mode=jnp.asarray(self._f_mode),
+                    out_dim=jnp.asarray(self._f_out_dim),
+                    id_map=jnp.asarray(self._f_id_map),
+                ))
+            return self._forest_snapshot[1]
 
     # -- data-plane reads -------------------------------------------------
 
@@ -225,8 +449,8 @@ class ControlPlane:
         different buffers: zero retraces.
         """
         with self._lock:
-            if self._snapshot is None or self._snapshot[0] != self._version:
-                self._snapshot = (self._version, ModelTables(
+            if self._snapshot is None or self._snapshot[0] != self._mlp_gen:
+                self._snapshot = (self._mlp_gen, ModelTables(
                     w=jnp.asarray(self._w),
                     b=jnp.asarray(self._b),
                     act=jnp.asarray(self._act),
@@ -244,6 +468,7 @@ class ControlPlane:
         tests that want to force a fresh transfer."""
         with self._lock:
             self._snapshot = None
+            self._forest_snapshot = None
 
     @property
     def version(self) -> int:
@@ -252,7 +477,10 @@ class ControlPlane:
 
     def table_bytes(self) -> int:
         return (self._w.nbytes + self._b.nbytes + self._act.nbytes
-                + self._layer_on.nbytes + self._out_dim.nbytes + self._id_map.nbytes)
+                + self._layer_on.nbytes + self._out_dim.nbytes
+                + self._id_map.nbytes + self._f_nodes.nbytes
+                + self._f_tree_on.nbytes + self._f_mode.nbytes
+                + self._f_out_dim.nbytes + self._f_id_map.nbytes)
 
 
 class WeightRegistry:

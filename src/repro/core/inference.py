@@ -3,12 +3,21 @@
 One jit-compiled program is the whole pipeline:
 
     parse header → Model-ID table lookup → fixed-point MLP forward with
-    Taylor-approximated activations → deparse (outputs replace features)
+    Taylor-approximated activations  ─┐
+                                      ├→ deparse (outputs replace features)
+    parse header → forest-slot lookup → level-bounded tree-ensemble
+    traversal with majority/mean vote ─┘
 
 and it serves a **mixed-model batch**: every packet in the batch may target a
-different installed model (the paper's "one synthesized data plane, many
-control-plane models" property, exercised at batch scale).  Two dispatch
-strategies implement the Model-ID path:
+different installed model — of either family.  Model IDs resolve through two
+id_map tables (MLP slots and forest slots, one namespace); each packet's
+egress row comes from whichever lane its ID belongs to, so MLP and forest
+traffic interleave freely in one batch with no host-side partitioning.  The
+forest lane (``kernels.forest_traverse``) only enters the compiled program
+once a forest has ever been installed (``ControlPlane.forest_active`` is a
+static, monotone switch — at most one extra trace per process, and a pure
+MLP deployment compiles exactly the PR-1 program).  Two dispatch strategies
+implement the MLP Model-ID path:
 
   * ``dispatch="fused"`` (default) — the stacked control-plane tables are
     handed whole to the fused MLP kernel (``repro.kernels.fixedpoint_mlp``);
@@ -43,9 +52,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ops import fused_mlp
+from ..kernels.ops import forest_traverse, fused_mlp
 from ..kernels.ref import fused_mlp_gather_ref
-from .control_plane import ControlPlane, ModelTables
+from .control_plane import ControlPlane, ForestTables, ModelTables
 from .packet import ParsedBatch, emit_results, parse_packets
 from .taylor import scaled_constants
 
@@ -99,6 +108,9 @@ class DataPlaneEngine:
         self.kernel_variant = kernel_variant
         self.cp = control_plane
         self.max_features = max_features
+        # static unroll bound of the forest traversal lane (a synthesis-time
+        # property of the data plane, like max_layers for the MLP lane)
+        self.max_tree_depth = control_plane.max_tree_depth
         self.taylor_order = taylor_order
         self.dispatch = dispatch
         self.backend = backend
@@ -108,7 +120,8 @@ class DataPlaneEngine:
             int(c) for c in scaled_constants("sigmoid", taylor_order, self.frac))
         self.trace_count = 0
         self.stats = {"packets": 0, "bytes_in": 0, "bytes_out": 0, "seconds": 0.0}
-        self._process = jax.jit(self._process_impl)
+        self._process = jax.jit(self._process_impl,
+                                static_argnames=("use_mlp", "use_forest"))
 
     # -- the data plane ----------------------------------------------------
 
@@ -126,41 +139,62 @@ class DataPlaneEngine:
             leaky_alpha_q=self._leaky_alpha_q,
             lane_bits=8 if self.kernel_variant == "int8" else None)
 
-    def _process_impl(self, pkts: jax.Array, tables: ModelTables) -> jax.Array:
+    def _process_impl(self, pkts: jax.Array, tables: ModelTables,
+                      ftables: "ForestTables | None",
+                      use_mlp: bool, use_forest: bool) -> jax.Array:
         self.trace_count += 1  # python side effect: fires once per trace
         parsed = parse_packets(pkts, self.max_features)
 
-        slot = tables.id_map[parsed.model_id]  # (B,) — mixed models allowed
-        valid = slot >= 0
-        slot = jnp.maximum(slot, 0)
-
         width = tables.w.shape[-1]
-        x = parsed.features_q  # (B, F) codes at self.frac
-        if x.shape[1] < width:
-            x = jnp.pad(x, ((0, 0), (0, width - x.shape[1])))
+        x0 = parsed.features_q  # (B, F) codes at self.frac
+        if x0.shape[1] < width:
+            x0 = jnp.pad(x0, ((0, 0), (0, width - x0.shape[1])))
         else:
-            x = x[:, :width]
-
-        if self.dispatch == "fused":
-            x = fused_mlp(x, slot, tables.w, tables.b, tables.act,
-                          tables.layer_on, frac=self.frac,
-                          sig_coeffs=self._sig_coeffs,
-                          leaky_alpha_q=self._leaky_alpha_q,
-                          backend=self.backend,
-                          variant=self.kernel_variant)
-        else:
-            x = self._forward_gathered(x, slot, tables)
-
-        # zero lanes beyond each model's output count; invalid model → 0
+            x0 = x0[:, :width]
         lane = jnp.arange(width)[None, :]
-        out_dim = tables.out_dim[slot][:, None]
-        outputs = jnp.where((lane < out_dim) & valid[:, None], x, 0)
+
+        if use_mlp:
+            slot = tables.id_map[parsed.model_id]  # (B,) — mixed models
+            valid = slot >= 0
+            slot = jnp.maximum(slot, 0)
+            if self.dispatch == "fused":
+                x = fused_mlp(x0, slot, tables.w, tables.b, tables.act,
+                              tables.layer_on, frac=self.frac,
+                              sig_coeffs=self._sig_coeffs,
+                              leaky_alpha_q=self._leaky_alpha_q,
+                              backend=self.backend,
+                              variant=self.kernel_variant)
+            else:
+                x = self._forward_gathered(x0, slot, tables)
+            # zero lanes beyond each model's output count; invalid → 0
+            out_dim = tables.out_dim[slot][:, None]
+            outputs = jnp.where((lane < out_dim) & valid[:, None], x, 0)
+        else:
+            # lane-pure forest batch: ids not in the forest map (including
+            # uninstalled ones) egress zeroed, same as MLP-lane invalid ids
+            outputs = jnp.zeros_like(x0)
+
+        if use_forest:
+            # forest lane: packets whose Model ID resolves in the forest
+            # id_map take the tree-ensemble traversal's row instead (the two
+            # id maps are disjoint by construction, so the per-packet select
+            # is a simple where)
+            fslot = ftables.id_map[parsed.model_id]
+            fvalid = fslot >= 0
+            fslot = jnp.maximum(fslot, 0)
+            fx = forest_traverse(x0, fslot, ftables.nodes, ftables.tree_on,
+                                 ftables.mode, max_depth=self.max_tree_depth,
+                                 frac=self.frac, backend=self.backend)
+            f_out_dim = ftables.out_dim[fslot][:, None]
+            fout = jnp.where(lane < f_out_dim, fx, 0)
+            outputs = jnp.where(fvalid[:, None], fout, outputs)
+
         outputs = outputs[:, : self.max_features]
         return emit_results(parsed, outputs, self.frac)
 
     # -- host API -----------------------------------------------------------
 
-    def run(self, pkts, *, block: bool = True) -> jax.Array:
+    def run(self, pkts, *, block: bool = True, lanes: str = "both") -> jax.Array:
         """Run one mixed-model batch of ingress packets → egress packets.
 
         ``block=False`` returns as soon as the batch is *dispatched*: the
@@ -168,11 +202,30 @@ class DataPlaneEngine:
         encode/decode of neighbouring batches against device compute (see
         ``PacketServer.submit_async``).  Packet/byte counters update
         immediately; wall-clock is accounted by the blocking caller.
+
+        ``lanes`` is the ingress pipeline's lane-pure dispatch hint:
+        ``"both"`` (default — correct for any batch), ``"mlp"`` or
+        ``"forest"`` skip the other family's compute for batches the caller
+        *knows* are single-family (the pipeline stages per family and falls
+        back to ``"both"`` whenever an install raced the staging).  Each
+        lane combination is one more static jit variant — bounded at three,
+        warmed once each.
         """
+        if lanes not in ("both", "mlp", "forest"):
+            raise ValueError(f"unknown lanes hint: {lanes!r}")
         pkts = jnp.asarray(pkts, jnp.uint8)
         tables = self.cp.tables()  # current generation snapshot
+        # forest lane compiles in only once a forest exists (static &
+        # monotone: see __doc__); an MLP-only deployment never pays for it.
+        # One read: deriving both flags from two reads could interleave
+        # with the first-ever install_forest and disable both lanes.
+        forest_active = self.cp.forest_active
+        use_forest = lanes != "mlp" and forest_active
+        use_mlp = lanes != "forest" or not forest_active
+        ftables = self.cp.forest_tables() if use_forest else None
         t0 = time.perf_counter()
-        out = self._process(pkts, tables)
+        out = self._process(pkts, tables, ftables, use_mlp=use_mlp,
+                            use_forest=use_forest)
         self.stats["packets"] += int(pkts.shape[0])
         self.stats["bytes_in"] += int(pkts.size)
         self.stats["bytes_out"] += int(out.size)
@@ -196,6 +249,14 @@ class DataPlaneEngine:
         inside a dispatched batch — so ``packets_per_second()`` reflects
         packets actually served, not device rows."""
         self.stats["packets"] += int(n)
+
+    def credit_bytes(self, n_in: int, n_out: int) -> None:
+        """Byte-counter analogue of :meth:`credit_packets` — the pipeline
+        uses a negative credit to cancel a dispatch it discarded (the
+        lane-race redispatch), so throughput_gbps never double-counts the
+        dropped batch's wire bytes."""
+        self.stats["bytes_in"] += int(n_in)
+        self.stats["bytes_out"] += int(n_out)
 
     def throughput_gbps(self) -> float:
         s = self.stats

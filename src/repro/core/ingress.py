@@ -27,10 +27,16 @@ three pieces the paper's NIC gets for free from hardware:
     unique rows into **fixed-shape** staging batches; partially-filled
     batches are padded with dead rows at ``flush()`` so the engine only ever
     sees one shape — zero retraces no matter how ragged the arrivals are.
-    Host staging is multi-buffered: while batch N computes on the device,
-    batch N+1 is being packed into the next staging buffer (the buffer for a
-    dispatched batch is not reused until its results retire, so dispatch
-    hands the engine a stable view with no defensive copy).
+    Staging is **family-aware**: once any tree ensemble is installed, MLP-
+    and forest-family rows stage into separate batches so every device
+    dispatch is lane-pure and the engine skips the other family's compute
+    entirely (an install racing the staging falls back to the always-correct
+    both-lane program for that batch); per-packet tickets make the
+    reordering invisible at egress.  Host staging is multi-buffered: while
+    batch N computes on the device, batch N+1 is being packed into the next
+    pooled staging buffer (the buffer for a dispatched batch is not reused
+    until its results retire, so dispatch hands the engine a stable view
+    with no defensive copy).
   * per-packet **tickets** — every submitted packet gets a ticket; results
     (or :class:`PacketError` slots for malformed packets) are delivered in
     exact submission order regardless of which packets hit the cache, which
@@ -53,6 +59,7 @@ Packet-level flow::
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
@@ -176,7 +183,12 @@ class ResultCache:
       tables) is dropped: stale rows never enter the table.
     * ``drop_model()`` tombstones one model's entries (used by explicit
       ``remove()`` paths; the generation bump already guarantees staleness
-      safety, this just releases the slots immediately).
+      safety, this just releases the slots immediately).  Tombstoned slots
+      are reclaimed: an ``insert()`` probing onto one claims it in place,
+      and once tombstones exceed ``tombstone_limit`` of capacity the table
+      is **compacted** (live entries re-hashed, tombstones dropped) — so
+      long-running serving with model churn never degrades toward
+      all-tombstone probe chains.
     * Storage is bounded: when the table passes its load limit it is flushed
       wholesale (epoch eviction).  Cheap, branch-free, and a cache miss is
       always safe — the pipeline simply dispatches.
@@ -188,7 +200,7 @@ class ResultCache:
 
     def __init__(self, key_words: int, val_bytes: int, *,
                  capacity_pow2: int = 15, max_probe: int = 32,
-                 load_limit: float = 0.7):
+                 load_limit: float = 0.7, tombstone_limit: float = 0.25):
         if not 0 < key_words <= _MULTS.size:
             raise ValueError(
                 f"key_words={key_words} outside (0, {_MULTS.size}] — wire "
@@ -198,6 +210,7 @@ class ResultCache:
         self._mask = np.int64(cap - 1)
         self._max_probe = max_probe
         self._load_limit = load_limit
+        self._tombstone_limit = tombstone_limit
         self.key_words = key_words
         self.val_bytes = val_bytes
         self._keys = np.zeros((cap, key_words), np.uint64)
@@ -205,11 +218,13 @@ class ResultCache:
         self._state = np.zeros(cap, np.uint8)  # 0 empty · 1 full · 2 tombstone
         self._model = np.full(cap, -1, np.int64)
         self._count = 0
+        self._tombstones = 0
         self._gen = -1
         self.hits = 0
         self.misses = 0
         self.insertions = 0
         self.flushes = 0
+        self.compactions = 0
         self.stale_inserts_dropped = 0
 
     # -- internals --------------------------------------------------------
@@ -237,7 +252,30 @@ class ResultCache:
     def clear(self) -> None:
         self._state[:] = 0
         self._count = 0
+        self._tombstones = 0
         self.flushes += 1
+
+    def _compact(self) -> None:
+        """Rebuild the table in place, dropping every tombstone (live
+        entries re-hash onto clean probe chains).  Best-effort like the
+        rest of the cache: a re-inserted entry that exhausts its probe
+        budget is dropped, never corrupted."""
+        live = self._state == 1
+        keys = self._keys[live].copy()
+        vals = self._vals[live].copy()
+        mids = self._model[live].copy()
+        self._state[:] = 0
+        self._count = 0
+        self._tombstones = 0
+        self.compactions += 1
+        if keys.shape[0]:
+            ins0 = self.insertions  # re-admissions are not new insertions
+            self.insert(keys, vals, mids, self._gen)
+            self.insertions = ins0
+
+    @property
+    def tombstones(self) -> int:
+        return self._tombstones
 
     def __len__(self) -> int:
         return self._count
@@ -306,6 +344,8 @@ class ResultCache:
         if not self._sync_generation(generation):
             self.stale_inserts_dropped += n
             return 0
+        if self._tombstones > self._cap * self._tombstone_limit:
+            self._compact()
         if hashes is None:
             hashes = hash_words(words)
         # dedupe within the call so two identical rows never race one slot
@@ -339,6 +379,7 @@ class ResultCache:
                 wi = ci[first]
                 ws = s[wi]
                 rw = rows[wi]
+                self._tombstones -= int((st[wi] == 2).sum())  # reclaimed
                 self._keys[ws] = words[rw]
                 self._vals[ws] = vals[rw]
                 self._model[ws] = model_ids[rw]
@@ -367,12 +408,17 @@ class ResultCache:
 
     def drop_model(self, model_id: int) -> int:
         """Tombstone every entry belonging to ``model_id``; returns the
-        number of entries dropped."""
+        number of entries dropped.  Past ``tombstone_limit`` the table is
+        compacted immediately, so churny remove() loops keep probe chains
+        short instead of accumulating dead slots."""
         sel = (self._state == 1) & (self._model == int(model_id))
         n = int(sel.sum())
         if n:
             self._state[sel] = 2
             self._count -= n
+            self._tombstones += n
+            if self._tombstones > self._cap * self._tombstone_limit:
+                self._compact()
         return n
 
     def contains_model(self, model_id: int) -> bool:
@@ -411,10 +457,22 @@ class _RowStore:
 @dataclasses.dataclass
 class _InFlight:
     future: object          # engine device future (egress batch)
-    base: int               # global miss index of row 0
+    miss_idx: np.ndarray    # global miss index per real row (batch order)
     count: int              # real (non-padding) rows in the batch
     buf_idx: int            # staging buffer holding the ingress rows
     generation: Optional[int]  # table generation at dispatch (None = ambiguous)
+
+
+@dataclasses.dataclass
+class _OpenBatch:
+    """A partially-filled staging batch for one model family."""
+
+    family: str             # "mlp" | "forest" — the engine lane hint
+    buf: int                # index into the shared staging-buffer pool
+    fill: int               # rows staged so far
+    t0: float               # age clock (flush_after knob)
+    gen0: int               # generation the rows were family-classified at
+    miss_idx: np.ndarray    # (batch_size,) global miss index scratch
 
 
 @dataclasses.dataclass
@@ -439,19 +497,32 @@ class IngressPipeline:
         arrivals never retrace).
     max_inflight:
         Device batches in flight before dispatch blocks on the oldest.
-        ``max_inflight + 1`` staging buffers are held so the buffer backing a
+        ``max_inflight + 2`` staging buffers are pooled (up to two open
+        family batches + the in-flight window) so the buffer backing a
         dispatched batch is never written until its results retire.
     use_cache / cache_capacity_pow2:
         Duplicate-result short-circuit (on by default).
+    flush_after:
+        Latency knob (first step of adaptive batch sizing): maximum age in
+        seconds a partially-filled staging batch may wait before it is
+        dispatched padded.  The age clock starts when the first row enters
+        an empty staging buffer and is checked at the end of every
+        ``submit()`` (and by ``poll()``, for callers with idle gaps between
+        arrivals).  ``None`` (default) preserves the fill-or-flush behavior:
+        a partial batch waits for ``flush()``; ``0.0`` dispatches whatever
+        is staged as soon as the submit that staged it returns.
     """
 
     def __init__(self, engine, *, batch_size: int = 2048,
                  max_inflight: int = 2, use_cache: bool = True,
-                 cache_capacity_pow2: int = 15):
+                 cache_capacity_pow2: int = 15,
+                 flush_after: Optional[float] = None):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
         if max_inflight <= 0:
             raise ValueError("max_inflight must be positive")
+        if flush_after is not None and flush_after < 0:
+            raise ValueError("flush_after must be >= 0 seconds (or None)")
         self.engine = engine
         self.cp = engine.cp
         self.batch_size = batch_size
@@ -480,19 +551,25 @@ class IngressPipeline:
                 f"{_MULTS.size * 8}-byte hashing bound "
                 f"(max_features={engine.max_features})")
 
-        # double-buffered host staging: one buffer being packed + up to
-        # max_inflight whose batches are still on the device.  The packed
-        # words/hashes computed at submit time ride along so the retire-side
-        # cache insert never re-packs or re-hashes a row.
+        # Family-aware multi-buffered host staging: up to two open batches
+        # (one per model family — MLP and forest rows stage separately so
+        # device batches are **lane-pure** and the engine skips the other
+        # family's compute) plus up to max_inflight batches on the device.
+        # The packed words/hashes computed at submit time ride along so the
+        # retire-side cache insert never re-packs or re-hashes a row; a
+        # buffer backing a dispatched batch returns to the free pool only
+        # when its results retire.
+        n_bufs = max_inflight + 2
         self._staging = [np.zeros((batch_size, self.wire_bytes), np.uint8)
-                         for _ in range(max_inflight + 1)]
+                         for _ in range(n_bufs)]
         self._staging_words = [np.zeros((batch_size, self.key_words),
                                         np.uint64)
-                               for _ in range(max_inflight + 1)]
+                               for _ in range(n_bufs)]
         self._staging_hashes = [np.zeros(batch_size, np.uint64)
-                                for _ in range(max_inflight + 1)]
-        self._sbuf = 0
-        self._fill = 0
+                                for _ in range(n_bufs)]
+        self._free_bufs: Deque[int] = deque(range(n_bufs))
+        self._open: Dict[str, _OpenBatch] = {}
+        self.flush_after = flush_after
 
         self._inflight: Deque[_InFlight] = deque()
         self._chunks: Deque[_ChunkRecord] = deque()
@@ -503,13 +580,16 @@ class IngressPipeline:
         self._errors: Dict[int, PacketError] = {}
 
         self._n_miss = 0       # global miss-row indices assigned so far
-        self._disp_base = 0    # global index of the next row to dispatch
-        self._miss_done = 0    # retired prefix of the miss-row sequence
+        self._miss_done = 0    # fully-retired prefix of the miss sequence
         self._miss_out = _RowStore(self.out_bytes)
+        # family batches retire out of index order; the prefix pointer
+        # advances over this per-index retirement map
+        self._miss_retired = np.zeros(1024, bool)
 
         self.stats = {"packets": 0, "cache_hits": 0, "coalesced": 0,
                       "dispatched_rows": 0, "padded_rows": 0, "batches": 0,
-                      "errors": 0}
+                      "errors": 0,
+                      "lane_batches": {"mlp": 0, "forest": 0, "both": 0}}
 
     # -- ticket bookkeeping ------------------------------------------------
 
@@ -541,8 +621,32 @@ class IngressPipeline:
         Returns ``(first_ticket, n_packets)``.  Malformed packets occupy
         error slots; everything else resolves from cache or rides a device
         batch.  Never blocks on the device unless the in-flight window is
-        full.
+        full.  With ``flush_after`` set, an over-age partial staging batch
+        is dispatched (padded) before this call returns.
         """
+        try:
+            return self._submit(pkts)
+        finally:
+            self._maybe_flush_aged()
+
+    def poll(self) -> bool:
+        """Latency-SLO tick for callers with idle arrival gaps: dispatch
+        the partial staging batch if it has exceeded ``flush_after``.
+        Returns True when a dispatch happened.  No-op without the knob."""
+        return self._maybe_flush_aged()
+
+    def _maybe_flush_aged(self) -> bool:
+        if self.flush_after is None or not self._open:
+            return False
+        now = time.perf_counter()
+        fired = False
+        for fam, o in list(self._open.items()):
+            if o.fill and now - o.t0 >= self.flush_after:
+                self._dispatch(fam)
+                fired = True
+        return fired
+
+    def _submit(self, pkts) -> Tuple[int, int]:
         arr = np.asarray(pkts)
         if arr.ndim != 2:
             raise ValueError("packet chunk must be 2-D (n_packets, wire_len)")
@@ -639,42 +743,83 @@ class IngressPipeline:
             hi=int(miss_idx.max()) + 1))
         if n_fresh:
             fresh_rows = miss_rows[uniq_idx[fresh]]
+            fresh_words = uniq_words[fresh]
+            fresh_hashes = uniq_hashes[fresh]
+            fresh_idx = uniq_global[fresh]
+            mids = (fresh_rows[:, 0].astype(np.int64) << 8) \
+                | fresh_rows[:, 1]
             if self._pending is not None:
-                idx_bytes = uniq_global[fresh].reshape(-1, 1).view(np.uint8)
-                mids = (fresh_rows[:, 0].astype(np.int64) << 8) \
-                    | fresh_rows[:, 1]
-                self._pending.insert(uniq_words[fresh], idx_bytes, mids,
-                                     generation, uniq_hashes[fresh])
-            self._stage(fresh_rows, uniq_words[fresh], uniq_hashes[fresh])
+                idx_bytes = fresh_idx.reshape(-1, 1).view(np.uint8)
+                self._pending.insert(fresh_words, idx_bytes, mids,
+                                     generation, fresh_hashes)
+            # lane-pure staging: forest-family rows and MLP-family rows ride
+            # separate fixed-shape batches, so each dispatch runs only its
+            # own lane's compute (unknown ids stage as MLP — both lanes
+            # egress zeros for them)
+            if self.cp.forest_active:
+                isf = self.cp.is_forest_id(mids)
+            else:
+                isf = None
+            if isf is None or not isf.any():
+                self._stage("mlp", fresh_rows, fresh_words, fresh_hashes,
+                            fresh_idx, generation)
+            elif isf.all():
+                self._stage("forest", fresh_rows, fresh_words, fresh_hashes,
+                            fresh_idx, generation)
+            else:
+                m = ~isf
+                self._stage("mlp", fresh_rows[m], fresh_words[m],
+                            fresh_hashes[m], fresh_idx[m], generation)
+                self._stage("forest", fresh_rows[isf], fresh_words[isf],
+                            fresh_hashes[isf], fresh_idx[isf], generation)
         self._resolve_ready_chunks()
         return first, n
 
-    def _stage(self, rows: np.ndarray, words: np.ndarray,
-               hashes: np.ndarray) -> None:
-        """Append unique miss rows (plus their packed words/hashes) to
-        staging, dispatching every time the staging buffer reaches the fixed
-        batch size."""
+    def _open_batch(self, family: str, generation: int) -> _OpenBatch:
+        while not self._free_bufs:  # pool sized so this never loops, but
+            self._retire_oldest()   # stay safe if invariants ever shift
+        o = _OpenBatch(family=family, buf=self._free_bufs.popleft(), fill=0,
+                       t0=time.perf_counter(), gen0=generation,
+                       miss_idx=np.empty(self.batch_size, np.int64))
+        self._open[family] = o
+        return o
+
+    def _stage(self, family: str, rows: np.ndarray, words: np.ndarray,
+               hashes: np.ndarray, miss_idx: np.ndarray,
+               generation: int) -> None:
+        """Append unique miss rows (plus their packed words/hashes and
+        global miss indices) to the family's staging batch, dispatching
+        every time it reaches the fixed batch size."""
         pos = 0
         total = rows.shape[0]
         while pos < total:
-            space = self.batch_size - self._fill
+            o = self._open.get(family)
+            if o is None:
+                o = self._open_batch(family, generation)
+            space = self.batch_size - o.fill
             take = min(space, total - pos)
-            lo, hi = self._fill, self._fill + take
-            self._staging[self._sbuf][lo:hi] = rows[pos: pos + take]
-            self._staging_words[self._sbuf][lo:hi] = words[pos: pos + take]
-            self._staging_hashes[self._sbuf][lo:hi] = hashes[pos: pos + take]
-            self._fill += take
+            lo, hi = o.fill, o.fill + take
+            self._staging[o.buf][lo:hi] = rows[pos: pos + take]
+            self._staging_words[o.buf][lo:hi] = words[pos: pos + take]
+            self._staging_hashes[o.buf][lo:hi] = hashes[pos: pos + take]
+            o.miss_idx[lo:hi] = miss_idx[pos: pos + take]
+            o.fill += take
             pos += take
-            if self._fill == self.batch_size:
-                self._dispatch()
+            if o.fill == self.batch_size:
+                self._dispatch(family)
 
-    def _dispatch(self) -> None:
-        if self._fill == 0:
+    def _dispatch(self, family: Optional[str] = None) -> None:
+        if family is None:  # flush path: every open batch goes out
+            for fam in list(self._open):
+                self._dispatch(fam)
+            return
+        o = self._open.pop(family, None)
+        if o is None:
             return
         while len(self._inflight) >= self.max_inflight:
             self._retire_oldest()
-        buf = self._staging[self._sbuf]
-        count = self._fill
+        buf = self._staging[o.buf]
+        count = o.fill
         if count < self.batch_size:
             # dead padding rows: all-zero header → Model ID 0, which the
             # id_map resolves to "not installed" → zeroed egress, discarded
@@ -683,36 +828,66 @@ class IngressPipeline:
             # engine.run counts the whole batch — padding is not traffic
             self.engine.credit_packets(count - self.batch_size)
         gen_before = self.cp.version
-        future = self.engine.run(buf, block=False)
-        generation = gen_before if self.cp.version == gen_before else None
-        # staging order == global miss-index order, so this batch covers
-        # exactly the next `count` rows of the dispatch sequence
+        # the family classification is only as current as its generation: a
+        # racing install()/remove() may have reassigned an id, so fall back
+        # to the always-correct both-lane program for this batch
+        lanes = o.family if gen_before == o.gen0 else "both"
+        future = self.engine.run(buf, block=False, lanes=lanes)
+        gen_after = self.cp.version
+        if lanes != "both" and gen_after != gen_before:
+            # a table write landed between the lane decision and run()'s
+            # snapshot — the lane-pure program may now be wrong for this
+            # batch (e.g. an id reassigned across families).  Discard that
+            # dispatch and redo on the both-lane program, which is correct
+            # under any generation's tables.
+            self.engine.credit_packets(-buf.shape[0])  # never served
+            self.engine.credit_bytes(-buf.size, -future.size)
+            lanes = "both"
+            gen_before = self.cp.version
+            future = self.engine.run(buf, block=False, lanes=lanes)
+            gen_after = self.cp.version
+        generation = gen_before if gen_after == gen_before else None
         self._inflight.append(_InFlight(
-            future=future, base=self._disp_base, count=count,
-            buf_idx=self._sbuf, generation=generation))
-        self._disp_base += count
+            future=future, miss_idx=o.miss_idx[:count].copy(), count=count,
+            buf_idx=o.buf, generation=generation))
         self.stats["dispatched_rows"] += self.batch_size
         self.stats["batches"] += 1
-        self._sbuf = (self._sbuf + 1) % len(self._staging)
-        self._fill = 0
+        self.stats["lane_batches"][lanes] += 1
 
     # -- retire ------------------------------------------------------------
+
+    def _ensure_retired(self, n: int) -> None:
+        if n > self._miss_retired.shape[0]:
+            cap = self._miss_retired.shape[0]
+            while cap < n:
+                cap *= 2
+            a = np.zeros(cap, bool)
+            a[: self._miss_retired.shape[0]] = self._miss_retired
+            self._miss_retired = a
 
     def _retire_oldest(self) -> None:
         rec = self._inflight.popleft()
         out = np.asarray(rec.future)  # blocks until the device batch is done
-        hi = rec.base + rec.count
+        idx = rec.miss_idx
+        hi = int(idx.max()) + 1 if idx.size else 0
         self._miss_out.ensure(hi)
-        self._miss_out.a[rec.base: hi] = out[: rec.count, : self.out_bytes]
-        self._miss_out.n = hi
-        self._miss_done = hi
+        self._miss_out.a[idx] = out[: rec.count, : self.out_bytes]
+        self._miss_out.n = max(self._miss_out.n, hi)
+        self._ensure_retired(self._n_miss)
+        self._miss_retired[idx] = True
+        # family batches retire out of global-index order; chunks resolve
+        # against the fully-retired prefix
+        rem = self._miss_retired[self._miss_done: self._n_miss]
+        self._miss_done = (self._n_miss if rem.all()
+                           else self._miss_done + int(np.argmin(rem)))
         if self.cache is not None and rec.generation is not None:
             rows = self._staging[rec.buf_idx][: rec.count]
             words = self._staging_words[rec.buf_idx][: rec.count]
             hashes = self._staging_hashes[rec.buf_idx][: rec.count]
             mids = (rows[:, 0].astype(np.int64) << 8) | rows[:, 1]
-            self.cache.insert(words, self._miss_out.a[rec.base: hi], mids,
-                              rec.generation, hashes)
+            self.cache.insert(words, out[: rec.count, : self.out_bytes],
+                              mids, rec.generation, hashes)
+        self._free_bufs.append(rec.buf_idx)
         self._resolve_ready_chunks()
 
     def _resolve_ready_chunks(self) -> None:
@@ -770,15 +945,16 @@ class IngressPipeline:
             rec.future.block_until_ready()
         self._inflight.clear()
         self._chunks.clear()
-        self._fill = 0
+        self._open.clear()
+        self._free_bufs = deque(range(len(self._staging)))
         self._n_tickets = 0
         self._results.reset()
         self._status[:] = 0
         self._errors.clear()
         self._n_miss = 0
-        self._disp_base = 0
         self._miss_done = 0
         self._miss_out.reset()
+        self._miss_retired[:] = False
         if self._pending is not None:
             self._pending.clear()
 

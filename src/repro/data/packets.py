@@ -14,7 +14,8 @@ import numpy as np
 
 from ..core.packet import encode_packets
 
-__all__ = ["PacketGenConfig", "packet_stream", "flow_features"]
+__all__ = ["PacketGenConfig", "packet_stream", "flow_features",
+           "anomaly_dataset", "qos_dataset"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,39 @@ def flow_features(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
     base = rng.normal(size=(n, d)) * 0.5
     base[:, 0] = np.abs(base[:, 0])  # packet size ≥ 0
     return base.astype(np.float32)
+
+
+def anomaly_dataset(rng: np.random.Generator, n: int, d: int = 8, *,
+                    drift: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Labeled anomaly-detection flows (the tree-ensemble training task).
+
+    Anomalies are planted with axis-aligned structure — bursty size×rate
+    regions and a flag-pattern trigger — which is exactly what tree splits
+    capture and smooth MLP decision surfaces blur (the reason tree ensembles
+    dominate INML anomaly workloads in pForest/Planter).  ``drift`` shifts
+    the burst region to emulate traffic drift between retrains.
+
+    Returns ``(X float32 (n, d), y int64 in {0, 1})``.
+    """
+    X = flow_features(rng, n, d)
+    burst = (X[:, 0] > 0.55 + drift) & (X[:, 1 % d] < -0.1 + drift)
+    flagged = (X[:, 2 % d] > 0.6) & (X[:, 3 % d] > 0.2)
+    y = (burst | flagged).astype(np.int64)
+    return X, y
+
+
+def qos_dataset(rng: np.random.Generator, n: int, d: int = 8
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """QoS latency-regression flows: piecewise queueing-delay target (step
+    congestion regimes + load slope) for the regression-forest family.
+
+    Returns ``(X float32 (n, d), y float32 (n,))``.
+    """
+    X = flow_features(rng, n, d)
+    congested = (X[:, 0] > 0.5).astype(np.float32)
+    y = (0.2 + 0.6 * congested + 0.3 * np.maximum(X[:, 1 % d], 0)
+         + 0.1 * (X[:, 2 % d] > 0.3))
+    return X, y.astype(np.float32)
 
 
 def packet_stream(cfg: PacketGenConfig) -> Iterator[Dict]:

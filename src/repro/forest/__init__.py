@@ -1,0 +1,23 @@
+"""In-network tree-ensemble engine (pForest / Planter analogue).
+
+Random forests are the dominant in-network ML model family for QoS/anomaly
+workloads; this package compiles trained decision-tree ensembles into the
+control plane's dense padded node tables and serves them through the same
+batched data plane (and ingress pipeline) as the MLP family:
+
+  * ``compile``   — pure-NumPy CART trainer, sklearn-convention import path,
+                    fixed-point threshold/leaf quantization, table packing
+  * traversal     — ``repro.kernels.forest_traverse`` (Pallas kernel +
+                    gathered CPU lowering, bit-exact vs the pure-Python
+                    oracle in ``repro.kernels.ref``)
+  * installation  — ``ControlPlane.install_forest`` (generation-swapped,
+                    zero-retrace hot-swap exactly like MLP installs)
+"""
+
+from .compile import (FOREST_CLASSIFY, FOREST_REGRESS, DecisionTree, Forest,
+                      PackedForest, pack_forest, predict_float, train_forest,
+                      train_tree)
+
+__all__ = ["DecisionTree", "Forest", "PackedForest", "pack_forest",
+           "predict_float", "train_forest", "train_tree",
+           "FOREST_REGRESS", "FOREST_CLASSIFY"]

@@ -11,19 +11,27 @@
                              (saturating int8 lane, int8×int8→int32 dot —
                              v5e MXU native rate), both bit-exact against
                              their jnp oracles
+  * ``forest_traverse``    — (module ``forest_traversal``) fused
+                             multi-forest tree-ensemble traversal:
+                             one-hot forest dispatch + level-bounded node
+                             pointer chase unrolled to ``max_depth`` +
+                             majority/mean vote, all in one kernel over the
+                             stacked forest node tables (the pForest/Planter
+                             match-action pipeline)
   * ``wkv_scan``           — chunked RWKV-6 WKV scan with the recurrent
                              state resident in VMEM across chunks (the
                              §Perf rwkv hillclimb's end-state)
 
-Each kernel ships with a pure-jnp oracle (`ref.py`); `ops.py` wrappers
-dispatch by platform (TPU: native Pallas; CPU: oracle / interpret mode).
+Each kernel ships with a pure-jnp oracle (`ref.py`; the forest additionally
+has a pure-Python scalar oracle); `ops.py` wrappers dispatch by platform
+(TPU: native Pallas; CPU: oracle / gathered lowering / interpret mode).
 """
 
 from . import ops, ref, wkv_scan
-from .ops import (KERNEL_VARIANTS, fixedpoint_matmul, fused_mlp,
-                  taylor_activation)
+from .ops import (KERNEL_VARIANTS, fixedpoint_matmul, forest_traverse,
+                  fused_mlp, taylor_activation)
 from .wkv_scan import wkv_scan_pallas
 
 __all__ = ["ops", "ref", "wkv_scan", "fixedpoint_matmul",
-           "taylor_activation", "fused_mlp", "wkv_scan_pallas",
-           "KERNEL_VARIANTS"]
+           "taylor_activation", "fused_mlp", "forest_traverse",
+           "wkv_scan_pallas", "KERNEL_VARIANTS"]

@@ -24,10 +24,11 @@ import numpy as np
 from . import ref
 from .fixedpoint_matmul import BK, BM, BN, fixedpoint_matmul_pallas
 from .fixedpoint_mlp import BB, KERNEL_VARIANTS, fixedpoint_mlp_pallas
+from .forest_traversal import FB, forest_traverse_pallas
 from .taylor_activation import BC, BR, taylor_activation_pallas
 
-__all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp", "on_tpu",
-           "KERNEL_VARIANTS"]
+__all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp",
+           "forest_traverse", "on_tpu", "KERNEL_VARIANTS"]
 
 
 def on_tpu() -> bool:
@@ -131,6 +132,57 @@ def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
                                 leaky_alpha_q=leaky_alpha_q,
                                 variant=variant,
                                 interpret=not on_tpu())
+    return out[:n_batch]
+
+
+def forest_traverse(x_q: jax.Array, slot: jax.Array, nodes: jax.Array,
+                    tree_on: jax.Array, mode: jax.Array, *, max_depth: int,
+                    frac: int, backend: str = "auto") -> jax.Array:
+    """Fused multi-forest traversal over *stacked* control-plane node tables.
+
+    Layout prep lives here so callers hand over tables exactly as the
+    control plane stores them:
+
+      x_q (B, W) int32 · slot (B,) int32 · nodes (F, T, N, 5) int32 ·
+      tree_on (F, T) int32 · mode (F,) int32  →  (B, W) int32 output codes
+      (``ref.FOREST_REGRESS``: lane 0 = Σ leaf codes; ``FOREST_CLASSIFY``:
+      lane c = ``1 << frac`` per tree voting class c).
+
+    The kernel wants tree-major field-major operands — ``nodes_t`` as
+    ``(T, F, 5·N)`` so the per-packet forest select becomes one dot per tree
+    — and a batch padded to the tile size.  Padded rows run slot 0 and are
+    sliced off (the masked traversal is row-independent).  Backend dispatch
+    mirrors ``fused_mlp``: Pallas on TPU (interpreted when forced off-TPU),
+    the gathered batched lowering on CPU, the masked jnp oracle for
+    ``backend="ref"``.
+    """
+    if backend not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown backend: {backend!r}")
+    n_batch, _ = x_q.shape
+    n_forests, n_trees, n_nodes, _ = nodes.shape
+    use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    if backend == "auto" and not on_tpu():
+        # CPU lowering: the per-packet table gather + vectorized pointer
+        # chase (take_along_axis) vectorizes on XLA:CPU; the masked form's
+        # wide one-hot s32 dots scalarize there, like the MLP's.
+        return ref.forest_traverse_gather_ref(
+            x_q, slot.astype(jnp.int32), nodes, tree_on, mode,
+            max_depth=max_depth, frac=frac)
+    # Tree-major stacked operands with field-major columns:
+    # nodes_t[t, f, field*N + n] == nodes[f, t, n, field].
+    nodes_t = jnp.transpose(nodes, (1, 0, 3, 2)).astype(jnp.int32).reshape(
+        n_trees, n_forests, 5 * n_nodes)
+    on_t = jnp.transpose(tree_on, (1, 0)).astype(jnp.int32)[:, :, None]
+    mode2 = mode.astype(jnp.int32)[:, None]
+    slot2 = slot.astype(jnp.int32)[:, None]
+    if not use_pallas:  # backend == "ref": the literal kernel oracle
+        return ref.forest_traverse_ref(x_q, slot2, nodes_t, on_t, mode2,
+                                       max_depth=max_depth, frac=frac)
+    xp = _pad_to(x_q, (FB, 1))
+    sp = _pad_to(slot2, (FB, 1))
+    out = forest_traverse_pallas(xp, sp, nodes_t, on_t, mode2,
+                                 max_depth=max_depth, frac=frac,
+                                 interpret=not on_tpu())
     return out[:n_batch]
 
 

@@ -9,7 +9,8 @@ import numpy as np
 
 __all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "fused_mlp_ref",
            "fused_mlp_gather_ref", "rounding_rshift", "lane_clamp",
-           "wkv_scan_ref"]
+           "wkv_scan_ref", "forest_traverse_numpy", "forest_traverse_ref",
+           "forest_traverse_gather_ref", "FOREST_REGRESS", "FOREST_CLASSIFY"]
 
 
 def wkv_scan_ref(a: jax.Array, b: jax.Array, v: jax.Array, tot: jax.Array,
@@ -170,6 +171,176 @@ def fused_mlp_gather_ref(x_q: jax.Array, slot: jax.Array, w: jax.Array,
         y = lane_clamp(y, lane_bits)
         x = jnp.where(og[:, l][:, None] > 0, y, x)
     return x
+
+
+# ---------------------------------------------------------------------------
+# Tree-ensemble traversal (repro.forest) — three realizations of one contract
+# ---------------------------------------------------------------------------
+
+# Forest vote modes, stored per forest slot in the control-plane tables.
+FOREST_REGRESS = 0   # output lane 0 = Σ_t leaf codes (pre-divided by n_trees)
+FOREST_CLASSIFY = 1  # output lane c = (1 << frac) per tree voting class c
+
+# Node-table field order inside the packed (…, 5) axis:
+#   0 feature index · 1 quantized threshold · 2 left child · 3 right child ·
+#   4 leaf payload (class index / pre-divided value code).
+# Leaves self-loop (left == right == self), so a level-bounded traversal of
+# ``max_depth`` steps always lands on a leaf without a per-step leaf test.
+
+
+def forest_traverse_numpy(x_q: np.ndarray, slot: np.ndarray,
+                          nodes: np.ndarray, tree_on: np.ndarray,
+                          mode: np.ndarray, *, max_depth: int,
+                          frac: int) -> np.ndarray:
+    """THE forest oracle: per-packet pure-Python walk of the packed tables.
+
+    This is deliberately scalar (three nested Python loops following child
+    pointers node by node) so nothing about the vectorized formulations can
+    leak into the reference semantics.  Every lowering — the masked jnp form,
+    the gathered batched form, and the Pallas kernel — must reproduce it
+    bit for bit.
+
+    x_q (B, W) int32 feature codes · slot (B,) int32 forest slots ·
+    nodes (F, T, N, 5) int32 (field order above) · tree_on (F, T) int32 ·
+    mode (F,) int32 — returns (B, W) int32 output codes.
+    """
+    x_q = np.asarray(x_q)
+    slot = np.asarray(slot).reshape(-1)
+    nodes = np.asarray(nodes)
+    tree_on = np.asarray(tree_on)
+    mode = np.asarray(mode)
+    n_batch, width = x_q.shape
+    _, n_trees, _, _ = nodes.shape
+    out = np.zeros((n_batch, width), np.int32)
+    one_q = np.int32(1 << frac)
+    for p in range(n_batch):
+        f = int(slot[p])
+        for t in range(n_trees):
+            if not tree_on[f, t]:
+                continue
+            cur = 0
+            for _ in range(max_depth):
+                feat = int(nodes[f, t, cur, 0])
+                if x_q[p, feat] <= nodes[f, t, cur, 1]:
+                    cur = int(nodes[f, t, cur, 2])
+                else:
+                    cur = int(nodes[f, t, cur, 3])
+            leaf = nodes[f, t, cur, 4]
+            if mode[f] == FOREST_CLASSIFY:
+                out[p, int(leaf)] += one_q
+            else:
+                out[p, 0] += leaf
+    return out
+
+
+def forest_traverse_ref(x_q: jax.Array, slot: jax.Array, nodes_t: jax.Array,
+                        tree_on_t: jax.Array, mode: jax.Array, *,
+                        max_depth: int, frac: int) -> jax.Array:
+    """Masked (one-hot) jnp oracle for the Pallas traversal kernel — the
+    literal kernel formulation, operand for operand.
+
+    Kernel layout (see ``ops.forest_traverse`` for the prep):
+      x_q (B, W) int32 · slot (B, 1) int32 in [0, F) ·
+      nodes_t (T, F, 5·N) int32 tree-major with field-major columns
+      (``nodes_t[t, f, field·N + n]``) · tree_on_t (T, F, 1) int32 ·
+      mode (F, 1) int32.  Returns (B, W) int32.
+
+    The per-packet forest select is one (B, F) one-hot dot per tree
+    (gathering that tree's whole node table for every packet); the per-step
+    node/feature selects are iota-compare row reductions — exactly what the
+    kernel runs on the VPU.
+    """
+    n_batch, width = x_q.shape
+    n_trees, n_forests, ncols = nodes_t.shape
+    n_nodes = ncols // 5
+    f_iota = jnp.arange(n_forests, dtype=jnp.int32)[None, :]
+    onehot_f = (slot == f_iota).astype(jnp.int32)  # (B, F)
+    mode_p = jax.lax.dot_general(onehot_f, mode, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)  # (B, 1)
+    n_iota = jnp.arange(n_nodes, dtype=jnp.int32)[None, :]
+    w_iota = jnp.arange(width, dtype=jnp.int32)[None, :]
+    one_q = jnp.int32(1 << frac)
+    acc = jnp.zeros((n_batch, width), jnp.int32)
+    for t in range(n_trees):
+        tbl = jax.lax.dot_general(onehot_f, nodes_t[t],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        feat_t = tbl[:, 0 * n_nodes: 1 * n_nodes]
+        th_t = tbl[:, 1 * n_nodes: 2 * n_nodes]
+        left_t = tbl[:, 2 * n_nodes: 3 * n_nodes]
+        right_t = tbl[:, 3 * n_nodes: 4 * n_nodes]
+        leaf_t = tbl[:, 4 * n_nodes: 5 * n_nodes]
+        on = jax.lax.dot_general(onehot_f, tree_on_t[t],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32) > 0
+        cur = jnp.zeros((n_batch, 1), jnp.int32)
+        for _ in range(max_depth):
+            sel = (n_iota == cur).astype(jnp.int32)  # (B, N)
+            feat = jnp.sum(sel * feat_t, axis=1, keepdims=True)
+            th = jnp.sum(sel * th_t, axis=1, keepdims=True)
+            lf = jnp.sum(sel * left_t, axis=1, keepdims=True)
+            rt = jnp.sum(sel * right_t, axis=1, keepdims=True)
+            xv = jnp.sum(jnp.where(w_iota == feat, x_q, 0), axis=1,
+                         keepdims=True)
+            cur = jnp.where(xv <= th, lf, rt)
+        sel = (n_iota == cur).astype(jnp.int32)
+        leaf = jnp.sum(sel * leaf_t, axis=1, keepdims=True)  # (B, 1)
+        vote_cls = jnp.where(w_iota == leaf, one_q, 0)
+        vote_reg = jnp.where(w_iota == 0, leaf, 0)
+        contrib = jnp.where(mode_p == FOREST_CLASSIFY, vote_cls, vote_reg)
+        acc = acc + jnp.where(on, contrib, 0)
+    return acc
+
+
+def forest_traverse_gather_ref(x_q: jax.Array, slot: jax.Array,
+                               nodes: jax.Array, tree_on: jax.Array,
+                               mode: jax.Array, *, max_depth: int,
+                               frac: int) -> jax.Array:
+    """Bit-identical CPU realization: direct per-step table indexing (each
+    step gathers only the (B, T) records actually visited — never a
+    per-packet copy of the whole table) with the pointer fields packed into
+    one **meta word** per node, ``feat<<20 | left<<10 | right``, so a
+    traversal step costs three (B, T)-sized gathers (meta, threshold, split
+    feature) instead of five.  The packing is pure integer re-coding of
+    in-range fields (children < N ≤ 1024, feature < width ≤ 2048 — the
+    control plane validates both), so unpacking by shift/mask is exact and
+    the step remains bit-identical to the scalar oracle.  XLA:CPU
+    vectorizes these gathers; the masked one-hot form's wide s32 dots
+    scalarize there, like the MLP's.
+
+    Tables in control-plane layout: nodes (F, T, N, 5), tree_on (F, T),
+    mode (F,); slot (B,) int32.  Returns (B, W) int32.
+    """
+    n_batch, width = x_q.shape
+    _, n_trees, n_nodes, _ = nodes.shape
+    if n_nodes > 1024 or width > 2048:
+        raise ValueError(
+            f"meta-word packing bound exceeded (n_nodes={n_nodes} > 1024 "
+            f"or width={width} > 2048) — beyond any paper-scale table")
+    # table-sized (not batch-sized) packing work, traced per call like the
+    # MLP wrapper's layout transposes
+    meta = (nodes[..., 0] << 20) | (nodes[..., 2] << 10) | nodes[..., 3]
+    th_t = nodes[..., 1]
+    leaf_t = nodes[..., 4]
+    sl = slot[:, None]                  # (B, 1)
+    tr = jnp.arange(n_trees, dtype=jnp.int32)[None, :]
+    on = tree_on[slot] > 0              # (B, T)
+    md = mode[slot][:, None]            # (B, 1)
+    rows = jnp.arange(n_batch)[:, None]
+    cur = jnp.zeros((n_batch, n_trees), jnp.int32)
+    for _ in range(max_depth):
+        m = meta[sl, tr, cur]           # (B, T) packed feat|left|right
+        th = th_t[sl, tr, cur]
+        xv = x_q[rows, m >> 20]
+        cur = jnp.where(xv <= th, (m >> 10) & 1023, m & 1023)
+    leaf = leaf_t[sl, tr, cur]          # (B, T)
+    one_q = jnp.int32(1 << frac)
+    lane = jnp.arange(width, dtype=jnp.int32)[None, None, :]
+    votes = jnp.sum(jnp.where((leaf[:, :, None] == lane) & on[:, :, None],
+                              one_q, 0), axis=1)         # (B, W)
+    reg = jnp.sum(jnp.where(on, leaf, 0), axis=1)        # (B,)
+    reg_out = jnp.where(lane[0] == 0, reg[:, None], 0)
+    return jnp.where(md == FOREST_CLASSIFY, votes, reg_out)
 
 
 def taylor_activation_ref(x_q: jax.Array, coeffs_q: np.ndarray,

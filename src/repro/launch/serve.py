@@ -49,7 +49,10 @@ class PacketServer:
         chunks; ``drain_packets()`` returns per-packet egress rows (or
         per-packet error slots) in exact submission order.  This is the
         paper-shaped path: coalescing queue → duplicate cache → fused
-        kernel → deparse.
+        kernel → deparse.  With tree ensembles installed
+        (:meth:`install_forest`), the queue stages MLP- and forest-family
+        packets into lane-pure device batches, so mixed-family traffic pays
+        each packet's own compute lane only.
       * **legacy batch API** — ``submit_async()``/``drain()`` dispatch
         caller-formed batches with up to ``max_inflight`` device futures
         outstanding.  A batch failing validation occupies a
@@ -63,23 +66,30 @@ class PacketServer:
                  weight_bits: int = 16, taylor_order: int = 3,
                  dispatch: str = "fused", kernel_variant: str = "int16",
                  max_inflight: int = 8, ingress_batch: int = 2048,
-                 use_cache: bool = True):
+                 use_cache: bool = True,
+                 max_forests: int = 8, max_trees: int = 16,
+                 max_nodes: int = 64, max_tree_depth: int = 6,
+                 flush_after: Optional[float] = None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         self.control_plane = ControlPlane(
             max_models=max_models, max_layers=max_layers,
             max_width=max_width, weight_bits=weight_bits,
-            frac_bits=frac_bits)
+            frac_bits=frac_bits, max_forests=max_forests,
+            max_trees=max_trees, max_nodes=max_nodes,
+            max_tree_depth=max_tree_depth)
         self.engine = DataPlaneEngine(self.control_plane,
                                       max_features=max_width,
                                       taylor_order=taylor_order,
                                       dispatch=dispatch,
                                       kernel_variant=kernel_variant)
-        # the pipeline holds max_inflight+1 staging buffers of
-        # ingress_batch x wire_bytes each — the same window the batch API gets
+        # the pipeline pools max_inflight+2 staging buffers of
+        # ingress_batch x wire_bytes each (two open family batches + the
+        # in-flight window) — the same window the batch API gets
         self.ingress = IngressPipeline(
             self.engine, batch_size=ingress_batch,
-            max_inflight=max_inflight, use_cache=use_cache)
+            max_inflight=max_inflight, use_cache=use_cache,
+            flush_after=flush_after)
         self.max_inflight = max_inflight
         self._inflight: deque = deque()
         self._window_t0: Optional[float] = None
@@ -91,6 +101,14 @@ class PacketServer:
         the table generation, so the bumped counter instantly orphans every
         cached egress row computed under the old weights."""
         return self.control_plane.install(model_id, layers, activations, **kw)
+
+    def install_forest(self, model_id: int, forest) -> int:
+        """Quantize + install (hot-swap) a tree ensemble
+        (:class:`repro.forest.Forest` or ``PackedForest``) — same
+        mid-serving safety and cache-invalidation contract as
+        :meth:`install`: one shared generation counter covers both table
+        families."""
+        return self.control_plane.install_forest(model_id, forest)
 
     def remove(self, model_id: int) -> None:
         """Uninstall a model and drop its cached egress rows."""

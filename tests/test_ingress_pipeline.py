@@ -150,6 +150,45 @@ class TestResultCache:
         assert hm.all()
         np.testing.assert_array_equal(got, vals)
 
+    def test_tombstone_slots_reclaimed_under_model_churn(self):
+        """The PR-3 satellite regression test: a long-running serve loop
+        that keeps installing and dropping models must not degrade toward
+        all-tombstone probing — drop_model() tombstones are reclaimed by
+        inserts and compacted away past the threshold, so the dead-slot
+        population stays bounded forever."""
+        rng = np.random.default_rng(40)
+        cap = 1 << 9
+        c = ResultCache(3, 16, capacity_pow2=9, load_limit=0.5,
+                        tombstone_limit=0.25)
+        for round_ in range(40):
+            words, vals, _ = self._kv(rng, 60)
+            mids = np.full(60, round_ % 5, np.int64)
+            c.insert(words, vals, mids, 1)
+            c.drop_model(round_ % 5)
+            # invariant: tombstones never exceed the compaction threshold
+            # (plus one round's insertions re-claiming on top is fine)
+            assert c.tombstones <= cap * 0.25
+        assert c.compactions > 0  # churn actually exercised the compactor
+        # the cache still works at full fidelity after heavy churn
+        words, vals, mids = self._kv(rng, 50)
+        c.insert(words, vals, mids, 1)
+        hm, got = c.lookup(words, 1)
+        assert hm.all()
+        np.testing.assert_array_equal(got, vals)
+
+    def test_compaction_preserves_live_entries(self):
+        rng = np.random.default_rng(41)
+        words, vals, mids = self._kv(rng, 120)
+        c = ResultCache(3, 16, capacity_pow2=8, tombstone_limit=0.05)
+        c.insert(words, vals, mids, 1)
+        keep = (mids != 3) & (mids != 4)
+        c.drop_model(3)
+        c.drop_model(4)  # cumulative tombstones cross 5% → compact in place
+        assert c.compactions >= 1 and c.tombstones == 0
+        hm, got = c.lookup(words, 1)
+        np.testing.assert_array_equal(hm, keep)
+        np.testing.assert_array_equal(got, vals[keep])
+
     @settings(max_examples=25, deadline=None)
     @given(n=st.integers(min_value=1, max_value=200),
            seed=st.integers(min_value=0, max_value=2 ** 16),
@@ -272,6 +311,68 @@ class TestPipelineCorrectness:
         padded[:, : short.shape[1]] = short
         want = np.asarray(eng.process(padded))[:, : pipe.out_bytes]
         np.testing.assert_array_equal(np.stack(got), want)
+
+
+class TestFlushAfter:
+    """PR-3 satellite: the ``flush_after`` latency knob (first step of the
+    ROADMAP adaptive-batch-sizing item)."""
+
+    def test_default_preserves_wait_for_flush_behavior(self):
+        rng = np.random.default_rng(50)
+        cp, eng, pipe = _pipeline(batch_size=64)
+        pipe.submit(_wire(rng, 10))
+        pipe.submit(_wire(rng, 10))
+        assert pipe.stats["batches"] == 0  # partial batch waits, as before
+        pipe.drain()
+
+    def test_zero_age_dispatches_every_submit(self):
+        rng = np.random.default_rng(51)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.0)
+        pipe.submit(_wire(rng, 10))
+        assert pipe.stats["batches"] == 1  # padded partial batch went out
+        pipe.submit(_wire(rng, 7))
+        assert pipe.stats["batches"] == 2
+        got = pipe.drain()
+        assert len(got) == 17 and all(
+            not isinstance(g, PacketError) for g in got)
+
+    def test_aged_partial_batch_dispatches_on_next_submit(self):
+        import time as _time
+        rng = np.random.default_rng(52)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02)
+        pipe.submit(_wire(rng, 5))
+        assert pipe.stats["batches"] == 0  # too young
+        _time.sleep(0.03)
+        pipe.submit(_wire(rng, 5))  # age check fires at submit end
+        assert pipe.stats["batches"] == 1
+        pipe.drain()
+
+    def test_poll_flushes_without_new_traffic(self):
+        import time as _time
+        rng = np.random.default_rng(53)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02)
+        pipe.submit(_wire(rng, 5))
+        assert not pipe.poll()  # too young
+        _time.sleep(0.03)
+        assert pipe.poll()
+        assert pipe.stats["batches"] == 1
+        pipe.drain()
+
+    def test_results_identical_with_knob_enabled(self):
+        """Early dispatch is a latency policy, never a semantics change."""
+        rng = np.random.default_rng(54)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.0)
+        chunks = [_wire(rng, n) for n in (13, 64, 7, 29)]
+        for ch in chunks:
+            pipe.submit(ch)
+        got = pipe.drain()
+        want = np.asarray(eng.process(np.concatenate(chunks, 0)))
+        np.testing.assert_array_equal(np.stack(got),
+                                      want[:, : pipe.out_bytes])
+
+    def test_negative_flush_after_rejected(self):
+        with pytest.raises(ValueError, match="flush_after"):
+            _pipeline(flush_after=-0.1)
 
 
 class TestPipelineErrorSlots:
