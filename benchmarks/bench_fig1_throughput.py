@@ -74,7 +74,10 @@ TRACE_CHUNK = 2048    # per-connection arrival chunk = ingress batch size
 DUP_FRACTION = 0.5    # fraction of trace packets that repeat an earlier one
 
 # Reduced-K smoke mode for CI: same code paths, ~5× less timed work.
-_REDUCED_OVERRIDES = dict(BATCH=4096, REPS=2, SWEEPS=1, RETRY_SWEEPS=2,
+# RETRY_SWEEPS stays closer to the full budget: the Fig-1 monotone-trend
+# bool is gated by CI, and on noisy shared runners the adjacent-row
+# separation is exactly what the retries exist to establish.
+_REDUCED_OVERRIDES = dict(BATCH=4096, REPS=2, SWEEPS=1, RETRY_SWEEPS=5,
                           LOOPS=2, TRACE_TOTAL=8192)
 
 
@@ -520,6 +523,216 @@ def _forest_mixed_comparison(rng, verbose: bool):
     return res
 
 
+# Flow-engine raw-trace section (PR-4 tentpole): packets enter as raw
+# 5-tuple headers; the stateful flow engine computes the features in-line.
+FLOW_N_FLOWS = 2048     # concurrent flows: 4 telemetry reports per flow
+                        # per 8K arrival chunk → 4 vectorized rank rounds
+                        # (the measured sweet spot between sequential-EWMA
+                        # round count and per-chunk probe/dedup width)
+FLOW_PERIOD = 512       # periodic tick spacing → EWMA registers converge
+FLOW_CHUNK = 8192       # raw DMA-ring arrival granularity: the host stages
+                        # (parse/probe/spec/encode) amortize their fixed
+                        # per-call cost over 4 device batches' worth of rows
+FLOW_STEADY_FLOOR_PPS = 1.0e6   # ISSUE-4 acceptance: ≥ 1M pkt/s steady CPU
+
+
+def _flow_raw_comparison(rng, verbose: bool):
+    """Raw-packet serving through the stateful flow engine: a 16-model zoo
+    (8 MLPs + 8 forests) fed nothing but raw 5-tuple headers.
+
+    The flow engine resolves each packet's flow, updates its registers
+    (counters, EWMAs, count-min sketch) and builds each model's input
+    columns via its installed FeatureSpec — then the normal ingress
+    pipeline serves the encapsulated rows.  On the periodic trace the EWMA
+    registers converge, feature rows byte-repeat, and the dedup/cache
+    stages short-circuit the device — the pForest/Planter "aggregation,
+    not FLOPs" regime, measured end to end from raw packets:
+
+      * ``steady_pps`` — replaying the trace with converged flow state
+        (min-of-K): the serving number of record, gated by the 1M pkt/s
+        acceptance floor.
+      * ``cold_pps``  — fresh flow table + cleared caches, one pass: every
+        packet pays flow resolution, register update and (mostly) device
+        dispatch.
+      * ``bitexact_vs_handbuilt`` — the whole engine is only admissible
+        because ``submit_raw()`` reproduces, bit for bit, the egress of
+        hand-built feature vectors run through the blocking engine.
+      * ``spec_reinstall_zero_retraces`` — re-mapping every model's
+        FeatureSpec mid-serving recompiles nothing.
+    """
+    import jax.numpy as jnp  # noqa: F401  (keeps import side effects uniform)
+    from repro.core.packet import encode_packets_np
+    from repro.data.packets import (anomaly_dataset, encode_raw_headers,
+                                    parse_raw_headers, qos_dataset)
+    from repro.flow import FlowParams, reference_features
+    from repro.forest import train_forest
+    from repro.launch.serve import PacketServer
+
+    width, layers = SERVE_WIDTH, SERVE_LAYERS
+    total = TRACE_TOTAL
+    chunk = min(FLOW_CHUNK, total)
+    srv = PacketServer(max_models=N_MODELS, max_layers=layers,
+                       max_width=width, frac_bits=8, dispatch="fused",
+                       ingress_batch=TRACE_CHUNK, max_inflight=2,
+                       max_forests=N_MODELS // 2, max_trees=FOREST_TREES,
+                       max_nodes=63, max_tree_depth=FOREST_DEPTH,
+                       flow_capacity_pow2=13)
+    r = np.random.default_rng(7)
+    for mid in range(N_MODELS // 2):  # MLP half: ids 1..8
+        w1 = r.normal(size=(width, width)).astype(np.float32) * 0.3
+        w2 = r.normal(size=(width, 4)).astype(np.float32) * 0.3
+        srv.install(mid + 1, [(w1, np.zeros(width, np.float32)),
+                              (w2, np.zeros(4, np.float32))],
+                    ["relu"], final_activation="sigmoid")
+    for k in range(N_MODELS // 2):  # forest half: ids 9..16
+        fr = np.random.default_rng(100 + k)
+        if k % 2 == 0:
+            X, y = anomaly_dataset(fr, 1024, width)
+            f = train_forest(X, y, task="classify", n_trees=FOREST_TREES,
+                             max_depth=FOREST_DEPTH, max_nodes=63,
+                             seed=200 + k)
+        else:
+            X, y = qos_dataset(fr, 1024, width)
+            f = train_forest(X, y, task="regress", n_trees=FOREST_TREES,
+                             max_depth=FOREST_DEPTH, max_nodes=63,
+                             seed=200 + k)
+        srv.install_forest(N_MODELS // 2 + k + 1, f)
+    # FeatureSpecs over the *converging* register lanes (EWMAs, min/max):
+    # MLPs and forests consume different subsets of one shared flow table
+    mlp_spec = (2, 3, 4, 5) * (width // 4)
+    forest_spec = (4, 5, 2, 3) * (width // 4)
+    for mid in range(1, N_MODELS + 1):
+        srv.install_feature_spec(
+            mid, mlp_spec if mid <= N_MODELS // 2 else forest_spec)
+
+    # Exactly-periodic trace in whole-trace time segments: every flow emits
+    # total/n_flows packets at FLOW_PERIOD spacing, so shifting the whole
+    # trace by one segment span continues every flow's timeline seamlessly
+    # (IAT stays FLOW_PERIOD across the boundary).  Steady-state replay
+    # cycles segments — flow registers stay at their fixed point and the
+    # converged rows keep hitting the result cache, which is exactly what
+    # "per-flow telemetry repeats" means for a flow that never ends.
+    per_flow = total // FLOW_N_FLOWS
+    span = per_flow * FLOW_PERIOD
+    fkeys = dict(
+        src_ip=rng.integers(0, 2 ** 32, FLOW_N_FLOWS),
+        dst_ip=rng.integers(0, 2 ** 32, FLOW_N_FLOWS),
+        src_port=rng.integers(1024, 65536, FLOW_N_FLOWS),
+        dst_port=rng.integers(1, 1024, FLOW_N_FLOWS),
+        proto=rng.choice(np.asarray([6, 17]), FLOW_N_FLOWS))
+    flow_mid = np.arange(FLOW_N_FLOWS) % N_MODELS + 1
+    flow_len = rng.integers(64, 1500, FLOW_N_FLOWS)
+    phase = rng.integers(0, FLOW_PERIOD, FLOW_N_FLOWS)
+    fidx = np.tile(np.arange(FLOW_N_FLOWS), per_flow)
+    base_ts = (phase[fidx]
+               + np.repeat(np.arange(per_flow), FLOW_N_FLOWS) * FLOW_PERIOD)
+    order = np.argsort(base_ts, kind="stable")
+    fidx, base_ts = fidx[order], base_ts[order]
+
+    def segment(r):
+        raw_r = encode_raw_headers(
+            **{k: v[fidx] for k, v in fkeys.items()},
+            model_id=flow_mid[fidx], ts=base_ts + r * span,
+            length=flow_len[fidx])
+        return [raw_r[i: i + chunk] for i in range(0, total, chunk)]
+
+    raw_chunks = segment(0)
+    raw = np.concatenate(raw_chunks)
+    pipe = srv.ingress
+    # pre-trace the lane-pure jit variants so the untimed correctness pass
+    # below measures correctness, not compilation
+    srv.engine.warm(TRACE_CHUNK, pipe.wire_bytes,
+                    lanes=("mlp", "forest", "both"))
+
+    # correctness cross-check (untimed, MUST run on the fresh flow table):
+    # submit_raw egress == hand-built oracle features through the engine
+    params = FlowParams(frac=8)
+    feats = reference_features(raw, params)
+    fields = parse_raw_headers(raw)
+    cols, lens = srv.control_plane.feature_spec_rows(fields.model_id, width)
+    gathered = np.where(
+        cols >= 0, feats[np.arange(total)[:, None], np.maximum(cols, 0)], 0)
+    hand_wire = encode_packets_np(fields.model_id, 8, gathered,
+                                  feature_cnt=lens)
+    for ch in raw_chunks:
+        srv.submit_raw(ch)
+    got = np.stack(srv.drain_packets())
+    want = np.asarray(srv.engine.process(hand_wire))[:, : pipe.out_bytes]
+    bitexact = bool(np.array_equal(got, want))
+    if not bitexact:
+        raise AssertionError("flow engine egress diverged from hand-built "
+                             "feature vectors")
+
+    # one fresh time segment per loop execution (warm + timed + cold +
+    # re-map), pre-encoded outside the timing — never reuse a segment:
+    # replaying old timestamps would wind flow time backwards.  A steady
+    # pass is ~10 ms of pure host work, so the min-of-K estimator gets a
+    # larger K than the device-bound sections at negligible cost.
+    flow_reps = max(12, SWEEPS * REPS)
+    seg_iter = iter([segment(r) for r in range(1, flow_reps + 4)])
+
+    def raw_loop():
+        pipe.reset_tickets()
+        for ch in next(seg_iter):
+            srv.flow.submit_raw(ch)
+        pipe.flush()
+
+    raw_loop()  # converge every flow + populate the result cache
+    h0, m0 = pipe.cache.hits, pipe.cache.misses
+    c0 = pipe.stats["coalesced"]
+    traces_before = srv.engine.trace_count
+    t_steady = float("inf")
+    for _ in range(flow_reps):
+        t_steady = min(t_steady, _min_time(raw_loop, reps=1))
+    dh = pipe.cache.hits - h0
+    dmiss = pipe.cache.misses - m0
+    dco = pipe.stats["coalesced"] - c0
+    steady_hit_rate = dh / (dh + dmiss) if dh + dmiss else 0.0
+    steady_short = (dh + dco) / (dh + dmiss) if dh + dmiss else 0.0
+
+    # cold: fresh flow table + sketch, cleared caches, one timed pass
+    srv._flow = None  # drops register file, table and sketch
+    pipe.reset_tickets()
+    pipe.cache.clear()
+    t0 = time.perf_counter()
+    raw_loop()
+    t_cold = time.perf_counter() - t0
+
+    # hot re-map every model's FeatureSpec mid-serving: zero retraces
+    for mid in range(1, N_MODELS + 1):
+        srv.install_feature_spec(
+            mid, forest_spec if mid <= N_MODELS // 2 else mlp_spec)
+    raw_loop()
+    zero_retraces = srv.engine.trace_count == traces_before
+
+    steady_pps = total / t_steady
+    res = {
+        "trace_packets": total,
+        "n_flows": FLOW_N_FLOWS,
+        "n_mlp": N_MODELS // 2,
+        "n_forests": N_MODELS // 2,
+        "steady_pps": steady_pps,
+        "cold_pps": total / t_cold,
+        "steady_cache_hit_rate": steady_hit_rate,
+        "steady_short_circuit_rate": steady_short,
+        "flow_table_hit_rate": srv.flow.flow_table_hit_rate(),
+        "bitexact_vs_handbuilt": bitexact,
+        "spec_reinstall_zero_retraces": bool(zero_retraces),
+        "steady_floor_pps": FLOW_STEADY_FLOOR_PPS,
+        "meets_steady_floor": bool(steady_pps >= FLOW_STEADY_FLOOR_PPS),
+    }
+    if verbose:
+        print(f"  raw-trace steady (flow eng): {steady_pps:,.0f} pkt/s  "
+              f"(1M floor: "
+              f"{'MET' if res['meets_steady_floor'] else 'BELOW'})")
+        print(f"  raw-trace cold             : {res['cold_pps']:,.0f} pkt/s"
+              f"   short-circuit {steady_short:.0%}  flow-table hits "
+              f"{res['flow_table_hit_rate']:.0%}")
+        print(f"  FeatureSpec re-map retraces: "
+              f"{0 if zero_retraces else 'NONZERO'}")
+    return res
+
+
 def _json_path() -> str:
     default = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_fig1.json")
@@ -555,12 +768,13 @@ def run(verbose: bool = True, reduced: bool | None = None,
         mixed = _mixed_model_comparison(rng, verbose)
         pipeline = _pipeline_comparison(rng, verbose)
         forest = _forest_mixed_comparison(rng, verbose)
+        flow = _flow_raw_comparison(rng, verbose)
     finally:
         if saved:
             globals().update(saved)
 
     result = {"rows": rows, "trend_validated": bool(monotonic), **mixed,
-              "pipeline": pipeline, "forest": forest}
+              "pipeline": pipeline, "forest": forest, "flow": flow}
     payload = {
         "schema": 1,
         "bench": "fig1_throughput",
@@ -574,6 +788,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
                                         "install_zero_retraces")},
         "pipeline": pipeline,
         "forest": forest,
+        "flow": flow,
     }
     if write_json:
         path = json_path or _json_path()

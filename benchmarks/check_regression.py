@@ -44,6 +44,12 @@ TRACKED = {
     ("forest", "pipeline_cold_pps"): "throughput",
     ("forest", "forest_only_pps"): "throughput",
     ("forest", "install_zero_retraces"): "bool",
+    ("flow", "steady_pps"): "throughput",  # PR-4: raw-trace flow engine
+    ("flow", "cold_pps"): "throughput",
+    # machine-independent: the converged periodic trace must short-circuit
+    ("flow", "steady_short_circuit_rate"): ("floor", 0.8),
+    ("flow", "bitexact_vs_handbuilt"): "bool",
+    ("flow", "spec_reinstall_zero_retraces"): "bool",
     ("trend_validated",): "bool",
 }
 

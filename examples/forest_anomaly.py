@@ -51,6 +51,16 @@ def main():
 
     # tenant 2: train → quantize → install the anomaly forest
     X, y = anomaly_dataset(rng, 4096, WIDTH)
+    # seeding-audit pin: every generator draws only from the explicit rng
+    # chain above, so this statistic is reproducible run to run — if it
+    # drifts, something upstream started consuming global RNG state (or
+    # changed its draw count) and the example lost end-to-end pinning.
+    # Loose tolerance on purpose: numpy does not promise bit-identical
+    # Generator streams across versions/platforms, and a libm ULP must
+    # not fail a working example — only a different draw *sequence* will.
+    assert abs(float(np.abs(X).sum()) - 13059.76) < 50.0 \
+        and abs(int(y.sum()) - 604) < 25, \
+        "forest_anomaly example lost its seed pinning"
     forest = train_forest(X[:3072], y[:3072], task="classify", n_trees=8,
                           max_depth=5, max_nodes=63, seed=1)
     server.install_forest(2, forest)

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.ref import N_FLOW_FEATURES
 from .fixedpoint import FixedPointFormat, encode
 
 __all__ = [
@@ -56,6 +57,7 @@ __all__ = [
     "ACTIVATIONS",
     "ModelTables",
     "ForestTables",
+    "FeatureSpec",
     "ControlPlane",
     "WeightRegistry",
 ]
@@ -140,6 +142,32 @@ class ForestTables:
         return cls(*children)
 
 
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """Flow-feature → model-input column mapping (the Planter "feature
+    mapping stage" as its own control-plane object).
+
+    ``columns[j]`` names the flow-engine feature lane
+    (``kernels.ref.FLOW_FEATURE_NAMES`` order) that feeds the model's input
+    column ``j``.  Installed per Model ID with the same generation-swap
+    discipline as the weight tables, so an MLP and a forest can consume
+    *different* register subsets from one shared flow table, and
+    re-mapping a live model is one host-side swap — no data-plane retrace
+    (the wire shape never changes; the parser masks unused columns).
+    """
+
+    columns: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.columns:
+            raise ValueError("FeatureSpec needs at least one column")
+        for c in self.columns:
+            if not 0 <= int(c) < N_FLOW_FEATURES:
+                raise ValueError(
+                    f"FeatureSpec column {c} outside the flow engine's "
+                    f"[0, {N_FLOW_FEATURES}) feature lanes")
+
+
 class ControlPlane:
     """Host-side registry that owns and mutates the model tables.
 
@@ -195,6 +223,16 @@ class ControlPlane:
         # "compile the forest lane" decision off this, so it is monotone —
         # at most one extra trace over the process lifetime, never a flap
         self._forest_ever = False
+        # -- flow feature-spec family (host-only: consumed by the flow
+        #    frontend, never uploaded to the device — an install is still a
+        #    generation swap so readers see one coherent mapping) --
+        self._spec_map = np.full((65536,), -1, np.int32)
+        self._spec_rows = np.full((0, max_width), -1, np.int32)
+        self._spec_lens = np.zeros((0,), np.int32)
+        self._specs: Dict[int, "FeatureSpec"] = {}
+        # per-generation read LUT (identity row prepended so slot -1 maps
+        # to it via +1): the frontend's hot path is one gather, no masks
+        self._spec_read_cache: Optional[Tuple] = None
         self._version = 0
         # per-family write counters: the shared `_version` is the cache/
         # staleness key (one counter must cover both families), but device
@@ -410,6 +448,100 @@ class ControlPlane:
         generation falls back to a both-lane dispatch)."""
         with self._lock:
             return self._f_id_map[np.asarray(model_ids, np.int64)] >= 0
+
+    # -- flow feature-spec family ---------------------------------------
+
+    def install_feature_spec(self, model_id: int, spec) -> int:
+        """Install (or hot-swap) the :class:`FeatureSpec` mapping flow-engine
+        feature lanes onto ``model_id``'s input columns.  Returns the spec
+        slot.
+
+        Same write discipline as the table families — validate everything,
+        copy-on-write, one version bump — but the spec family is host-only
+        state read by the flow frontend: a reinstall publishes a new mapping
+        for the *next* submitted raw batch and can never retrace the data
+        plane (the wire shape is fixed; only the bytes inside it change).
+        The version bump conservatively orphans cached egress rows built
+        under the old mapping's wire rows.
+
+        A spec outlives ``remove()`` of its model: the mapping belongs to
+        the Model ID (a retrained model reinstalled under the same id keeps
+        consuming the same registers) — drop it explicitly with
+        :meth:`remove_feature_spec`.
+        """
+        if not isinstance(spec, FeatureSpec):
+            spec = FeatureSpec(columns=tuple(int(c) for c in spec))
+        if not 0 <= int(model_id) < 65536:
+            raise ValueError(f"model id {model_id} outside the 16-bit "
+                             "Model ID field")
+        if len(spec.columns) > self.max_width:
+            raise ValueError(
+                f"FeatureSpec has {len(spec.columns)} columns > "
+                f"max_width={self.max_width} input lanes")
+        with self._lock:
+            slot = int(self._spec_map[model_id])
+            if slot < 0:  # the map only changes when a new slot is minted
+                self._spec_map = self._spec_map.copy()
+                slot = self._spec_rows.shape[0]
+                self._spec_rows = np.concatenate(
+                    [self._spec_rows,
+                     np.full((1, self.max_width), -1, np.int32)])
+                self._spec_lens = np.concatenate(
+                    [self._spec_lens, np.zeros(1, np.int32)])
+                self._spec_map[model_id] = slot
+            else:
+                self._spec_rows = self._spec_rows.copy()
+                self._spec_lens = self._spec_lens.copy()
+            self._spec_rows[slot] = -1
+            self._spec_rows[slot, : len(spec.columns)] = spec.columns
+            self._spec_lens[slot] = len(spec.columns)
+            self._specs[model_id] = spec
+            self._version += 1
+            return slot
+
+    def remove_feature_spec(self, model_id: int) -> None:
+        """Uninstall a feature spec; the model id falls back to the identity
+        mapping (no-op if none installed)."""
+        with self._lock:
+            if self._specs.pop(model_id, None) is None:
+                return
+            self._spec_map = self._spec_map.copy()
+            self._spec_map[model_id] = -1  # row slot retired (specs are tiny)
+            self._version += 1
+
+    def feature_spec(self, model_id: int) -> Optional[FeatureSpec]:
+        with self._lock:
+            return self._specs.get(model_id)
+
+    def feature_spec_rows(self, model_ids: np.ndarray, width: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized per-packet spec gather for the flow frontend: returns
+        ``(cols, lens)`` with ``cols`` of shape ``(B, width)`` holding each
+        packet's flow-feature lane per model input column (``-1`` = unused
+        column, encoded as a zero code) and ``lens`` the declared feature
+        counts.  Ids with no installed spec use the identity mapping over
+        the first ``min(N_FLOW_FEATURES, width)`` lanes."""
+        mids = np.asarray(model_ids, np.int64).reshape(-1)
+        with self._lock:
+            cache = self._spec_read_cache
+            if cache is None or cache[0] != self._version:
+                ident = np.full((1, self.max_width), -1, np.int32)
+                k = min(N_FLOW_FEATURES, self.max_width)
+                ident[0, :k] = np.arange(k, dtype=np.int32)
+                cache = (self._version, self._spec_map,
+                         np.concatenate([ident, self._spec_rows]),
+                         np.concatenate([np.asarray([k], np.int32),
+                                         self._spec_lens]))
+                self._spec_read_cache = cache
+        _, smap, rows_ext, lens_ext = cache
+        slot = smap[mids] + 1  # 0 = the identity row
+        w = min(width, rows_ext.shape[1])
+        cols = rows_ext[slot][:, :w]
+        if w < width:
+            cols = np.concatenate(
+                [cols, np.full((mids.shape[0], width - w), -1, np.int32)],
+                axis=1)
+        return cols, np.minimum(lens_ext[slot], width)
 
     @property
     def forest_active(self) -> bool:

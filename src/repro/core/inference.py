@@ -48,6 +48,7 @@ device compute and reconcile timing at drain.
 from __future__ import annotations
 
 import time
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -237,6 +238,19 @@ class DataPlaneEngine:
     def process(self, pkts) -> jax.Array:
         """Blocking alias of :meth:`run` (the seed API)."""
         return self.run(pkts, block=True)
+
+    def warm(self, batch_size: int, wire_len: int, *,
+             lanes: Sequence[str] = ("both",)) -> None:
+        """Pre-trace the jit variants a serving loop will hit (one per
+        ``(shape, lanes)`` combination) on a dead batch, outside any timed
+        window.  Stats are rolled back: warming is not traffic.  Benchmarks
+        and latency-sensitive deployments call this so the first real batch
+        never pays the compile."""
+        pkts = jnp.zeros((batch_size, wire_len), jnp.uint8)
+        before = dict(self.stats)
+        for lane in lanes:
+            self.run(pkts, block=True, lanes=lane)
+        self.stats = before
 
     def add_seconds(self, dt: float) -> None:
         """Credit wall-clock spent by an external async drain loop."""

@@ -144,18 +144,22 @@ def hash_words(words: np.ndarray) -> np.ndarray:
     return h
 
 
-def _dedup_rows(words: np.ndarray, hashes: np.ndarray
-                ) -> Tuple[np.ndarray, np.ndarray]:
+def _dedup_rows(words: np.ndarray, hashes: np.ndarray,
+                want_rank: bool = False):
     """Exact first-occurrence dedup of packed rows.
 
-    Sorts by the 64-bit hash (a scalar sort — much cheaper than
-    ``np.unique(axis=0)``'s structured sort) and verifies full word equality
-    between sort-neighbours, so a hash collision can only ever *miss* a
-    coalescing opportunity, never merge two distinct packets.  Returns
-    ``(uniq_idx, inverse)`` with ``rows[uniq_idx][inverse] == rows``.
+    Sorts by the *folded* 32-bit hash (numpy's stable radix sort scales
+    with key bytes — 4-byte keys sort ~2× faster than 8-byte ones; the
+    mixing hash's low word is uniformly distributed) and verifies the full
+    64-bit hash plus word equality between sort-neighbours, so a hash or
+    fold collision can only ever *miss* a coalescing opportunity, never
+    merge two distinct packets (identical rows share a fold, so they stay
+    adjacent; an interleaving fold collision merely splits their group).
+    Returns ``(uniq_idx, inverse)`` with ``rows[uniq_idx][inverse] ==
+    rows``.
     """
     n = words.shape[0]
-    order = np.argsort(hashes, kind="stable")
+    order = np.argsort(hashes.astype(np.uint32), kind="stable")
     sw = words[order]
     new = np.empty(n, bool)
     new[0] = True
@@ -164,7 +168,15 @@ def _dedup_rows(words: np.ndarray, hashes: np.ndarray
     group = np.cumsum(new) - 1
     inverse = np.empty(n, np.int64)
     inverse[order] = group
-    return order[new], inverse
+    if not want_rank:
+        return order[new], inverse
+    # per-group occurrence rank in original order (the stable sort keeps
+    # equal rows in arrival order) — callers that need both dedup and
+    # within-group ranking get them from the one argsort.  Late import:
+    # the definition lives with the flow-update kernel (its consumer);
+    # importing it at module top would cycle through core.__init__.
+    from ..kernels.flow_update import rank_from_order
+    return order[new], inverse, rank_from_order(order, new)
 
 
 # ---------------------------------------------------------------------------
@@ -511,12 +523,18 @@ class IngressPipeline:
         arrivals).  ``None`` (default) preserves the fill-or-flush behavior:
         a partial batch waits for ``flush()``; ``0.0`` dispatches whatever
         is staged as soon as the submit that staged it returns.
+    clock:
+        Monotonic-seconds source for the ``flush_after`` age checks
+        (default ``time.perf_counter``).  Injectable so age-based behavior
+        is testable without wall-clock sleeps — tests advance a fake clock
+        deterministically instead of racing the scheduler.
     """
 
     def __init__(self, engine, *, batch_size: int = 2048,
                  max_inflight: int = 2, use_cache: bool = True,
                  cache_capacity_pow2: int = 15,
-                 flush_after: Optional[float] = None):
+                 flush_after: Optional[float] = None,
+                 clock=None):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
         if max_inflight <= 0:
@@ -570,6 +588,7 @@ class IngressPipeline:
         self._free_bufs: Deque[int] = deque(range(n_bufs))
         self._open: Dict[str, _OpenBatch] = {}
         self.flush_after = flush_after
+        self._clock = clock if clock is not None else time.perf_counter
 
         self._inflight: Deque[_InFlight] = deque()
         self._chunks: Deque[_ChunkRecord] = deque()
@@ -638,7 +657,7 @@ class IngressPipeline:
     def _maybe_flush_aged(self) -> bool:
         if self.flush_after is None or not self._open:
             return False
-        now = time.perf_counter()
+        now = self._clock()
         fired = False
         for fam, o in list(self._open.items()):
             if o.fill and now - o.t0 >= self.flush_after:
@@ -779,7 +798,7 @@ class IngressPipeline:
         while not self._free_bufs:  # pool sized so this never loops, but
             self._retire_oldest()   # stay safe if invariants ever shift
         o = _OpenBatch(family=family, buf=self._free_bufs.popleft(), fill=0,
-                       t0=time.perf_counter(), gen0=generation,
+                       t0=self._clock(), gen0=generation,
                        miss_idx=np.empty(self.batch_size, np.int64))
         self._open[family] = o
         return o

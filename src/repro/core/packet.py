@@ -34,6 +34,8 @@ __all__ = [
     "ParsedBatch",
     "packet_nbytes",
     "encode_packets",
+    "encode_packets_np",
+    "write_header_np",
     "parse_packets",
     "emit_results",
     "FLAG_PADDED",
@@ -124,6 +126,54 @@ def encode_packets(model_id: jax.Array, scale: jax.Array, features_q: jax.Array,
     fb = jnp.right_shift(fq[:, :, None], shifts[None, None, :]).astype(jnp.uint8)
     payload = fb.reshape(b, f * 4)
     return jnp.concatenate([header, payload], axis=1).astype(jnp.uint8)
+
+
+def encode_packets_np(model_id, scale, features_q: np.ndarray,
+                      flags=None, output_cnt=None,
+                      feature_cnt=None) -> np.ndarray:
+    """Host-side numpy twin of :func:`encode_packets` — byte-identical for
+    the same inputs (asserted by the tier-1 suite).
+
+    The flow engine encapsulates on the ingress hot path, where building the
+    wire rows through eager jnp ops would cost a device round trip per
+    batch; this encoder is pure vectorized numpy.  ``feature_cnt`` (absent
+    from the jax encoder, whose callers always fill the block) optionally
+    sets the per-packet declared feature count — the parser masks features
+    beyond it, which is how a model whose :class:`FeatureSpec` selects fewer
+    columns than the wire block carries rides the fixed wire shape.
+    """
+    features_q = np.asarray(features_q, np.int32)
+    b, f = features_q.shape
+    out = np.empty((b, HEADER_BYTES + FEATURE_BYTES * f), np.uint8)
+    write_header_np(out, model_id, scale, flags=flags,
+                    output_cnt=output_cnt,
+                    feature_cnt=f if feature_cnt is None else feature_cnt)
+    out[:, HEADER_BYTES:] = np.ascontiguousarray(
+        features_q.astype(">i4")).view(np.uint8).reshape(b, 4 * f)
+    return out
+
+
+def write_header_np(out: np.ndarray, model_id, scale, *, flags=None,
+                    output_cnt=None, feature_cnt=0) -> None:
+    """Write the 7-byte encapsulation header into ``out[:, :HEADER_BYTES]``
+    (vectorized, broadcasting scalars) — the one host-side definition of
+    the header byte layout, shared by :func:`encode_packets_np` and the
+    flow frontend's fused gather-encode."""
+    b = out.shape[0]
+    mid = np.broadcast_to(np.asarray(model_id, np.int64), (b,))
+    out[:, 0] = (mid >> 8) & 0xFF
+    out[:, 1] = mid & 0xFF
+    fc = np.broadcast_to(np.asarray(feature_cnt, np.int64), (b,))
+    out[:, 2] = fc & 0xFF
+    oc = np.broadcast_to(
+        np.asarray(0 if output_cnt is None else output_cnt, np.int64), (b,))
+    out[:, 3] = oc & 0xFF
+    sc = np.broadcast_to(np.asarray(scale, np.int64), (b,))
+    out[:, 4] = (sc >> 8) & 0xFF
+    out[:, 5] = sc & 0xFF
+    fl = np.broadcast_to(
+        np.asarray(0 if flags is None else flags, np.int64), (b,))
+    out[:, 6] = fl & 0xFF
 
 
 # ---------------------------------------------------------------------------

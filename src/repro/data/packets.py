@@ -1,13 +1,21 @@
 """Synthetic packet-trace generator — the DPDK-pktgen / Scapy analogue of the
 paper's methodology (§2: "BMv2 simulations ... utilizing traffic generated
 via Scapy").  Produces encapsulated feature packets (Table 1) for the
-data-plane engine benchmarks and the QoS serving example.
+data-plane engine benchmarks and the QoS serving example, plus **raw**
+5-tuple header traces (no feature block — the flow engine computes the
+features) for the stateful flow-engine workload.
+
+Determinism contract: every generator takes an explicit
+``numpy.random.Generator`` (``rng``) as its first argument — or, for the
+config-driven :func:`packet_stream`, an explicit ``seed`` in the config —
+and never touches global RNG state, so every dataset, trace and example in
+this repo is reproducible end to end from its seeds.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -15,7 +23,9 @@ import numpy as np
 from ..core.packet import encode_packets
 
 __all__ = ["PacketGenConfig", "packet_stream", "flow_features",
-           "anomaly_dataset", "qos_dataset"]
+           "anomaly_dataset", "qos_dataset",
+           "RAW_HEADER_BYTES", "RAW_KEY_BYTES", "RawHeaderBatch",
+           "encode_raw_headers", "parse_raw_headers", "raw_trace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +76,164 @@ def qos_dataset(rng: np.random.Generator, n: int, d: int = 8
     y = (0.2 + 0.6 * congested + 0.3 * np.maximum(X[:, 1 % d], 0)
          + 0.1 * (X[:, 2 % d] > 0.3))
     return X, y.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Raw 5-tuple header traces (the flow-engine ingress format)
+# ---------------------------------------------------------------------------
+
+# Raw header wire layout (network byte order) — what a P4 parser extracts
+# from the outer IPv4/L4 headers before any NN encapsulation exists:
+#
+#     src_ip(4) dst_ip(4) src_port(2) dst_port(2) proto(1)   ← 13-byte flow key
+#     model_id(2)  ts(4, ticks)  length(2, wire bytes)       ← metadata
+#
+# ``model_id`` stands in for the NIC's traffic classifier (which tenant
+# model this packet's flow is steered to); ``ts`` is the ingress timestamp
+# in abstract ticks (int32, monotone per trace).
+RAW_KEY_BYTES = 13
+RAW_HEADER_BYTES = RAW_KEY_BYTES + 8
+
+
+@dataclasses.dataclass
+class RawHeaderBatch:
+    """Parsed raw-header fields, all host numpy arrays."""
+
+    key_bytes: np.ndarray  # (B, RAW_KEY_BYTES) uint8 — the 5-tuple flow key
+    model_id: np.ndarray   # (B,) int32
+    ts: np.ndarray         # (B,) int32 arrival ticks
+    length: np.ndarray     # (B,) int32 wire bytes
+
+
+def encode_raw_headers(src_ip, dst_ip, src_port, dst_port, proto, model_id,
+                       ts, length) -> np.ndarray:
+    """Pack raw header fields into ``(B, RAW_HEADER_BYTES)`` uint8 rows
+    (big-endian fields, numpy host-side — this is trace generation, not the
+    data plane)."""
+    src_ip = np.asarray(src_ip, np.int64)
+    b = src_ip.shape[0]
+    out = np.empty((b, RAW_HEADER_BYTES), np.uint8)
+
+    def be(col, val, nbytes):
+        val = np.broadcast_to(np.asarray(val, np.int64), (b,))
+        for i in range(nbytes):
+            out[:, col + i] = (val >> (8 * (nbytes - 1 - i))) & 0xFF
+    be(0, src_ip, 4)
+    be(4, dst_ip, 4)
+    be(8, src_port, 2)
+    be(10, dst_port, 2)
+    be(12, proto, 1)
+    be(13, model_id, 2)
+    be(15, ts, 4)
+    be(19, length, 2)
+    return out
+
+
+def parse_raw_headers(raw: np.ndarray) -> RawHeaderBatch:
+    """Vectorized host parse of ``(B, RAW_HEADER_BYTES)`` uint8 rows."""
+    raw = np.ascontiguousarray(raw, np.uint8)
+    if raw.ndim != 2 or raw.shape[1] != RAW_HEADER_BYTES:
+        raise ValueError(
+            f"raw header batch must be (n, {RAW_HEADER_BYTES}) uint8, "
+            f"got {raw.shape}")
+
+    def be(col, nbytes):
+        v = np.zeros(raw.shape[0], np.int64)
+        for i in range(nbytes):
+            v = (v << 8) | raw[:, col + i]
+        return v.astype(np.int32)
+    return RawHeaderBatch(
+        key_bytes=raw[:, :RAW_KEY_BYTES],
+        model_id=be(13, 2),
+        ts=be(15, 4),
+        length=be(19, 2),
+    )
+
+
+def raw_trace(rng: np.random.Generator, n_packets: int, *,
+              n_flows: int = 256, model_ids: Sequence[int] = (1,),
+              pattern: str = "mixed", base_period: int = 1024,
+              jitter: int = 0, burst_len: int = 8,
+              burst_gap: int = 16384, intra_gap: int = 16,
+              fixed_length: bool = True) -> np.ndarray:
+    """Deterministic raw 5-tuple trace with bursty and/or periodic flows —
+    the workload the paper's QoS/anomaly models actually see before any
+    feature vector exists.
+
+    Each of ``n_flows`` flows gets a random (but rng-deterministic) 5-tuple
+    and a model id (cyclic over ``model_ids`` — the classifier steering
+    that flow's packets to one tenant model), then emits arrivals:
+
+      * ``"periodic"`` — fixed inter-arrival ``base_period`` (per-flow phase
+        offset, optional ±``jitter`` ticks): the telemetry/heartbeat regime
+        whose flow features converge — exactly the traffic where per-flow
+        state, not FLOPs, decides in-network throughput.
+      * ``"bursty"``   — packet trains: ~``burst_len`` packets ``intra_gap``
+        ticks apart, trains separated by ~``burst_gap`` ticks (geometric
+        sizes / exponential gaps) — the heavy-hitter / anomaly regime.
+      * ``"mixed"``    — even flows periodic, odd flows bursty.
+
+    ``fixed_length`` gives every periodic flow one constant packet length
+    (telemetry-like); bursty flows always draw per-packet lengths.  Returns
+    ``(n_packets, RAW_HEADER_BYTES)`` uint8 rows sorted by arrival tick
+    (stable, so per-flow order is generation order).
+    """
+    if pattern not in ("periodic", "bursty", "mixed"):
+        raise ValueError(f"unknown trace pattern: {pattern!r}")
+    if n_flows <= 0 or n_packets <= 0:
+        raise ValueError("n_flows and n_packets must be positive")
+    per_flow = -(-n_packets // n_flows) + 2  # ceil + margin before the sort
+    mids = np.asarray(model_ids, np.int64)
+
+    flow_src = rng.integers(0, 2 ** 32, n_flows, np.uint32).astype(np.int64)
+    flow_dst = rng.integers(0, 2 ** 32, n_flows, np.uint32).astype(np.int64)
+    flow_sp = rng.integers(1024, 65536, n_flows).astype(np.int64)
+    flow_dp = rng.integers(1, 1024, n_flows).astype(np.int64)
+    flow_proto = rng.choice(np.asarray([6, 17], np.int64), n_flows)
+    flow_mid = mids[np.arange(n_flows) % mids.size]
+    flow_len = rng.integers(64, 1500, n_flows).astype(np.int64)
+
+    all_ts, all_flow = [], []
+    for i in range(n_flows):
+        periodic = pattern == "periodic" or (pattern == "mixed"
+                                             and i % 2 == 0)
+        if periodic:
+            phase = int(rng.integers(0, base_period))
+            ts = phase + np.arange(per_flow, dtype=np.int64) * base_period
+            if jitter:
+                ts = ts + rng.integers(-jitter, jitter + 1, per_flow)
+        else:
+            iats = np.where(
+                rng.random(per_flow) < 1.0 / max(burst_len, 1),
+                rng.exponential(burst_gap, per_flow),
+                float(intra_gap)).astype(np.int64)
+            iats[0] = rng.integers(0, burst_gap)
+            ts = np.cumsum(iats)
+        all_ts.append(ts)
+        all_flow.append(np.full(per_flow, i, np.int64))
+    ts = np.concatenate(all_ts)
+    flow = np.concatenate(all_flow)
+    order = np.argsort(ts, kind="stable")[:n_packets]
+    ts, flow = ts[order], flow[order]
+    ts = np.minimum(ts, 2 ** 31 - 1)
+
+    if fixed_length:
+        length = flow_len[flow]
+        bursty_pkt = np.zeros(flow.shape[0], bool)
+        if pattern == "bursty":
+            bursty_pkt[:] = True
+        elif pattern == "mixed":
+            bursty_pkt = flow % 2 == 1
+        if bursty_pkt.any():
+            length = length.copy()
+            length[bursty_pkt] = rng.integers(
+                64, 1500, int(bursty_pkt.sum()))
+    else:
+        length = rng.integers(64, 1500, flow.shape[0]).astype(np.int64)
+
+    return encode_raw_headers(flow_src[flow], flow_dst[flow], flow_sp[flow],
+                              flow_dp[flow], flow_proto[flow],
+                              flow_mid[flow], ts, length)
 
 
 def packet_stream(cfg: PacketGenConfig) -> Iterator[Dict]:

@@ -1,0 +1,35 @@
+"""Stateful flow engine — in-line per-flow feature extraction feeding the
+data plane (the pForest / Planter stateful stage).
+
+The paper's QoS/anomaly models consume *flow-level* features (packet
+counts, byte totals, inter-arrival and length EWMAs, heavy-hitter
+estimates) that a real P4 SmartNIC computes in stateful registers before
+the ML stage ever runs.  This package reproduces that layer:
+
+  * ``table``     — :class:`FlowTable`: vectorized open-addressing 5-tuple
+                    → register-slot table (exact key verify, idle expiry,
+                    tombstone compaction, eviction that can never serve one
+                    flow another flow's registers)
+  * update kernel — ``repro.kernels.flow_update``: the sequential
+                    scatter-update of the register file + count-min sketch
+                    (Pallas kernel + rank-round vectorized CPU lowering,
+                    both bit-exact vs the pure-Python oracle
+                    ``repro.kernels.ref.flow_update_numpy``)
+  * ``frontend``  — :class:`FlowFrontend`: ``submit_raw()`` wires parse →
+                    flow-update → per-model :class:`FeatureSpec` gather →
+                    encapsulation → the existing ingress pipeline
+                    (dedup / result cache / lane-pure dispatch)
+
+Feature-to-model mapping lives in the control plane
+(``ControlPlane.install_feature_spec``) with the same generation-swap
+discipline as the weight tables — re-mapping a live model is a host-side
+swap with zero data-plane retraces.
+"""
+
+from ..kernels.ref import (FLOW_FEATURE_NAMES, N_FLOW_FEATURES,
+                           N_FLOW_REGISTERS)
+from .frontend import FlowFrontend, FlowParams, reference_features
+from .table import FlowTable
+
+__all__ = ["FlowTable", "FlowFrontend", "FlowParams", "reference_features",
+           "FLOW_FEATURE_NAMES", "N_FLOW_FEATURES", "N_FLOW_REGISTERS"]

@@ -18,6 +18,13 @@
                              majority/mean vote, all in one kernel over the
                              stacked forest node tables (the pForest/Planter
                              match-action pipeline)
+  * ``flow_update``        — (module ``flow_update``) stateful per-flow
+                             register update + feature emit for the flow
+                             engine (``repro.flow``): sequential scatter
+                             over the register file + count-min sketch —
+                             Pallas kernel and a rank-round vectorized CPU
+                             lowering, both bit-exact vs the pure-Python
+                             oracle ``ref.flow_update_numpy``
   * ``wkv_scan``           — chunked RWKV-6 WKV scan with the recurrent
                              state resident in VMEM across chunks (the
                              §Perf rwkv hillclimb's end-state)
@@ -28,10 +35,10 @@ has a pure-Python scalar oracle); `ops.py` wrappers dispatch by platform
 """
 
 from . import ops, ref, wkv_scan
-from .ops import (KERNEL_VARIANTS, fixedpoint_matmul, forest_traverse,
-                  fused_mlp, taylor_activation)
+from .ops import (KERNEL_VARIANTS, fixedpoint_matmul, flow_update,
+                  forest_traverse, fused_mlp, taylor_activation)
 from .wkv_scan import wkv_scan_pallas
 
 __all__ = ["ops", "ref", "wkv_scan", "fixedpoint_matmul",
            "taylor_activation", "fused_mlp", "forest_traverse",
-           "wkv_scan_pallas", "KERNEL_VARIANTS"]
+           "flow_update", "wkv_scan_pallas", "KERNEL_VARIANTS"]

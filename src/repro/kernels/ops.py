@@ -24,11 +24,12 @@ import numpy as np
 from . import ref
 from .fixedpoint_matmul import BK, BM, BN, fixedpoint_matmul_pallas
 from .fixedpoint_mlp import BB, KERNEL_VARIANTS, fixedpoint_mlp_pallas
+from .flow_update import flow_update_gather, flow_update_pallas
 from .forest_traversal import FB, forest_traverse_pallas
 from .taylor_activation import BC, BR, taylor_activation_pallas
 
 __all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp",
-           "forest_traverse", "on_tpu", "KERNEL_VARIANTS"]
+           "forest_traverse", "flow_update", "on_tpu", "KERNEL_VARIANTS"]
 
 
 def on_tpu() -> bool:
@@ -184,6 +185,47 @@ def forest_traverse(x_q: jax.Array, slot: jax.Array, nodes: jax.Array,
                                  max_depth=max_depth, frac=frac,
                                  interpret=not on_tpu())
     return out[:n_batch]
+
+
+def flow_update(state, cms, slots, cells, ts, length, live, *, frac: int,
+                ewma_shift: int = 3, byte_shift: int = 6,
+                dur_shift: int = 10, backend: str = "auto",
+                copy: bool = True, rank=None):
+    """Stateful per-flow register update + feature emit for one fixed-shape
+    batch of parsed raw headers (see ``kernels.flow_update`` for the stage's
+    role and ``ref.flow_update_numpy`` for the exact semantics).
+
+    Returns ``(new_state, new_cms, features)``.  Unlike the stateless
+    kernels this op carries *state through time*: the caller (the flow
+    engine) owns the register file and feeds each batch the previous
+    batch's output state.
+
+    Backend dispatch mirrors the other wrappers — with one host-side twist:
+    the production CPU path (``"auto"`` off-TPU) is **numpy**, not jnp,
+    because the flow engine is a host-side ingress stage (the register file
+    lives next to the flow hash table) and the rank-round lowering there
+    beats any jit'd sequential scan by orders of magnitude.  ``copy=False``
+    lets that path update the register file in place — the serving hot
+    path.  ``rank`` optionally carries each packet's within-flow
+    occurrence order (the flow table computes it as a dedup by-product) so
+    the CPU lowering skips re-ranking; the other backends ignore it (the
+    kernel and oracle walk in batch order anyway).  ``"pallas"`` runs the
+    kernel (interpreted off-TPU) and ``"ref"`` the pure-Python oracle;
+    both always return fresh arrays.
+    """
+    if backend not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown backend: {backend!r}")
+    kw = dict(frac=frac, ewma_shift=ewma_shift, byte_shift=byte_shift,
+              dur_shift=dur_shift)
+    if backend == "ref":
+        return ref.flow_update_numpy(state, cms, slots, cells, ts, length,
+                                     live, **kw)
+    if backend == "pallas" or on_tpu():
+        return flow_update_pallas(state, cms, slots, cells, ts, length,
+                                  live, interpret=not on_tpu(), **kw)
+    return flow_update_gather(np.asarray(state), np.asarray(cms), slots,
+                              cells, ts, length, live, copy=copy, rank=rank,
+                              **kw)
 
 
 def taylor_activation(x_q: jax.Array, coeffs, x_frac: int,

@@ -10,7 +10,12 @@ import numpy as np
 __all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "fused_mlp_ref",
            "fused_mlp_gather_ref", "rounding_rshift", "lane_clamp",
            "wkv_scan_ref", "forest_traverse_numpy", "forest_traverse_ref",
-           "forest_traverse_gather_ref", "FOREST_REGRESS", "FOREST_CLASSIFY"]
+           "forest_traverse_gather_ref", "FOREST_REGRESS", "FOREST_CLASSIFY",
+           "flow_update_numpy", "rounding_rshift_np", "sat_shl_np",
+           "N_FLOW_REGISTERS", "N_FLOW_FEATURES", "FLOW_CODE_MAX",
+           "REG_PKT_COUNT", "REG_BYTE_COUNT", "REG_LAST_TS", "REG_FIRST_TS",
+           "REG_EWMA_IAT", "REG_EWMA_LEN", "REG_MIN_LEN", "REG_MAX_LEN",
+           "FLOW_FEATURE_NAMES"]
 
 
 def wkv_scan_ref(a: jax.Array, b: jax.Array, v: jax.Array, tot: jax.Array,
@@ -341,6 +346,133 @@ def forest_traverse_gather_ref(x_q: jax.Array, slot: jax.Array,
     reg = jnp.sum(jnp.where(on, leaf, 0), axis=1)        # (B,)
     reg_out = jnp.where(lane[0] == 0, reg[:, None], 0)
     return jnp.where(md == FOREST_CLASSIFY, votes, reg_out)
+
+
+# ---------------------------------------------------------------------------
+# Stateful flow engine (repro.flow) — per-flow register update + feature emit
+# ---------------------------------------------------------------------------
+
+# Register-file columns, one row per flow-table slot.  All registers are
+# int32; counters/lengths/timestamps are raw integer quantities, the EWMA
+# registers are fixed-point codes at the wire's ``frac`` fractional bits
+# (the same grid ``core.fixedpoint.encode`` writes).
+REG_PKT_COUNT = 0   # packets seen (0 ⇒ slot holds no flow state yet)
+REG_BYTE_COUNT = 1  # saturating byte total
+REG_LAST_TS = 2     # tick of the last packet (drives inter-arrival + expiry)
+REG_FIRST_TS = 3    # tick of the first packet (drives the duration feature)
+REG_EWMA_IAT = 4    # EWMA of inter-arrival ticks, code at ``frac``
+REG_EWMA_LEN = 5    # EWMA of packet length, code at ``frac``
+REG_MIN_LEN = 6     # smallest packet length seen
+REG_MAX_LEN = 7     # largest packet length seen
+N_FLOW_REGISTERS = 8
+
+# Emitted per-packet feature lanes (post-update flow state, every lane a
+# fixed-point code at ``frac`` — directly encodable into the wire's feature
+# block).  ``FeatureSpec`` columns index into this order.
+FLOW_FEATURE_NAMES = ("pkt_count", "byte_count", "iat_ewma", "len_ewma",
+                      "len_min", "len_max", "duration", "cms_count")
+N_FLOW_FEATURES = len(FLOW_FEATURE_NAMES)
+
+# Every register/feature value lives in [0, FLOW_CODE_MAX] (EWMA deltas then
+# fit int32 with headroom), so the update arithmetic can never wrap — the
+# saturation bound is part of the bit-exact contract, not a soft limit.
+FLOW_CODE_MAX = (1 << 30) - 1
+
+
+def rounding_rshift_np(x, shift: int):
+    """Numpy twin of :func:`rounding_rshift` (arithmetic right shift,
+    round-to-nearest, ties away from zero) — the oracle and the vectorized
+    CPU lowering must share one definition with the jnp kernels."""
+    if shift <= 0:
+        return x
+    x = np.asarray(x)
+    rounding = np.where(x >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1)
+    return (x + rounding.astype(x.dtype)) >> shift
+
+
+def sat_shl_np(v, shift: int):
+    """Saturating left shift of a non-negative quantity onto the ``shift``
+    fractional-bit code grid: values beyond ``FLOW_CODE_MAX >> shift``
+    saturate instead of wrapping."""
+    v = np.minimum(np.maximum(v, 0), FLOW_CODE_MAX >> shift)
+    return v << shift
+
+
+def flow_update_numpy(state: np.ndarray, cms: np.ndarray, slots: np.ndarray,
+                      cells: np.ndarray, ts: np.ndarray, length: np.ndarray,
+                      live: np.ndarray, *, frac: int, ewma_shift: int,
+                      byte_shift: int, dur_shift: int):
+    """THE flow-update oracle: a pure-Python per-packet walk of the register
+    file, in batch order.
+
+    Deliberately scalar (the hardware analogue is one packet at a time
+    through the stateful ALU) so nothing about the vectorized formulations
+    can leak into the reference semantics; the Pallas kernel and the
+    rank-round CPU lowering (``kernels.flow_update``) must reproduce it bit
+    for bit — including the saturation bounds and the rounding-shift EWMA.
+
+    state  (S, N_FLOW_REGISTERS) int32 — per-slot register rows
+    cms    (D, Wc) int32 — count-min sketch counters
+    slots  (B,) int32 — flow-table slot per packet (resolved by FlowTable)
+    cells  (B, D) int32 — count-min cell per packet per sketch row
+    ts     (B,) int32 — arrival tick; length (B,) int32 — wire bytes
+    live   (B,) bool/int — 0 rows are padding: no state touch, zero features
+
+    Returns ``(new_state, new_cms, features)`` with ``features`` of shape
+    ``(B, N_FLOW_FEATURES)`` int32 codes at ``frac`` — the **post-update**
+    flow state as each packet observed it, which is what a per-packet
+    stateful P4 pipeline exports to its ML stage.
+    """
+    state = np.array(state, np.int32, copy=True)
+    cms = np.array(cms, np.int32, copy=True)
+    slots = np.asarray(slots).reshape(-1)
+    n = slots.shape[0]
+    depth = cms.shape[0]
+    feats = np.zeros((n, N_FLOW_FEATURES), np.int32)
+
+    def _shl(v, s=frac):
+        return int(sat_shl_np(int(v), s))
+
+    for p in range(n):
+        if not live[p]:
+            continue
+        s = int(slots[p])
+        t = int(ts[p])
+        ln = max(int(length[p]), 0)
+        row = state[s]
+        cnt = int(row[REG_PKT_COUNT])
+        len_q = _shl(ln)
+        if cnt == 0:  # fresh slot: this packet opens the flow
+            first = t
+            iat_e = 0
+            len_e = len_q
+            mn = mx = ln
+            byte = min(ln, FLOW_CODE_MAX)
+            cnt2 = 1
+        else:
+            iat_q = _shl(max(t - int(row[REG_LAST_TS]), 0))
+            if cnt == 1:  # first inter-arrival sample seeds the EWMA
+                iat_e = iat_q
+            else:
+                iat_e = int(row[REG_EWMA_IAT]) + int(rounding_rshift_np(
+                    np.int64(iat_q - int(row[REG_EWMA_IAT])), ewma_shift))
+            len_e = int(row[REG_EWMA_LEN]) + int(rounding_rshift_np(
+                np.int64(len_q - int(row[REG_EWMA_LEN])), ewma_shift))
+            mn = min(int(row[REG_MIN_LEN]), ln)
+            mx = max(int(row[REG_MAX_LEN]), ln)
+            byte = min(int(row[REG_BYTE_COUNT]) + ln, FLOW_CODE_MAX)
+            cnt2 = min(cnt + 1, FLOW_CODE_MAX)
+            first = int(row[REG_FIRST_TS])
+        state[s] = (cnt2, byte, t, first, iat_e, len_e, mn, mx)
+        est = FLOW_CODE_MAX
+        for d in range(depth):
+            c = int(cells[p, d])
+            cms[d, c] = min(int(cms[d, c]) + 1, FLOW_CODE_MAX)
+            est = min(est, int(cms[d, c]))
+        feats[p] = (_shl(cnt2), _shl(byte >> byte_shift), iat_e, len_e,
+                    _shl(mn), _shl(mx), _shl(max(t - first, 0) >> dur_shift),
+                    _shl(est))
+    return state, cms, feats
 
 
 def taylor_activation_ref(x_q: jax.Array, coeffs_q: np.ndarray,

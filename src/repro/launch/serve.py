@@ -41,10 +41,18 @@ __all__ = ["PacketServer", "LMServer", "BatchError"]
 
 
 class PacketServer:
-    """Deployment wrapper: ControlPlane + DataPlaneEngine + ingress pipeline.
+    """Deployment wrapper: ControlPlane + DataPlaneEngine + ingress pipeline
+    (+ the stateful flow engine, created on first use).
 
-    Two serving surfaces:
+    Three serving surfaces:
 
+      * **raw-packet API** — ``submit_raw()`` accepts raw 5-tuple header
+        batches (no feature block): the flow engine (``repro.flow``)
+        resolves each packet's flow, updates its registers (counters,
+        EWMAs, count-min sketch) and builds each model's input columns from
+        its installed :class:`FeatureSpec` before handing the encapsulated
+        rows to the stream path below — serving starts where the hardware
+        does.
       * **stream API** — ``submit_packets()`` accepts ragged per-connection
         chunks; ``drain_packets()`` returns per-packet egress rows (or
         per-packet error slots) in exact submission order.  This is the
@@ -69,7 +77,10 @@ class PacketServer:
                  use_cache: bool = True,
                  max_forests: int = 8, max_trees: int = 16,
                  max_nodes: int = 64, max_tree_depth: int = 6,
-                 flush_after: Optional[float] = None):
+                 flush_after: Optional[float] = None,
+                 flow_capacity_pow2: int = 14,
+                 flow_idle_timeout: Optional[int] = None,
+                 clock=None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         self.control_plane = ControlPlane(
@@ -89,10 +100,15 @@ class PacketServer:
         self.ingress = IngressPipeline(
             self.engine, batch_size=ingress_batch,
             max_inflight=max_inflight, use_cache=use_cache,
-            flush_after=flush_after)
+            flush_after=flush_after, clock=clock)
         self.max_inflight = max_inflight
         self._inflight: deque = deque()
         self._window_t0: Optional[float] = None
+        # flow engine (stage 0): created on first submit_raw() so pure
+        # feature-vector deployments never allocate the register file
+        self._flow_capacity_pow2 = flow_capacity_pow2
+        self._flow_idle_timeout = flow_idle_timeout
+        self._flow: Optional["FlowFrontend"] = None
 
     def install(self, model_id: int, layers, activations, **kw) -> int:
         """Quantize + install (hot-swap) a model — safe mid-serving: the new
@@ -125,6 +141,37 @@ class PacketServer:
         if self._window_t0 is not None:
             self.drain()
         return self.engine.process(packets)
+
+    # -- raw-packet ingress (stateful flow engine, stage 0) ----------------
+
+    @property
+    def flow(self) -> "FlowFrontend":
+        """The stateful flow engine (:class:`repro.flow.FlowFrontend`),
+        created lazily on first use."""
+        if self._flow is None:
+            from ..flow import FlowFrontend
+            self._flow = FlowFrontend(
+                self.ingress, capacity_pow2=self._flow_capacity_pow2,
+                idle_timeout=self._flow_idle_timeout)
+        return self._flow
+
+    def install_feature_spec(self, model_id: int, columns) -> int:
+        """Install (hot-swap) the flow-feature → input-column mapping for a
+        model (:class:`~repro.core.control_plane.FeatureSpec`).  Applies
+        from the next ``submit_raw()`` batch; zero data-plane retraces."""
+        return self.control_plane.install_feature_spec(model_id, columns)
+
+    def submit_raw(self, raw) -> tuple:
+        """Feed one batch of **raw 5-tuple headers**
+        (``repro.data.packets.RAW_HEADER_BYTES``-byte rows — no feature
+        block) through the flow engine: per-flow register update → feature
+        extraction → per-model FeatureSpec gather → encapsulation → the
+        ingress pipeline.  Returns ``(first_ticket, n_packets)``; results
+        arrive via :meth:`drain_packets` in submission order, interleaving
+        freely with :meth:`submit_packets` chunks."""
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        return self.flow.submit_raw(raw)
 
     # -- streaming ingress (coalescing queue + duplicate cache) ------------
 
@@ -258,13 +305,17 @@ class PacketServer:
         return outs
 
     def stats(self) -> Dict[str, float]:
-        return {"packets_per_s": self.engine.packets_per_second(),
-                "throughput_gbps": self.engine.throughput_gbps(),
-                "recompiles": self.engine.trace_count,
-                "table_generation": self.control_plane.version,
-                "cache_hit_rate": self.ingress.cache_hit_rate(),
-                "cache_entries": (len(self.ingress.cache)
-                                  if self.ingress.cache is not None else 0)}
+        out = {"packets_per_s": self.engine.packets_per_second(),
+               "throughput_gbps": self.engine.throughput_gbps(),
+               "recompiles": self.engine.trace_count,
+               "table_generation": self.control_plane.version,
+               "cache_hit_rate": self.ingress.cache_hit_rate(),
+               "cache_entries": (len(self.ingress.cache)
+                                 if self.ingress.cache is not None else 0)}
+        if self._flow is not None:
+            out["flow_table_hit_rate"] = self._flow.flow_table_hit_rate()
+            out["flows"] = len(self._flow.table)
+        return out
 
 
 class LMServer:

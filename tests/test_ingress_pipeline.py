@@ -313,9 +313,24 @@ class TestPipelineCorrectness:
         np.testing.assert_array_equal(np.stack(got), want)
 
 
+class _FakeClock:
+    """Deterministic injectable clock: age-based pipeline behavior is
+    tested by advancing time, not by sleeping against the scheduler."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
 class TestFlushAfter:
     """PR-3 satellite: the ``flush_after`` latency knob (first step of the
-    ROADMAP adaptive-batch-sizing item)."""
+    ROADMAP adaptive-batch-sizing item); the injected monotonic clock makes
+    every age-based case deterministic."""
 
     def test_default_preserves_wait_for_flush_behavior(self):
         rng = np.random.default_rng(50)
@@ -337,25 +352,70 @@ class TestFlushAfter:
             not isinstance(g, PacketError) for g in got)
 
     def test_aged_partial_batch_dispatches_on_next_submit(self):
-        import time as _time
+        clock = _FakeClock()
         rng = np.random.default_rng(52)
-        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02,
+                                  clock=clock)
         pipe.submit(_wire(rng, 5))
         assert pipe.stats["batches"] == 0  # too young
-        _time.sleep(0.03)
+        clock.advance(0.03)
         pipe.submit(_wire(rng, 5))  # age check fires at submit end
         assert pipe.stats["batches"] == 1
         pipe.drain()
 
     def test_poll_flushes_without_new_traffic(self):
-        import time as _time
+        clock = _FakeClock()
         rng = np.random.default_rng(53)
-        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02,
+                                  clock=clock)
         pipe.submit(_wire(rng, 5))
         assert not pipe.poll()  # too young
-        _time.sleep(0.03)
+        clock.advance(0.03)
         assert pipe.poll()
         assert pipe.stats["batches"] == 1
+        pipe.drain()
+
+    def test_age_boundary_is_inclusive_and_exact(self):
+        """The injected clock makes the boundary testable: a batch exactly
+        flush_after old dispatches, one tick younger does not — previously
+        unverifiable without racing the scheduler."""
+        clock = _FakeClock()
+        rng = np.random.default_rng(55)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02,
+                                  clock=clock)
+        pipe.submit(_wire(rng, 5))
+        clock.advance(0.0199)
+        assert not pipe.poll()  # strictly younger: stays staged
+        clock.advance(0.0001)
+        assert pipe.poll()  # age == flush_after: dispatches
+        pipe.drain()
+
+    def test_each_family_batch_ages_on_its_own_clock(self):
+        """With forests installed, the MLP and forest staging batches carry
+        independent t0s — only the over-age one dispatches."""
+        from repro.data.packets import anomaly_dataset
+        from repro.forest import train_forest
+        clock = _FakeClock()
+        rng = np.random.default_rng(56)
+        cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02,
+                                  clock=clock)
+        X, y = anomaly_dataset(rng, 256, WIDTH)
+        cp.install_forest(
+            30, train_forest(X, y, task="classify", n_trees=2, max_depth=3,
+                             max_nodes=15, seed=1))
+        pipe.submit(_wire(rng, 5))  # MLP family batch opens at t=0
+        clock.advance(0.015)
+        mids = np.full(4, 30, np.int32)
+        codes = rng.integers(-500, 500, (4, WIDTH)).astype(np.int32)
+        pipe.submit(np.asarray(pk.encode_packets(
+            jnp.asarray(mids), jnp.int32(FRAC), jnp.asarray(codes))))
+        clock.advance(0.010)  # MLP batch is 25ms old, forest batch 10ms
+        assert pipe.poll()
+        assert pipe.stats["lane_batches"]["mlp"] == 1
+        assert pipe.stats["lane_batches"]["forest"] == 0
+        clock.advance(0.015)  # now the forest batch crosses the knob
+        assert pipe.poll()
+        assert pipe.stats["lane_batches"]["forest"] == 1
         pipe.drain()
 
     def test_results_identical_with_knob_enabled(self):
