@@ -49,6 +49,20 @@ import json
 import os
 import time
 
+# XLA:CPU's intra-op thread pool is counterproductive on the small-core
+# (often sandboxed) hosts these benchmarks run on: pool handoffs are
+# futex-heavy and cost more than the parallelism wins at our batch sizes —
+# and once any large op has spun the pool up, EVERY later dispatch routes
+# through it, silently halving cold-path throughput for the rest of the
+# process.  Pin the CPU backend to inline single-threaded execution unless
+# the caller already chose their own flags.  (Must happen before the first
+# jax import; a no-op when the benchmark is imported into a process that
+# already initialized jax, e.g. the tier-1 suite — those tests gate trends
+# and booleans, not absolute pkt/s.)
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
 import numpy as np
 
 from repro.core.packet import packet_nbytes
@@ -95,10 +109,9 @@ def _min_time(fn, reps: int | None = None) -> float:
 
 
 def _fig1_sweep(rng, verbose: bool):
-    import jax.numpy as jnp
     from repro.core.control_plane import ControlPlane
     from repro.core.inference import DataPlaneEngine
-    from repro.core.packet import encode_packets
+    from repro.core.packet import encode_packets_np
 
     setups = []
     for nf in FEATURES:
@@ -113,10 +126,15 @@ def _fig1_sweep(rng, verbose: bool):
         codes = rng.integers(-2**12, 2**12, size=(BATCH, nf)).astype(np.int32)
 
         def wire_loop(eng=eng, codes=codes):
-            # full ingress→egress loop: encapsulate, process, read back
+            # full ingress→egress loop: encapsulate, process, read back.
+            # Host encapsulation is the vectorized numpy encoder
+            # (byte-identical to the jax one, asserted by the tier-1
+            # suite): the old per-call eager-jnp encode built each header
+            # field as its own dispatched op, which at 16 features cost
+            # more than the whole inference program — the "wide-header
+            # cliff" was mostly encapsulation overhead, not parse work.
             for _ in range(LOOPS):
-                pkts = encode_packets(jnp.int32(1), jnp.int32(8),
-                                      jnp.asarray(codes))
+                pkts = encode_packets_np(1, 8, codes)
                 np.asarray(eng.process(pkts))
 
         wire_loop()  # compile + warm
@@ -244,6 +262,45 @@ def _mixed_model_comparison(rng, verbose: bool):
     return res
 
 
+def _latency_pass(pipe, chunks):
+    """One instrumented pass: per-packet submit→ready latency percentiles.
+
+    Each chunk's tickets are stamped with the chunk's submit time; after
+    every submit and every single-batch retire step the newly-READY tickets
+    are stamped with "now", so a packet's latency covers staging, device
+    batching and retire — the end-to-end figure a latency SLO would gate.
+    (Uses the pipeline's internal retire stepping so the drain tail is
+    timestamped batch by batch, not as one lump at flush.)
+    """
+    pipe.reset_tickets()
+    total = sum(len(c) for c in chunks)
+    sub = np.empty(total)
+    rdy = np.full(total, np.nan)
+
+    def stamp():
+        now = time.perf_counter()
+        k = pipe._n_tickets
+        st = pipe._status[:k]
+        fresh = np.isnan(rdy[:k]) & (st == 1)
+        rdy[:k][fresh] = now
+
+    for ch in chunks:
+        t0 = time.perf_counter()
+        first, k = pipe.submit(ch)
+        sub[first: first + k] = t0
+        stamp()
+    pipe._dispatch()
+    while pipe._inflight:
+        pipe._retire_oldest()
+        stamp()
+    pipe.flush()
+    stamp()
+    lat_us = (rdy - sub) * 1e6
+    lat_us = lat_us[~np.isnan(lat_us)]
+    return (float(np.percentile(lat_us, 50)),
+            float(np.percentile(lat_us, 99)))
+
+
 def _build_dup_trace(rng, total: int, chunk: int, width: int, n_models: int,
                      dup_frac: float):
     """A 16-model trace where ``dup_frac`` of the packets byte-repeat an
@@ -334,6 +391,13 @@ def _pipeline_comparison(rng, verbose: bool):
     short_circuited = (pipe.cache.hits - h0) + (pipe.stats["coalesced"] - c0)
     dispatched = pipe.stats["dispatched_rows"] - d0
 
+    # per-packet latency percentiles (one instrumented pass each): steady
+    # rides the warm result cache, cold pays the full staged dispatch path
+    steady_p50, steady_p99 = _latency_pass(pipe, chunks)
+    pipe.reset_tickets()
+    pipe.cache.clear()
+    cold_p50, cold_p99 = _latency_pass(pipe, chunks)
+
     # ragged arrivals (any chunk size) must never retrace the data plane —
     # flush the caches first so every ragged chunk really reaches the
     # fixed-shape dispatch path instead of resolving from the warm cache
@@ -358,6 +422,10 @@ def _pipeline_comparison(rng, verbose: bool):
         "cold_device_rows_per_packet": dispatched / total,
         "steady_cache_hit_rate": steady_hit_rate,
         "ragged_zero_retraces": bool(zero_retraces),
+        "latency": {
+            "steady_p50_us": steady_p50, "steady_p99_us": steady_p99,
+            "cold_p50_us": cold_p50, "cold_p99_us": cold_p99,
+        },
     }
     if verbose:
         print(f"  PR-1 serving loop         : {res['pr1_pps']:,.0f} pkt/s")
@@ -366,6 +434,9 @@ def _pipeline_comparison(rng, verbose: bool):
         print(f"  ingress pipeline (cold)   : {res['pipeline_cold_pps']:,.0f}"
               f" pkt/s  short-circuit {res['cold_short_circuit_rate']:.0%}"
               f"  device rows/pkt {res['cold_device_rows_per_packet']:.2f}")
+        print(f"  per-packet latency        : steady p50 {steady_p50:,.0f} / "
+              f"p99 {steady_p99:,.0f} us   cold p50 {cold_p50:,.0f} / "
+              f"p99 {cold_p99:,.0f} us")
         print(f"  ragged-arrival retraces   : "
               f"{0 if zero_retraces else 'NONZERO'}")
     return res

@@ -1,7 +1,12 @@
 """Gate the Fig-1 benchmark against a checked-in baseline.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
-        BENCH_fig1.json benchmarks/baselines/BENCH_fig1.baseline.json
+        BENCH_fig1.json benchmarks/baselines/BENCH_fig1.full.baseline.json
+
+(full-mode results gate against the full-mode baseline; CI's reduced runs
+gate against ``BENCH_fig1.baseline.json`` with ``--ratios-only`` — a
+mode-mismatched pair skips the baseline-relative throughput gates with a
+printed note, keeping only ratios, booleans and the absolute floors.)
 
 Fails (exit 1) when any tracked throughput metric regresses by more than
 ``--tolerance`` (default 30%) relative to the baseline, or when a boolean
@@ -24,14 +29,22 @@ import shutil
 import sys
 
 # metric path → kind:
-#   "throughput"     — baseline-relative lower bound (machine-dependent;
-#                      skipped by --ratios-only)
-#   ("floor", x)     — absolute lower bound, the PR acceptance criterion
-#                      itself; machine-independent but NOT baseline-relative,
-#                      because under heavy background load both sides of a
-#                      ratio swing and the ratio itself gets noisy — the
-#                      acceptance floor is the stable contract
-#   "bool"           — must stay truthy if the baseline has it truthy
+#   "throughput"       — baseline-relative lower bound (machine-dependent;
+#                        skipped by --ratios-only)
+#   ("floor", x)       — absolute lower bound, the PR acceptance criterion
+#                        itself; machine-independent but NOT
+#                        baseline-relative, because under heavy background
+#                        load both sides of a ratio swing and the ratio
+#                        itself gets noisy — the acceptance floor is the
+#                        stable contract
+#   ("floor_full", x)  — absolute lower bound enforced only on **full-mode**
+#                        results on a trusted machine (skipped by
+#                        --ratios-only and in BENCH_REDUCED runs): the
+#                        cold-path pkt/s acceptance floors are raw
+#                        throughputs, so a shared CI runner of unknown
+#                        speed must not gate them, but a full benchmark run
+#                        must
+#   "bool"             — must stay truthy if the baseline has it truthy
 TRACKED = {
     ("mixed", "batched_pps"): "throughput",
     ("mixed", "speedup_mixed"): ("floor", 3.0),   # PR-1 acceptance: >= 3x
@@ -40,6 +53,7 @@ TRACKED = {
     ("pipeline", "speedup_vs_pr1"): ("floor", 2.0),   # PR-2 acceptance
     ("pipeline", "cold_short_circuit_rate"): ("floor", 0.45),  # ~50% dup
     ("pipeline", "ragged_zero_retraces"): "bool",
+    ("pipeline", "pipeline_cold_pps"): "throughput",
     ("forest", "pipeline_steady_pps"): "throughput",  # PR-3: 8 MLP+8 forest
     ("forest", "pipeline_cold_pps"): "throughput",
     ("forest", "forest_only_pps"): "throughput",
@@ -51,6 +65,12 @@ TRACKED = {
     ("flow", "bitexact_vs_handbuilt"): "bool",
     ("flow", "spec_reinstall_zero_retraces"): "bool",
     ("trend_validated",): "bool",
+}
+
+# PR-5 cold-path floors (full-mode only — see ("floor_full", x) above).
+FULL_FLOORS = {
+    ("forest", "pipeline_cold_pps"): ("floor_full", 6.0e5),
+    ("forest", "forest_only_pps"): ("floor_full", 6.0e5),
 }
 
 
@@ -72,6 +92,33 @@ def compare(current: dict, baseline: dict, tolerance: float,
             ratios_only: bool = False, skipped: list = None) -> list:
     """Returns a list of human-readable failure strings (empty = pass).
 
+    When ``current`` and ``baseline`` were produced in different modes
+    (full vs ``BENCH_REDUCED``), the baseline-relative throughput
+    comparisons are skipped — reduced mode times less work per loop, so
+    its pkt/s figures are not commensurable with full-mode ones; the
+    machine-independent ratios/booleans and the absolute floors still
+    gate.  The skip is **reported**, not silent: full-mode runs should be
+    gated against the full-mode baseline
+    (``benchmarks/baselines/BENCH_fig1.full.baseline.json``) so every
+    throughput metric is actually compared."""
+    if current.get("reduced") != baseline.get("reduced"):
+        if skipped is not None and not ratios_only:
+            skipped.append(
+                "<all baseline-relative throughput gates: current/baseline "
+                "mode mismatch — compare full-mode runs against "
+                "benchmarks/baselines/BENCH_fig1.full.baseline.json>")
+        return _compare_impl(current, baseline, tolerance, ratios_only=True,
+                             skipped=skipped,
+                             full_floors=not ratios_only)
+    return _compare_impl(current, baseline, tolerance,
+                         ratios_only=ratios_only, skipped=skipped,
+                         full_floors=not ratios_only)
+
+
+def _compare_impl(current: dict, baseline: dict, tolerance: float,
+                  ratios_only: bool, skipped: list, full_floors: bool) -> list:
+    """Returns a list of human-readable failure strings (empty = pass).
+
     ``ratios_only`` skips the absolute-throughput metrics (pkt/s), leaving
     the machine-independent ratios and boolean invariants — the right gate
     on CI runners whose raw speed differs from the machine that cut the
@@ -89,6 +136,20 @@ def compare(current: dict, baseline: dict, tolerance: float,
     failures = []
     floor = 1.0 - tolerance
     skipped_sections = set()
+    # PR-5 cold-path floors: absolute pkt/s bounds enforced on full-mode
+    # runs on a trusted machine only; reduced/CI runs rely on the
+    # baseline-relative "throughput" entries for the same metrics (gated
+    # when the modes match) plus the ratio/boolean invariants.
+    if full_floors and not current.get("reduced"):
+        for path, (_, bound) in FULL_FLOORS.items():
+            cur = _get(current, path)
+            name = ".".join(path)
+            if cur is None:
+                failures.append(f"{name}: missing from current results")
+            elif cur < bound:
+                failures.append(
+                    f"{name}: {cur:.4g} below the full-mode cold-path "
+                    f"floor {bound:.4g}")
     for path, kind in TRACKED.items():
         if ratios_only and kind == "throughput":
             continue
@@ -167,9 +228,12 @@ def main(argv=None) -> int:
     failures = compare(current, baseline, args.tolerance, args.ratios_only,
                        skipped=skipped)
     for section in skipped:
-        print(f"note: section '{section}' missing from the baseline "
-              f"(older than this bench) — skipped, not failed; re-cut the "
-              f"baseline with --update to start gating it")
+        if section.startswith("<"):
+            print(f"note: skipped {section.strip('<>')}")
+        else:
+            print(f"note: section '{section}' missing from the baseline "
+                  f"(older than this bench) — skipped, not failed; re-cut "
+                  f"the baseline with --update to start gating it")
     if failures:
         print(f"PERF REGRESSION ({len(failures)} metric(s) beyond "
               f"{args.tolerance:.0%}):")

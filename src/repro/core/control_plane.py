@@ -57,6 +57,7 @@ __all__ = [
     "ACTIVATIONS",
     "ModelTables",
     "ForestTables",
+    "RangeTables",
     "FeatureSpec",
     "ControlPlane",
     "WeightRegistry",
@@ -142,6 +143,42 @@ class ForestTables:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RangeTables:
+    """Device-resident range-table compilation of the forest family (the
+    pForest ternary-match lowering — see ``repro.forest.ranges``).
+
+    Compiled alongside :class:`ForestTables` on every ``install_forest`` and
+    published by the **same** generation swap, so the two lowerings of one
+    ensemble can never be out of sync.  Shapes (``F`` forests, ``T`` trees,
+    ``NI = (max_nodes-1)//2`` range entries, ``L = NI+1`` leaves):
+
+      * ``feat``     (F, T, NI)  int32 feature index per range entry
+      * ``thresh``   (F, T, NI)  int32 threshold code (padding: INT32_MAX —
+                                 the comparison always holds, mask unused)
+      * ``lmask``    (F, T, NI)  uint32 surviving-leaf mask when the entry's
+                                 ``x <= thresh`` comparison fails
+      * ``payload``  (F, T, L)   int32 per-leaf output codes (in-order
+                                 leaf numbering — exit leaf = lowest set bit)
+
+    Tree liveness, vote mode, output dims and the Model-ID map are shared
+    with :class:`ForestTables` (one forest family, two lowerings).
+    """
+
+    feat: jax.Array
+    thresh: jax.Array
+    lmask: jax.Array
+    payload: jax.Array
+
+    def tree_flatten(self):
+        return ((self.feat, self.thresh, self.lmask, self.payload), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
 @dataclasses.dataclass(frozen=True)
 class FeatureSpec:
     """Flow-feature → model-input column mapping (the Planter "feature
@@ -216,6 +253,24 @@ class ControlPlane:
         self._f_mode = np.zeros((max_forests,), np.int32)
         self._f_out_dim = np.zeros((max_forests,), np.int32)
         self._f_id_map = np.full((65536,), -1, np.int32)
+        # range-table lowering of the same family (pForest ternary-match —
+        # repro.forest.ranges).  Static extents derive from max_nodes; the
+        # 32-bit leaf mask caps the lane at 32 leaves per tree, so planes
+        # with a larger node budget simply don't compile the range family
+        # (the pointer-chase lane has no such bound).
+        from ..forest.ranges import range_bounds
+        ni, nl = range_bounds(max_nodes)
+        self._r_ni, self._r_nl = max(1, ni), max(1, nl)
+        self.range_available = nl <= 32
+        if self.range_available:
+            self._r_feat = np.zeros((max_forests, max_trees, self._r_ni),
+                                    np.int32)
+            self._r_th = np.full((max_forests, max_trees, self._r_ni),
+                                 np.iinfo(np.int32).max, np.int32)
+            self._r_mask = np.zeros((max_forests, max_trees, self._r_ni),
+                                    np.uint32)
+            self._r_payload = np.zeros((max_forests, max_trees, self._r_nl),
+                                       np.int32)
         self._f_slots: Dict[int, int] = {}
         self._f_free_slots: List[int] = []
         self._f_next_slot = 0
@@ -242,6 +297,7 @@ class ControlPlane:
         self._forest_gen = 0
         self._snapshot: Optional[Tuple[int, "ModelTables"]] = None
         self._forest_snapshot: Optional[Tuple[int, "ForestTables"]] = None
+        self._range_snapshot: Optional[Tuple[int, "RangeTables"]] = None
 
     def _begin_write(self) -> None:
         """Copy-on-write: detach the MLP-family back buffers from any
@@ -254,12 +310,18 @@ class ControlPlane:
         self._id_map = self._id_map.copy()
 
     def _begin_write_forest(self) -> None:
-        """Copy-on-write for the forest-family back buffers."""
+        """Copy-on-write for the forest-family back buffers (both
+        lowerings: dense node tables and range tables swap together)."""
         self._f_nodes = self._f_nodes.copy()
         self._f_tree_on = self._f_tree_on.copy()
         self._f_mode = self._f_mode.copy()
         self._f_out_dim = self._f_out_dim.copy()
         self._f_id_map = self._f_id_map.copy()
+        if self.range_available:
+            self._r_feat = self._r_feat.copy()
+            self._r_th = self._r_th.copy()
+            self._r_mask = self._r_mask.copy()
+            self._r_payload = self._r_payload.copy()
 
     # -- control-plane writes -------------------------------------------
 
@@ -411,6 +473,16 @@ class ControlPlane:
             raise ValueError(
                 f"forest out_dim {packed.out_dim} exceeds "
                 f"max_width={self.max_width} vote lanes")
+        # Range-table compilation (pForest lowering) happens here, BEFORE any
+        # table state is touched: it also walk-validates tree structure
+        # (acyclicity, per-node depth, leaf budget) that the dense-table
+        # bounds checks above cannot see, so a malformed PackedForest fails
+        # the install instead of serving garbage through either lane.
+        ranges = None
+        if self.range_available:
+            from ..forest.ranges import pack_forest_ranges
+            ranges = pack_forest_ranges(packed.nodes, packed.tree_on,
+                                        max_depth=self.max_tree_depth)
         with self._lock:
             if model_id in self._slots:
                 raise ValueError(
@@ -435,6 +507,17 @@ class ControlPlane:
             self._f_tree_on[slot, :n_trees] = packed.tree_on
             self._f_mode[slot] = packed.mode
             self._f_out_dim[slot] = packed.out_dim
+            if ranges is not None:
+                self._r_feat[slot] = 0
+                self._r_th[slot] = np.iinfo(np.int32).max
+                self._r_mask[slot] = 0
+                self._r_payload[slot] = 0
+                ni = ranges.feat.shape[1]
+                nl = ranges.payload.shape[1]
+                self._r_feat[slot, :n_trees, :ni] = ranges.feat
+                self._r_th[slot, :n_trees, :ni] = ranges.thresh
+                self._r_mask[slot, :n_trees, :ni] = ranges.lmask
+                self._r_payload[slot, :n_trees, :nl] = ranges.payload
             self._forest_ever = True
             self._forest_gen += 1
             self._version += 1
@@ -556,16 +639,58 @@ class ControlPlane:
         forest family's own write counter, so MLP hot-swaps never re-upload
         the unchanged forest tables (and vice versa)."""
         with self._lock:
-            if self._forest_snapshot is None \
-                    or self._forest_snapshot[0] != self._forest_gen:
-                self._forest_snapshot = (self._forest_gen, ForestTables(
-                    nodes=jnp.asarray(self._f_nodes),
-                    tree_on=jnp.asarray(self._f_tree_on),
-                    mode=jnp.asarray(self._f_mode),
-                    out_dim=jnp.asarray(self._f_out_dim),
-                    id_map=jnp.asarray(self._f_id_map),
-                ))
-            return self._forest_snapshot[1]
+            return self._forest_tables_locked()
+
+    def _forest_tables_locked(self) -> ForestTables:
+        if self._forest_snapshot is None \
+                or self._forest_snapshot[0] != self._forest_gen:
+            self._forest_snapshot = (self._forest_gen, ForestTables(
+                nodes=jnp.asarray(self._f_nodes),
+                tree_on=jnp.asarray(self._f_tree_on),
+                mode=jnp.asarray(self._f_mode),
+                out_dim=jnp.asarray(self._f_out_dim),
+                id_map=jnp.asarray(self._f_id_map),
+            ))
+        return self._forest_snapshot[1]
+
+    def range_tables(self) -> RangeTables:
+        """Device snapshot of the range-table lowering of the forest family
+        — same caching and double-buffer read semantics as
+        :meth:`forest_tables`, keyed on the same forest write counter (the
+        two lowerings publish together, by construction)."""
+        if not self.range_available:
+            raise RuntimeError(
+                f"range tables unavailable: max_nodes={self.max_nodes} "
+                "exceeds the 32-leaf mask bound (needs max_nodes <= 64)")
+        with self._lock:
+            return self._range_tables_locked()
+
+    def _range_tables_locked(self) -> RangeTables:
+        if self._range_snapshot is None \
+                or self._range_snapshot[0] != self._forest_gen:
+            self._range_snapshot = (self._forest_gen, RangeTables(
+                feat=jnp.asarray(self._r_feat),
+                thresh=jnp.asarray(self._r_th),
+                lmask=jnp.asarray(self._r_mask),
+                payload=jnp.asarray(self._r_payload),
+            ))
+        return self._range_snapshot[1]
+
+    def forest_snapshots(self, want_ranges: bool
+                         ) -> Tuple[ForestTables, Optional[RangeTables]]:
+        """One-lock read of BOTH forest lowerings from the **same**
+        generation.  Readers that mix fields across the two pytrees (the
+        range traversal takes tree liveness/mode/id_map from
+        :class:`ForestTables` and its range rows from :class:`RangeTables`)
+        must use this instead of two separate calls: an ``install_forest``
+        landing between two lock acquisitions would otherwise hand them a
+        torn pair — e.g. generation-N ``tree_on`` marking trees live whose
+        generation-N+1 range rows are already padding, which votes garbage
+        rather than serving stale-but-consistent results."""
+        with self._lock:
+            ftables = self._forest_tables_locked()
+            rtables = self._range_tables_locked() if want_ranges else None
+            return ftables, rtables
 
     # -- data-plane reads -------------------------------------------------
 
@@ -601,6 +726,7 @@ class ControlPlane:
         with self._lock:
             self._snapshot = None
             self._forest_snapshot = None
+            self._range_snapshot = None
 
     @property
     def version(self) -> int:
@@ -608,11 +734,15 @@ class ControlPlane:
         return self._version
 
     def table_bytes(self) -> int:
-        return (self._w.nbytes + self._b.nbytes + self._act.nbytes
-                + self._layer_on.nbytes + self._out_dim.nbytes
-                + self._id_map.nbytes + self._f_nodes.nbytes
-                + self._f_tree_on.nbytes + self._f_mode.nbytes
-                + self._f_out_dim.nbytes + self._f_id_map.nbytes)
+        n = (self._w.nbytes + self._b.nbytes + self._act.nbytes
+             + self._layer_on.nbytes + self._out_dim.nbytes
+             + self._id_map.nbytes + self._f_nodes.nbytes
+             + self._f_tree_on.nbytes + self._f_mode.nbytes
+             + self._f_out_dim.nbytes + self._f_id_map.nbytes)
+        if self.range_available:
+            n += (self._r_feat.nbytes + self._r_th.nbytes
+                  + self._r_mask.nbytes + self._r_payload.nbytes)
+        return n
 
 
 class WeightRegistry:

@@ -5,8 +5,8 @@ One jit-compiled program is the whole pipeline:
     parse header → Model-ID table lookup → fixed-point MLP forward with
     Taylor-approximated activations  ─┐
                                       ├→ deparse (outputs replace features)
-    parse header → forest-slot lookup → level-bounded tree-ensemble
-    traversal with majority/mean vote ─┘
+    parse header → forest-slot lookup → tree-ensemble traversal
+    (pointer-chase or range-table lowering) with majority/mean vote ─┘
 
 and it serves a **mixed-model batch**: every packet in the batch may target a
 different installed model — of either family.  Model IDs resolve through two
@@ -16,21 +16,23 @@ traffic interleave freely in one batch with no host-side partitioning.  The
 forest lane (``kernels.forest_traverse``) only enters the compiled program
 once a forest has ever been installed (``ControlPlane.forest_active`` is a
 static, monotone switch — at most one extra trace per process, and a pure
-MLP deployment compiles exactly the PR-1 program).  Two dispatch strategies
-implement the MLP Model-ID path:
+MLP deployment compiles exactly the PR-1 program).
 
-  * ``dispatch="fused"`` (default) — the stacked control-plane tables are
-    handed whole to the fused MLP kernel (``repro.kernels.fixedpoint_mlp``);
-    the per-packet model select is folded into one masked GEMM per layer over
-    the fused (model, feature) axis, so arbitrary interleavings of installed
-    models cost one XLA program with **no per-packet weight gather** and no
-    per-layer host round trips.  On TPU this is a single Pallas kernel whose
-    layer loop keeps the accumulator tile in VMEM; on CPU the bit-identical
-    jnp oracle runs (still one dense dot per layer).
-  * ``dispatch="gather"`` — the seed path, kept as a cross-check and
-    baseline: gather this packet's ``(L, W, W)`` weights per packet, then run
-    a per-layer einsum + activation.  Same integer semantics, ``L·W²`` table
-    bytes of traffic per packet.
+The lane-dispatch core lives in ``kernels.fused_serve.serve_lanes`` — one
+definition shared by both serving surfaces:
+
+  * ``run()`` / ``process()`` — the **wire path**: uint8 packet batches,
+    byte parse and egress deparse inside the program (the PR-1 surface,
+    kept for the legacy batch API and as the byte-level oracle).
+  * ``run_features()`` — the **feature path** (the cold-path tentpole):
+    already-parsed int32 feature codes and Model IDs in, int32 output codes
+    out — pure compute, one dispatch, no byte codec in the program.  The
+    ingress pipeline parses each chunk once on the host
+    (``core.packet.parse_packets_np``), serves every staged batch through
+    this entry, and encodes egress rows once at retire
+    (``emit_results_np``); both host codecs are byte-identical twins of the
+    in-program ones, so the two surfaces are bit-exact (asserted by the
+    tier-1 suite).
 
 All arithmetic inside the program is integer (int32 accumulate, rounding
 arithmetic shifts) — bit-exact with what the P4/FPGA pipeline would compute —
@@ -53,10 +55,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ops import forest_traverse, fused_mlp
-from ..kernels.ref import fused_mlp_gather_ref
+from ..kernels.fused_serve import LaneConfig, serve_lanes
+from ..kernels.forest_traversal import FOREST_VARIANTS
+from ..kernels.ops import on_tpu
 from .control_plane import ControlPlane, ForestTables, ModelTables
-from .packet import ParsedBatch, emit_results, parse_packets
+from .packet import FEATURE_BYTES, HEADER_BYTES, emit_results, parse_packets
 from .taylor import scaled_constants
 
 __all__ = ["DataPlaneEngine"]
@@ -82,18 +85,31 @@ class DataPlaneEngine:
         oracle on CPU), ``"pallas"`` (force kernel, interpreted off-TPU) or
         ``"ref"``.
     kernel_variant:
-        Weight lane of the fused kernel (``kernels.KERNEL_VARIANTS``):
+        Weight lane of the fused MLP kernel (``kernels.KERNEL_VARIANTS``):
         ``"int16"`` (default, int32-operand dot) or ``"int8"`` — the
         saturating int8 weight-lane (int8×int8→int32 dot, v5e MXU native
         rate).  The int8 lane requires the control plane to quantize weights
         at ``weight_bits <= 8``; a wider format is rejected here so the
         narrowing cast can never silently truncate installed models.
+    forest_variant:
+        Traversal lowering of the forest lane (``kernels.FOREST_VARIANTS``
+        plus ``"auto"``): ``"chase"`` is the level-bounded pointer chase
+        (PR 3), ``"range"`` the pForest range-table compilation (parallel
+        compares + leaf-mask AND-reduce, no serial gather chain).  Both are
+        bit-exact against the same scalar oracle.  ``"auto"`` (default)
+        picks the measured winner per platform: the chase on CPU (it only
+        touches *visited* nodes and XLA:CPU vectorizes the short gather
+        steps well), the range form on TPU (no step-serial dependency to
+        stall the VPU; real-TPU measurement is a ROADMAP item).  ``"range"``
+        requires the control plane's range family
+        (``ControlPlane.range_available`` — ``max_nodes <= 64``).
     """
 
     def __init__(self, control_plane: ControlPlane, *, max_features: int = 16,
                  taylor_order: int = 3, leaky_alpha: float = 0.01,
                  dispatch: str = "fused", backend: str = "auto",
                  kernel_variant: str = "int16",
+                 forest_variant: str = "auto",
                  interpret_only: bool = False):
         if dispatch not in ("fused", "gather"):
             raise ValueError(f"unknown dispatch strategy: {dispatch!r}")
@@ -106,7 +122,19 @@ class DataPlaneEngine:
                 f"kernel_variant='int8' needs weight_bits <= 8, but the "
                 f"control plane quantizes at {control_plane.fmt.total_bits} "
                 "bits — construct it with ControlPlane(weight_bits=8)")
+        if forest_variant not in FOREST_VARIANTS + ("auto",):
+            raise ValueError(f"unknown forest variant: {forest_variant!r}")
+        if forest_variant == "auto":
+            forest_variant = "range" if (on_tpu()
+                                         and control_plane.range_available) \
+                else "chase"
+        if forest_variant == "range" and not control_plane.range_available:
+            raise ValueError(
+                "forest_variant='range' needs the control plane's range "
+                f"family (max_nodes={control_plane.max_nodes} > 64 exceeds "
+                "the 32-leaf mask bound)")
         self.kernel_variant = kernel_variant
+        self.forest_variant = forest_variant
         self.cp = control_plane
         self.max_features = max_features
         # static unroll bound of the forest traversal lane (a synthesis-time
@@ -119,84 +147,67 @@ class DataPlaneEngine:
         self._leaky_alpha_q = int(round(leaky_alpha * (1 << self.frac)))
         self._sig_coeffs = tuple(
             int(c) for c in scaled_constants("sigmoid", taylor_order, self.frac))
+        self.lane_cfg = LaneConfig(
+            frac=self.frac, sig_coeffs=self._sig_coeffs,
+            leaky_alpha_q=self._leaky_alpha_q, max_features=max_features,
+            max_tree_depth=self.max_tree_depth, dispatch=dispatch,
+            backend=backend, kernel_variant=kernel_variant,
+            forest_variant=forest_variant)
+        self.out_features = min(max_features, int(control_plane.max_width))
         self.trace_count = 0
         self.stats = {"packets": 0, "bytes_in": 0, "bytes_out": 0, "seconds": 0.0}
         self._process = jax.jit(self._process_impl,
                                 static_argnames=("use_mlp", "use_forest"))
+        self._serve = jax.jit(self._serve_impl,
+                              static_argnames=("use_mlp", "use_forest"))
 
     # -- the data plane ----------------------------------------------------
 
-    def _forward_gathered(self, x: jax.Array, slot: jax.Array,
-                          tables: ModelTables) -> jax.Array:
-        """Seed dispatch: per-packet weight gather + per-layer matvec.
-
-        Delegates to the shared jnp implementation in ``kernels.ref`` — the
-        integer semantics (rounding shifts, opcode-selected activations)
-        must stay in one place so the bit-exact contract cannot drift.
-        """
-        return fused_mlp_gather_ref(
-            x, slot, tables.w, tables.b, tables.act, tables.layer_on,
-            frac=self.frac, sig_coeffs=self._sig_coeffs,
-            leaky_alpha_q=self._leaky_alpha_q,
-            lane_bits=8 if self.kernel_variant == "int8" else None)
+    def _serve_impl(self, x0: jax.Array, model_id: jax.Array,
+                    tables: ModelTables, ftables: "ForestTables | None",
+                    rtables, use_mlp: bool, use_forest: bool) -> jax.Array:
+        """The feature-path program: lane dispatch only (one device
+        dispatch per staged batch; the byte codec runs once per chunk on
+        the host — ``parse_packets_np``/``emit_results_np``)."""
+        self.trace_count += 1  # python side effect: fires once per trace
+        return serve_lanes(x0, model_id, tables, ftables, rtables,
+                           self.lane_cfg, use_mlp=use_mlp,
+                           use_forest=use_forest)
 
     def _process_impl(self, pkts: jax.Array, tables: ModelTables,
-                      ftables: "ForestTables | None",
+                      ftables: "ForestTables | None", rtables,
                       use_mlp: bool, use_forest: bool) -> jax.Array:
         self.trace_count += 1  # python side effect: fires once per trace
         parsed = parse_packets(pkts, self.max_features)
-
-        width = tables.w.shape[-1]
-        x0 = parsed.features_q  # (B, F) codes at self.frac
-        if x0.shape[1] < width:
-            x0 = jnp.pad(x0, ((0, 0), (0, width - x0.shape[1])))
-        else:
-            x0 = x0[:, :width]
-        lane = jnp.arange(width)[None, :]
-
-        if use_mlp:
-            slot = tables.id_map[parsed.model_id]  # (B,) — mixed models
-            valid = slot >= 0
-            slot = jnp.maximum(slot, 0)
-            if self.dispatch == "fused":
-                x = fused_mlp(x0, slot, tables.w, tables.b, tables.act,
-                              tables.layer_on, frac=self.frac,
-                              sig_coeffs=self._sig_coeffs,
-                              leaky_alpha_q=self._leaky_alpha_q,
-                              backend=self.backend,
-                              variant=self.kernel_variant)
-            else:
-                x = self._forward_gathered(x0, slot, tables)
-            # zero lanes beyond each model's output count; invalid → 0
-            out_dim = tables.out_dim[slot][:, None]
-            outputs = jnp.where((lane < out_dim) & valid[:, None], x, 0)
-        else:
-            # lane-pure forest batch: ids not in the forest map (including
-            # uninstalled ones) egress zeroed, same as MLP-lane invalid ids
-            outputs = jnp.zeros_like(x0)
-
-        if use_forest:
-            # forest lane: packets whose Model ID resolves in the forest
-            # id_map take the tree-ensemble traversal's row instead (the two
-            # id maps are disjoint by construction, so the per-packet select
-            # is a simple where)
-            fslot = ftables.id_map[parsed.model_id]
-            fvalid = fslot >= 0
-            fslot = jnp.maximum(fslot, 0)
-            fx = forest_traverse(x0, fslot, ftables.nodes, ftables.tree_on,
-                                 ftables.mode, max_depth=self.max_tree_depth,
-                                 frac=self.frac, backend=self.backend)
-            f_out_dim = ftables.out_dim[fslot][:, None]
-            fout = jnp.where(lane < f_out_dim, fx, 0)
-            outputs = jnp.where(fvalid[:, None], fout, outputs)
-
-        outputs = outputs[:, : self.max_features]
+        outputs = serve_lanes(parsed.features_q, parsed.model_id, tables,
+                              ftables, rtables, self.lane_cfg,
+                              use_mlp=use_mlp, use_forest=use_forest)
         return emit_results(parsed, outputs, self.frac)
+
+    def _lane_flags(self, lanes: str):
+        """Resolve the lane hint against the monotone forest switch.  One
+        ``forest_active`` read: deriving both flags from two reads could
+        interleave with the first-ever install_forest and disable both
+        lanes."""
+        forest_active = self.cp.forest_active
+        use_forest = lanes != "mlp" and forest_active
+        use_mlp = lanes != "forest" or not forest_active
+        return use_mlp, use_forest
+
+    def _forest_snapshots(self, use_forest: bool):
+        """Consistent (ftables, rtables) pair for the forest lane — one
+        control-plane lock acquisition, so a racing ``install_forest`` can
+        never hand the range variant liveness from one generation and range
+        rows from another (stale-but-consistent is safe; torn is not)."""
+        if not use_forest:
+            return None, None
+        return self.cp.forest_snapshots(self.forest_variant == "range")
 
     # -- host API -----------------------------------------------------------
 
     def run(self, pkts, *, block: bool = True, lanes: str = "both") -> jax.Array:
-        """Run one mixed-model batch of ingress packets → egress packets.
+        """Run one mixed-model batch of ingress packets → egress packets
+        (the wire path: byte parse/deparse inside the program).
 
         ``block=False`` returns as soon as the batch is *dispatched*: the
         returned array is a device future, so callers can pipeline host-side
@@ -204,32 +215,57 @@ class DataPlaneEngine:
         ``PacketServer.submit_async``).  Packet/byte counters update
         immediately; wall-clock is accounted by the blocking caller.
 
-        ``lanes`` is the ingress pipeline's lane-pure dispatch hint:
-        ``"both"`` (default — correct for any batch), ``"mlp"`` or
-        ``"forest"`` skip the other family's compute for batches the caller
-        *knows* are single-family (the pipeline stages per family and falls
-        back to ``"both"`` whenever an install raced the staging).  Each
-        lane combination is one more static jit variant — bounded at three,
-        warmed once each.
+        ``lanes`` is the lane-pure dispatch hint: ``"both"`` (default —
+        correct for any batch), ``"mlp"`` or ``"forest"`` skip the other
+        family's compute for batches the caller *knows* are single-family.
+        Each lane combination is one more static jit variant — bounded at
+        three, warmed once each.
         """
         if lanes not in ("both", "mlp", "forest"):
             raise ValueError(f"unknown lanes hint: {lanes!r}")
         pkts = jnp.asarray(pkts, jnp.uint8)
         tables = self.cp.tables()  # current generation snapshot
-        # forest lane compiles in only once a forest exists (static &
-        # monotone: see __doc__); an MLP-only deployment never pays for it.
-        # One read: deriving both flags from two reads could interleave
-        # with the first-ever install_forest and disable both lanes.
-        forest_active = self.cp.forest_active
-        use_forest = lanes != "mlp" and forest_active
-        use_mlp = lanes != "forest" or not forest_active
-        ftables = self.cp.forest_tables() if use_forest else None
+        use_mlp, use_forest = self._lane_flags(lanes)
+        ftables, rtables = self._forest_snapshots(use_forest)
         t0 = time.perf_counter()
-        out = self._process(pkts, tables, ftables, use_mlp=use_mlp,
+        out = self._process(pkts, tables, ftables, rtables, use_mlp=use_mlp,
                             use_forest=use_forest)
         self.stats["packets"] += int(pkts.shape[0])
         self.stats["bytes_in"] += int(pkts.size)
         self.stats["bytes_out"] += int(out.size)
+        if block:
+            out.block_until_ready()
+            self.stats["seconds"] += time.perf_counter() - t0
+        return out
+
+    def run_features(self, feats_q, model_id, *, block: bool = True,
+                     lanes: str = "both") -> jax.Array:
+        """Run one mixed-model batch of **already-parsed** feature codes —
+        the feature path: one pure-compute device dispatch, no byte codec
+        in the program (the cold-path tentpole; the ingress pipeline's
+        serving entry).
+
+        feats_q (B, W) int32 codes at the engine's ``frac`` · model_id (B,)
+        int32 → device future of (B, out_features) int32 output codes.
+        Byte counters credit the equivalent wire row sizes, so
+        ``throughput_gbps`` stays comparable across the two surfaces.
+        """
+        if lanes not in ("both", "mlp", "forest"):
+            raise ValueError(f"unknown lanes hint: {lanes!r}")
+        feats_q = jnp.asarray(feats_q, jnp.int32)
+        model_id = jnp.asarray(model_id, jnp.int32)
+        tables = self.cp.tables()
+        use_mlp, use_forest = self._lane_flags(lanes)
+        ftables, rtables = self._forest_snapshots(use_forest)
+        t0 = time.perf_counter()
+        out = self._serve(feats_q, model_id, tables, ftables, rtables,
+                          use_mlp=use_mlp, use_forest=use_forest)
+        n = int(feats_q.shape[0])
+        self.stats["packets"] += n
+        self.stats["bytes_in"] += n * (HEADER_BYTES
+                                       + FEATURE_BYTES * self.max_features)
+        self.stats["bytes_out"] += n * (HEADER_BYTES
+                                        + FEATURE_BYTES * self.out_features)
         if block:
             out.block_until_ready()
             self.stats["seconds"] += time.perf_counter() - t0
@@ -240,16 +276,28 @@ class DataPlaneEngine:
         return self.run(pkts, block=True)
 
     def warm(self, batch_size: int, wire_len: int, *,
-             lanes: Sequence[str] = ("both",)) -> None:
+             lanes: Sequence[str] = ("both",),
+             feature_batches: "Sequence[int] | None" = None) -> None:
         """Pre-trace the jit variants a serving loop will hit (one per
         ``(shape, lanes)`` combination) on a dead batch, outside any timed
-        window.  Stats are rolled back: warming is not traffic.  Benchmarks
-        and latency-sensitive deployments call this so the first real batch
-        never pays the compile."""
+        window — both surfaces: the wire program at ``batch_size`` rows and
+        the feature program (``run_features``, what the ingress pipeline
+        dispatches) at every size in ``feature_batches`` (default: just
+        ``batch_size``; pass the pipeline's ``batch_sizes`` ladder when
+        adaptive sizing is on, or ``()`` to skip).  Stats are rolled back:
+        warming is not traffic.  Benchmarks and latency-sensitive
+        deployments call this so the first real batch never pays the
+        compile."""
+        if feature_batches is None:
+            feature_batches = (batch_size,)
         pkts = jnp.zeros((batch_size, wire_len), jnp.uint8)
         before = dict(self.stats)
         for lane in lanes:
             self.run(pkts, block=True, lanes=lane)
+            for fb in feature_batches:
+                x0 = jnp.zeros((fb, self.max_features), jnp.int32)
+                mid = jnp.zeros((fb,), jnp.int32)
+                self.run_features(x0, mid, block=True, lanes=lane)
         self.stats = before
 
     def add_seconds(self, dt: float) -> None:

@@ -20,23 +20,37 @@ three pieces the paper's NIC gets for free from hardware:
     serve a lookup.  Storage is a flat open-addressing hash table held in
     numpy arrays, keyed on the wire row packed into uint64 words; lookups
     and inserts for a whole packet chunk are single vectorized probe sweeps
-    — no per-packet Python on the hot path.
+    (insert rounds arbitrate slot claims by scatter — no sort, no
+    ``np.unique`` on the path) — no per-packet Python on the hot path.
   * :class:`IngressPipeline` — the coalescing queue.  ``submit()`` accepts a
     ragged per-connection chunk, resolves cache hits immediately, dedupes the
-    misses (byte-identical packets in one chunk dispatch once), and packs
-    unique rows into **fixed-shape** staging batches; partially-filled
-    batches are padded with dead rows at ``flush()`` so the engine only ever
-    sees one shape — zero retraces no matter how ragged the arrivals are.
-    Staging is **family-aware**: once any tree ensemble is installed, MLP-
-    and forest-family rows stage into separate batches so every device
-    dispatch is lane-pure and the engine skips the other family's compute
-    entirely (an install racing the staging falls back to the always-correct
-    both-lane program for that batch); per-packet tickets make the
-    reordering invisible at egress.  Host staging is multi-buffered: while
-    batch N computes on the device, batch N+1 is being packed into the next
-    pooled staging buffer (the buffer for a dispatched batch is not reused
-    until its results retire, so dispatch hands the engine a stable view
-    with no defensive copy).
+    misses (byte-identical packets in one chunk dispatch once), byte-parses
+    the fresh rows **once on the host** (``parse_packets_np`` — the
+    bit-identical twin of the device parser) and packs their int32 feature
+    codes into **fixed-shape** staging batches; partially-filled batches
+    are padded with dead rows at ``flush()`` so the engine only ever sees
+    its static shapes — zero retraces no matter how ragged the arrivals
+    are.  Every dispatch is the pure-compute fused serving program
+    (``engine.run_features`` over ``kernels/fused_serve.py``): no byte
+    codec inside the device program; the egress wire rows are encoded once
+    per retired batch (``emit_results_np``).  Staging is **family-aware**:
+    once any tree ensemble is installed, MLP- and forest-family rows stage
+    into separate batches so every device dispatch is lane-pure and the
+    engine skips the other family's compute entirely (an install racing
+    the staging falls back to the always-correct both-lane program for
+    that batch); per-packet tickets make the reordering invisible at
+    egress.  Host staging is multi-buffered: while batch N computes on the
+    device, batch N+1 is being packed into the next pooled staging buffer
+    (the buffer for a dispatched batch is not reused until its results
+    retire, so dispatch hands the engine a stable view with no defensive
+    copy).  With ``adaptive_batch=True`` an arrival-rate EWMA picks each
+    new staging batch's device size from a static ≤3-rung ladder (small
+    batches at light load for latency, the full batch under sustained
+    load).  A **cold-traffic admission gate** (chunk-level EWMA of the
+    observed duplication) turns the speculative cache/pending insert
+    sweeps off on unique/adversarial traffic — the cold path pays lookups
+    (which miss fast) but not inserts — and re-opens within a chunk or two
+    when the always-on intra-chunk dedup sees duplicates again.
   * per-packet **tickets** — every submitted packet gets a ticket; results
     (or :class:`PacketError` slots for malformed packets) are delivered in
     exact submission order regardless of which packets hit the cache, which
@@ -47,13 +61,15 @@ Packet-level flow::
     submit(chunk) ──▶ validate ──▶ cache lookup ──▶ hit: resolve ticket
                                         │miss
                                         ▼
-                            dedupe (row-hash) ──▶ staging buffer ──▶ full?
+                            dedupe (row-hash) ──▶ parse fresh rows (host,
+                                                  once) ──▶ staging ──▶ full?
                                                         │ yes
                                                         ▼
-                                   engine.run(batch, block=False)  (async)
+                          engine.run_features(x0, mids, block=False) (async)
                                                         │ retire
                                                         ▼
-                      scatter to tickets + cache.insert(generation at dispatch)
+               emit egress rows (host, once) ──▶ scatter to tickets +
+                                     cache.insert(generation at dispatch)
 """
 
 from __future__ import annotations
@@ -65,7 +81,8 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from .packet import FEATURE_BYTES, HEADER_BYTES
+from .packet import (FEATURE_BYTES, HEADER_BYTES, emit_results_np,
+                     parse_packets_np)
 
 __all__ = ["PacketError", "BatchError", "ResultCache", "IngressPipeline",
            "pack_rows", "STATUS_PENDING", "STATUS_READY", "STATUS_ERROR"]
@@ -229,6 +246,9 @@ class ResultCache:
         self._vals = np.zeros((cap, val_bytes), np.uint8)
         self._state = np.zeros(cap, np.uint8)  # 0 empty · 1 full · 2 tombstone
         self._model = np.full(cap, -1, np.int64)
+        # claim-arbitration scratch (insert probe rounds) — stale contents
+        # are harmless: every round writes before it reads back
+        self._claim = np.zeros(cap, np.int64)
         self._count = 0
         self._tombstones = 0
         self._gen = -1
@@ -345,11 +365,25 @@ class ResultCache:
 
     def insert(self, words: np.ndarray, vals: np.ndarray,
                model_ids: np.ndarray, generation: int,
-               hashes: Optional[np.ndarray] = None) -> int:
+               hashes: Optional[np.ndarray] = None,
+               assume_unique: bool = False) -> int:
         """Insert a chunk of ``(packed ingress row → egress row)`` pairs
         computed under table ``generation``.  Returns the number of rows
         admitted (stale generations and probe-exhausted rows are dropped —
-        the cache is best-effort by design)."""
+        the cache is best-effort by design).
+
+        ``assume_unique`` skips the internal dedup when the caller already
+        guarantees *mostly* distinct keys (the ingress pipeline dedups
+        every chunk before staging, so its retire-side inserts never pay a
+        second argsort).  Probe rounds arbitrate claim collisions by
+        **scatter** (last write into the claim scratch wins, losers
+        re-probe) — no sort, no ``np.unique``, no ``np.isin`` on the
+        insert hot path.  Duplicate keys slipping through in one call
+        (e.g. the best-effort pending window missed a row that then staged
+        twice) stay safe either way: an arbitration loser whose slot was
+        just claimed by its own key resolves as a value refresh instead of
+        claiming a second slot.
+        """
         n = words.shape[0]
         if n == 0:
             return 0
@@ -360,35 +394,41 @@ class ResultCache:
             self._compact()
         if hashes is None:
             hashes = hash_words(words)
-        # dedupe within the call so two identical rows never race one slot
-        uidx, _ = _dedup_rows(words, hashes)
-        if uidx.size != n:
-            words, vals = words[uidx], vals[uidx]
-            model_ids, hashes = model_ids[uidx], hashes[uidx]
-            n = uidx.size
+        if not assume_unique:
+            # dedupe within the call so two identical rows never race one
+            # slot (identical keys in one round would both "win" the claim
+            # scatter and double-count)
+            uidx, _ = _dedup_rows(words, hashes)
+            if uidx.size != n:
+                words, vals = words[uidx], vals[uidx]
+                model_ids, hashes = model_ids[uidx], hashes[uidx]
+                n = uidx.size
         if self._count + n > self._cap * self._load_limit:
             self.clear()
             self._gen = generation
         slot, step = self._slots_steps(hashes)
         admitted = 0
 
-        def _settle(rows: np.ndarray, s: np.ndarray) -> np.ndarray:
+        def _settle(rows: np.ndarray, s: np.ndarray):
             """One probe round for rows (indices into the chunk) at slots
-            ``s``: refresh matches, claim empties/tombstones (np.unique
-            arbitration — distinct rows colliding on one empty slot must
-            not both write), return the still-unresolved row indices."""
+            ``s``: refresh matches, claim empties/tombstones, return the
+            boolean keep-probing mask over ``rows``."""
             nonlocal admitted
             st = self._state[s]
             full = st == 1
             match = (self._keys[s] == words[rows]).all(axis=1) & full
             if match.any():
                 self._vals[s[match]] = vals[rows[match]]
-            resolved = match
-            claim = ~full & ~match
+            claim = ~full
             if claim.any():
                 ci = np.nonzero(claim)[0]
-                _, first = np.unique(s[ci], return_index=True)
-                wi = ci[first]
+                cs = s[ci]
+                # scatter arbitration: duplicate slots keep the last writer
+                # (deterministic in numpy fancy assignment); losers see a
+                # foreign row index on read-back and probe on
+                self._claim[cs] = ci
+                win = self._claim[cs] == ci
+                wi = ci[win]
                 ws = s[wi]
                 rw = rows[wi]
                 self._tombstones -= int((st[wi] == 2).sum())  # reclaimed
@@ -398,23 +438,35 @@ class ResultCache:
                 self._state[ws] = 1
                 self._count += ws.size
                 admitted += ws.size
-                resolved = resolved.copy()
-                resolved[wi] = True
-            return rows[~resolved]
+                unresolved = ~match
+                unresolved[wi] = False
+                # an arbitration loser whose slot was claimed by its OWN
+                # key this round (duplicate keys in one call) must refresh
+                # in place, not claim a second slot downstream
+                li = ci[~win]
+                if li.size:
+                    ls = s[li]
+                    lm = (self._keys[ls] == words[rows[li]]).all(axis=1) \
+                        & (self._state[ls] == 1)
+                    if lm.any():
+                        sel = li[lm]
+                        self._vals[s[sel]] = vals[rows[sel]]
+                        unresolved[sel] = False
+                return unresolved
+            return ~match
 
-        pending = _settle(np.arange(n), slot)  # fast home-slot round
-        if pending.size:
+        keep = _settle(np.arange(n), slot)  # fast home-slot round
+        if keep.any():
+            pending = np.nonzero(keep)[0]
             stepp = step[pending]
             cur = (slot[pending] + stepp) & self._mask
             for _ in range(self._max_probe - 1):
                 if pending.size == 0:
                     break
-                before = pending
-                pending = _settle(before, cur)
-                if pending.size:
-                    keep = np.isin(before, pending, assume_unique=True)
-                    stepp = stepp[keep]
-                    cur = (cur[keep] + stepp) & self._mask
+                keep = _settle(pending, cur)
+                pending = pending[keep]
+                stepp = stepp[keep]
+                cur = (cur[keep] + stepp) & self._mask
         self.insertions += admitted
         return admitted
 
@@ -468,9 +520,10 @@ class _RowStore:
 
 @dataclasses.dataclass
 class _InFlight:
-    future: object          # engine device future (egress batch)
+    future: object          # engine device future (int32 output codes)
     miss_idx: np.ndarray    # global miss index per real row (batch order)
     count: int              # real (non-padding) rows in the batch
+    size: int               # dispatched device batch rows (incl. padding)
     buf_idx: int            # staging buffer holding the ingress rows
     generation: Optional[int]  # table generation at dispatch (None = ambiguous)
 
@@ -481,6 +534,7 @@ class _OpenBatch:
 
     family: str             # "mlp" | "forest" — the engine lane hint
     buf: int                # index into the shared staging-buffer pool
+    size: int               # target device batch rows (adaptive sizing)
     fill: int               # rows staged so far
     t0: float               # age clock (flush_after knob)
     gen0: int               # generation the rows were family-classified at
@@ -515,25 +569,55 @@ class IngressPipeline:
     use_cache / cache_capacity_pow2:
         Duplicate-result short-circuit (on by default).
     flush_after:
-        Latency knob (first step of adaptive batch sizing): maximum age in
-        seconds a partially-filled staging batch may wait before it is
-        dispatched padded.  The age clock starts when the first row enters
-        an empty staging buffer and is checked at the end of every
-        ``submit()`` (and by ``poll()``, for callers with idle gaps between
-        arrivals).  ``None`` (default) preserves the fill-or-flush behavior:
-        a partial batch waits for ``flush()``; ``0.0`` dispatches whatever
-        is staged as soon as the submit that staged it returns.
+        Latency knob: maximum age in seconds a partially-filled staging
+        batch may wait before it is dispatched padded.  The age clock
+        starts when the first row enters an empty staging buffer and is
+        checked at the end of every ``submit()`` (and by ``poll()``, for
+        callers with idle gaps between arrivals).  ``None`` (default)
+        preserves the fill-or-flush behavior: a partial batch waits for
+        ``flush()``; ``0.0`` dispatches whatever is staged as soon as the
+        submit that staged it returns.
+    adaptive_batch:
+        Load-adaptive batch sizing (the ROADMAP "next step" past
+        ``flush_after``): an EWMA of the arrival rate picks each new
+        staging batch's device size from a small static ladder
+        (``batch_size`` and two smaller rungs — at most 3 jit shape
+        variants), so light traffic rides small low-latency batches while
+        sustained load keeps the full fixed-shape throughput batch.
+        ``flush_after`` semantics are unchanged (same injectable clock —
+        the age knob still bounds the tail when the rate estimate is
+        wrong).  Off by default: sizing is then exactly the fixed
+        ``batch_size`` behavior.
     clock:
-        Monotonic-seconds source for the ``flush_after`` age checks
-        (default ``time.perf_counter``).  Injectable so age-based behavior
-        is testable without wall-clock sleeps — tests advance a fake clock
-        deterministically instead of racing the scheduler.
+        Monotonic-seconds source for the ``flush_after`` age checks and the
+        arrival-rate EWMA (default ``time.perf_counter``).  Injectable so
+        age-based behavior is testable without wall-clock sleeps — tests
+        advance a fake clock deterministically instead of racing the
+        scheduler.
     """
+
+    # Cold-traffic admission gate: the caches only pay off on duplicate
+    # traffic, so their *insert* sweeps are speculative work.  A chunk-level
+    # EWMA of the observed short-circuit rate (cache hits + dedup/window
+    # coalesces per packet) gates admission: unique/adversarial cold
+    # traffic stops paying full insert sweeps after the first chunks.
+    # Re-opening has two detectors: the always-on intra-chunk dedup (sees
+    # within-chunk repeats immediately), and **probe inserts** — while the
+    # gate is closed, every retired batch still admits a 1-in-8 stride
+    # sample of its rows, so duplication that only repeats *across* chunks
+    # starts hitting the sampled entries (hit rate ≈ 1/8 on fully
+    # duplicate traffic > the 0.05 threshold) and the gate re-opens within
+    # a few chunks instead of latching shut forever.  Correctness never
+    # depends on the gate — a skipped insert can only cost a future hit.
+    _ADMIT_THRESHOLD = 0.05
+    _ADMIT_ALPHA = 0.5
+    _PROBE_STRIDE = 8
 
     def __init__(self, engine, *, batch_size: int = 2048,
                  max_inflight: int = 2, use_cache: bool = True,
-                 cache_capacity_pow2: int = 15,
+                 cache_capacity_pow2: int = 16,
                  flush_after: Optional[float] = None,
+                 adaptive_batch: bool = False,
                  clock=None):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
@@ -545,9 +629,17 @@ class IngressPipeline:
         self.cp = engine.cp
         self.batch_size = batch_size
         self.max_inflight = max_inflight
+        self.width = engine.max_features
         self.wire_bytes = HEADER_BYTES + FEATURE_BYTES * engine.max_features
         out_feats = min(engine.max_features, int(engine.cp.max_width))
+        self.out_feats = out_feats
         self.out_bytes = HEADER_BYTES + FEATURE_BYTES * out_feats
+        # Cache/dedup keys are the raw wire rows packed into uint64 words:
+        # the steady path (lookup hit) touches nothing but the incoming
+        # bytes — no parse, no key construction.  The flow engine's
+        # feature-domain entry encodes the identical wire row for its key
+        # (one vectorized host encode), so both surfaces share one key
+        # space.
         self.key_words = (self.wire_bytes + 7) // 8
         self.cache: Optional[ResultCache] = (
             ResultCache(self.key_words, self.out_bytes,
@@ -569,17 +661,38 @@ class IngressPipeline:
                 f"{_MULTS.size * 8}-byte hashing bound "
                 f"(max_features={engine.max_features})")
 
-        # Family-aware multi-buffered host staging: up to two open batches
-        # (one per model family — MLP and forest rows stage separately so
-        # device batches are **lane-pure** and the engine skips the other
-        # family's compute) plus up to max_inflight batches on the device.
-        # The packed words/hashes computed at submit time ride along so the
-        # retire-side cache insert never re-packs or re-hashes a row; a
-        # buffer backing a dispatched batch returns to the free pool only
-        # when its results retire.
+        # Load-adaptive size ladder (static: each rung is one jit shape)
+        if adaptive_batch:
+            rungs = {batch_size}
+            for div in (4, 16):
+                if batch_size // div >= 64:
+                    rungs.add(batch_size // div)
+            self.batch_sizes = tuple(sorted(rungs))
+        else:
+            self.batch_sizes = (batch_size,)
+        self.adaptive_batch = adaptive_batch
+        self._rate_ewma = 0.0
+        self._last_submit_t: Optional[float] = None
+
+        # Family-aware multi-buffered host staging — **feature domain**:
+        # each chunk is byte-parsed once on the host (parse_packets_np) and
+        # staged as int32 feature codes + header fields, so every device
+        # dispatch is the pure-compute fused serving program
+        # (engine.run_features) with no in-program byte codec.  Up to two
+        # open batches (one per model family — MLP and forest rows stage
+        # separately so device batches are **lane-pure**) plus up to
+        # max_inflight batches on the device.  The packed key words/hashes
+        # computed at submit time ride along so the retire-side cache
+        # insert never re-packs or re-hashes a row; a buffer backing a
+        # dispatched batch returns to the free pool only when its results
+        # retire (the retire-side egress encode reads it).
         n_bufs = max_inflight + 2
-        self._staging = [np.zeros((batch_size, self.wire_bytes), np.uint8)
+        self._stg_x0 = [np.zeros((batch_size, self.width), np.int32)
+                        for _ in range(n_bufs)]
+        self._stg_mid = [np.zeros(batch_size, np.int32)
                          for _ in range(n_bufs)]
+        self._stg_flags = [np.zeros(batch_size, np.int32)
+                           for _ in range(n_bufs)]
         self._staging_words = [np.zeros((batch_size, self.key_words),
                                         np.uint64)
                                for _ in range(n_bufs)]
@@ -589,6 +702,7 @@ class IngressPipeline:
         self._open: Dict[str, _OpenBatch] = {}
         self.flush_after = flush_after
         self._clock = clock if clock is not None else time.perf_counter
+        self._dup_ewma = 1.0  # optimistic start: admit until proven unique
 
         self._inflight: Deque[_InFlight] = deque()
         self._chunks: Deque[_ChunkRecord] = deque()
@@ -644,7 +758,9 @@ class IngressPipeline:
         is dispatched (padded) before this call returns.
         """
         try:
-            return self._submit(pkts)
+            first, n = self._submit(pkts)
+            self._observe_rate(n)
+            return first, n
         finally:
             self._maybe_flush_aged()
 
@@ -704,32 +820,83 @@ class IngressPipeline:
         else:
             rows_g, tickets_g = rows, tickets
 
-        words = pack_rows(rows_g, self.key_words)
+        self._ingest(rows_g, tickets_g)
+        return first, n
+
+    def submit_features(self, x0, model_id, flags=None) -> Tuple[int, int]:
+        """Feature-domain ingress (the flow engine's entry): already-parsed
+        int32 feature codes + Model IDs.  The wire-row **key** is still
+        built (one vectorized encode — byte-identical to what the jax
+        encoder would emit for the same fields), so the two surfaces share
+        one key space and e.g. a converged flow's rows hit entries a wire
+        replay of the same features populated; but the parsed features ride
+        along, so miss rows stage with no byte parse at all.  Returns
+        ``(first_ticket, n_packets)``."""
+        try:
+            x0 = np.ascontiguousarray(x0, np.int32)
+            n = x0.shape[0]
+            first = self._n_tickets
+            tickets = self._alloc_tickets(n)
+            if n == 0:
+                return first, 0
+            self.stats["packets"] += n
+            mid = np.ascontiguousarray(model_id, np.int32).reshape(n)
+            fl = (np.zeros(n, np.int32) if flags is None
+                  else np.ascontiguousarray(flags, np.int32).reshape(n))
+            if x0.shape[1] < self.width:
+                x0 = np.concatenate(
+                    [x0, np.zeros((n, self.width - x0.shape[1]), np.int32)],
+                    axis=1)
+            from .packet import encode_packets_np
+            rows = encode_packets_np(mid, self.engine.frac, x0, flags=fl)
+            self._ingest(rows, tickets, parsed=(mid, fl, x0))
+            self._observe_rate(n)
+            return first, n
+        finally:
+            self._maybe_flush_aged()
+
+    def _ingest(self, rows: np.ndarray, tickets: np.ndarray,
+                parsed=None) -> None:
+        """The shared ingress path: cache lookup → dedup → pending window →
+        lane-pure **feature-domain** staging, with the cold-traffic
+        admission gate updated from this chunk's observed duplication.
+
+        Keys are the raw wire rows (packed to uint64 words — the steady
+        path touches nothing else); the byte parse happens **once, only
+        for the fresh rows that will actually dispatch** (host twin of the
+        device parser, bit-identical), or never, when the caller already
+        has the parsed fields (``parsed = (mid, flags, x0)``).
+        """
+        n = rows.shape[0]
+        words = pack_rows(rows, self.key_words)
         hashes = hash_words(words)
         generation = self.cp.version
         if self.cache is not None:
             hit_mask, hit_vals = self.cache.lookup(words, generation, hashes)
         else:
-            hit_mask = np.zeros(rows_g.shape[0], bool)
+            hit_mask = np.zeros(n, bool)
         if hit_mask.any():
-            ht = tickets_g[hit_mask]
+            ht = tickets[hit_mask]
             self._results.a[ht] = hit_vals
             self._status[ht] = STATUS_READY
             n_hit = int(hit_mask.sum())
             self.stats["cache_hits"] += n_hit
             self.engine.credit_packets(n_hit)  # served without a dispatch
             miss = ~hit_mask
-            miss_rows = rows_g[miss]
-            miss_tickets = tickets_g[miss]
-            miss_words, miss_hashes = words[miss], hashes[miss]
+            miss_sel = np.nonzero(miss)[0]
+            miss_tickets = tickets[miss_sel]
+            miss_words, miss_hashes = words[miss_sel], hashes[miss_sel]
         else:
-            miss_rows, miss_tickets = rows_g, tickets_g
+            n_hit = 0
+            miss_sel = np.arange(n)
+            miss_tickets = tickets
             miss_words, miss_hashes = words, hashes
-        if miss_rows.shape[0] == 0:
-            return first, n
+        if miss_sel.size == 0:
+            self._observe_duplication(n, n)
+            return
 
-        # coalesce byte-identical packets within the chunk: uniques dispatch
-        # once, every duplicate ticket rides the same result row
+        # coalesce semantically-identical packets within the chunk: uniques
+        # dispatch once, every duplicate ticket rides the same result row
         uniq_idx, inverse = _dedup_rows(miss_words, miss_hashes)
         n_uniq = uniq_idx.size
         uniq_words = miss_words[uniq_idx]
@@ -751,9 +918,10 @@ class IngressPipeline:
         base = self._n_miss
         uniq_global[fresh] = base + np.arange(n_fresh)
         self._n_miss += n_fresh
-        n_coalesced = miss_rows.shape[0] - n_fresh
+        n_coalesced = miss_sel.size - n_fresh
         self.stats["coalesced"] += n_coalesced
         self.engine.credit_packets(n_coalesced)  # ride an existing dispatch
+        self._observe_duplication(n, n_hit + n_coalesced)
 
         miss_idx = uniq_global[inverse]
         self._chunks.append(_ChunkRecord(
@@ -761,70 +929,126 @@ class IngressPipeline:
             miss_idx=miss_idx,
             hi=int(miss_idx.max()) + 1))
         if n_fresh:
-            fresh_rows = miss_rows[uniq_idx[fresh]]
+            fsel = miss_sel[uniq_idx[fresh]]
+            if parsed is None:
+                # the one byte-parse of the serving path — fresh rows only
+                fresh_mid, _, fresh_flags, fresh_x0 = parse_packets_np(
+                    rows[fsel], self.width)
+            else:
+                mid, flags, x0 = parsed
+                fresh_x0 = x0[fsel]
+                fresh_mid = mid[fsel]
+                fresh_flags = flags[fsel]
             fresh_words = uniq_words[fresh]
             fresh_hashes = uniq_hashes[fresh]
             fresh_idx = uniq_global[fresh]
-            mids = (fresh_rows[:, 0].astype(np.int64) << 8) \
-                | fresh_rows[:, 1]
-            if self._pending is not None:
+            if self._pending is not None and self._admit():
                 idx_bytes = fresh_idx.reshape(-1, 1).view(np.uint8)
-                self._pending.insert(fresh_words, idx_bytes, mids,
-                                     generation, fresh_hashes)
+                self._pending.insert(fresh_words, idx_bytes,
+                                     fresh_mid.astype(np.int64),
+                                     generation, fresh_hashes,
+                                     assume_unique=True)
             # lane-pure staging: forest-family rows and MLP-family rows ride
             # separate fixed-shape batches, so each dispatch runs only its
             # own lane's compute (unknown ids stage as MLP — both lanes
             # egress zeros for them)
             if self.cp.forest_active:
-                isf = self.cp.is_forest_id(mids)
+                isf = self.cp.is_forest_id(fresh_mid)
             else:
                 isf = None
             if isf is None or not isf.any():
-                self._stage("mlp", fresh_rows, fresh_words, fresh_hashes,
-                            fresh_idx, generation)
+                self._stage("mlp", fresh_x0, fresh_mid, fresh_flags,
+                            fresh_words, fresh_hashes, fresh_idx, generation)
             elif isf.all():
-                self._stage("forest", fresh_rows, fresh_words, fresh_hashes,
-                            fresh_idx, generation)
+                self._stage("forest", fresh_x0, fresh_mid, fresh_flags,
+                            fresh_words, fresh_hashes, fresh_idx, generation)
             else:
                 m = ~isf
-                self._stage("mlp", fresh_rows[m], fresh_words[m],
-                            fresh_hashes[m], fresh_idx[m], generation)
-                self._stage("forest", fresh_rows[isf], fresh_words[isf],
+                self._stage("mlp", fresh_x0[m], fresh_mid[m], fresh_flags[m],
+                            fresh_words[m], fresh_hashes[m], fresh_idx[m],
+                            generation)
+                self._stage("forest", fresh_x0[isf], fresh_mid[isf],
+                            fresh_flags[isf], fresh_words[isf],
                             fresh_hashes[isf], fresh_idx[isf], generation)
         self._resolve_ready_chunks()
-        return first, n
+
+    # -- cold-traffic admission gate --------------------------------------
+
+    def _observe_duplication(self, n: int, short_circuited: int) -> None:
+        """Fold one chunk's observed short-circuit rate into the admission
+        EWMA (always-on intra-chunk dedup is the detector that re-opens
+        admission when duplication reappears)."""
+        if n:
+            obs = short_circuited / n
+            self._dup_ewma = (self._ADMIT_ALPHA * self._dup_ewma
+                              + (1.0 - self._ADMIT_ALPHA) * obs)
+
+    def _admit(self) -> bool:
+        """True when cache/pending insert sweeps are currently worth their
+        cost (recent traffic showed duplication)."""
+        return self._dup_ewma >= self._ADMIT_THRESHOLD
+
+    def _pick_size(self) -> int:
+        """Load-adaptive device batch size for a newly-opened staging batch:
+        the largest ladder rung the EWMA'd arrival rate would fill within
+        the latency horizon (``flush_after``, else a 5 ms default), so
+        light traffic rides small batches and sustained load the full one.
+        With ``adaptive_batch=False`` the ladder is a single rung."""
+        if len(self.batch_sizes) == 1:
+            return self.batch_sizes[0]
+        horizon = self.flush_after if self.flush_after is not None else 0.005
+        expect = self._rate_ewma * horizon
+        size = self.batch_sizes[0]
+        for s in self.batch_sizes:
+            if s <= expect:
+                size = s
+        return size
+
+    def _observe_rate(self, n: int) -> None:
+        if not self.adaptive_batch:
+            return
+        now = self._clock()
+        if self._last_submit_t is not None:
+            dt = now - self._last_submit_t
+            inst = n / dt if dt > 1e-9 else self._rate_ewma
+            self._rate_ewma = 0.5 * self._rate_ewma + 0.5 * inst
+        self._last_submit_t = now
 
     def _open_batch(self, family: str, generation: int) -> _OpenBatch:
         while not self._free_bufs:  # pool sized so this never loops, but
             self._retire_oldest()   # stay safe if invariants ever shift
-        o = _OpenBatch(family=family, buf=self._free_bufs.popleft(), fill=0,
+        o = _OpenBatch(family=family, buf=self._free_bufs.popleft(),
+                       size=self._pick_size(), fill=0,
                        t0=self._clock(), gen0=generation,
                        miss_idx=np.empty(self.batch_size, np.int64))
         self._open[family] = o
         return o
 
-    def _stage(self, family: str, rows: np.ndarray, words: np.ndarray,
-               hashes: np.ndarray, miss_idx: np.ndarray,
-               generation: int) -> None:
-        """Append unique miss rows (plus their packed words/hashes and
-        global miss indices) to the family's staging batch, dispatching
-        every time it reaches the fixed batch size."""
+    def _stage(self, family: str, x0: np.ndarray, mid: np.ndarray,
+               flags: np.ndarray, words: np.ndarray, hashes: np.ndarray,
+               miss_idx: np.ndarray, generation: int) -> None:
+        """Append unique miss rows (parsed feature codes + header fields,
+        plus their packed key words/hashes and global miss indices) to the
+        family's staging batch, dispatching every time it reaches its
+        device size."""
         pos = 0
-        total = rows.shape[0]
+        total = x0.shape[0]
         while pos < total:
             o = self._open.get(family)
             if o is None:
                 o = self._open_batch(family, generation)
-            space = self.batch_size - o.fill
+            space = o.size - o.fill
             take = min(space, total - pos)
             lo, hi = o.fill, o.fill + take
-            self._staging[o.buf][lo:hi] = rows[pos: pos + take]
+            self._stg_x0[o.buf][lo:hi] = x0[pos: pos + take]
+            self._stg_mid[o.buf][lo:hi] = mid[pos: pos + take]
+            self._stg_flags[o.buf][lo:hi] = flags[pos: pos + take]
             self._staging_words[o.buf][lo:hi] = words[pos: pos + take]
             self._staging_hashes[o.buf][lo:hi] = hashes[pos: pos + take]
             o.miss_idx[lo:hi] = miss_idx[pos: pos + take]
             o.fill += take
             pos += take
-            if o.fill == self.batch_size:
+            if o.fill == o.size:
                 self._dispatch(family)
 
     def _dispatch(self, family: Optional[str] = None) -> None:
@@ -837,39 +1061,47 @@ class IngressPipeline:
             return
         while len(self._inflight) >= self.max_inflight:
             self._retire_oldest()
-        buf = self._staging[o.buf]
+        size = o.size
+        x0 = self._stg_x0[o.buf][:size]
+        mid = self._stg_mid[o.buf][:size]
         count = o.fill
-        if count < self.batch_size:
-            # dead padding rows: all-zero header → Model ID 0, which the
-            # id_map resolves to "not installed" → zeroed egress, discarded
-            buf[count:] = 0
-            self.stats["padded_rows"] += self.batch_size - count
-            # engine.run counts the whole batch — padding is not traffic
-            self.engine.credit_packets(count - self.batch_size)
+        in_row = HEADER_BYTES + FEATURE_BYTES * self.width
+        out_row = self.out_bytes
+        if count < size:
+            # dead padding rows: Model ID 0, which the id_map resolves to
+            # "not installed" → zeroed egress, discarded at retire
+            x0[count:] = 0
+            mid[count:] = 0
+            self._stg_flags[o.buf][count:size] = 0
+            self.stats["padded_rows"] += size - count
+            # engine.run_features counts the whole batch — padding is not
+            # traffic
+            self.engine.credit_packets(count - size)
         gen_before = self.cp.version
         # the family classification is only as current as its generation: a
         # racing install()/remove() may have reassigned an id, so fall back
         # to the always-correct both-lane program for this batch
         lanes = o.family if gen_before == o.gen0 else "both"
-        future = self.engine.run(buf, block=False, lanes=lanes)
+        future = self.engine.run_features(x0, mid, block=False, lanes=lanes)
         gen_after = self.cp.version
         if lanes != "both" and gen_after != gen_before:
-            # a table write landed between the lane decision and run()'s
+            # a table write landed between the lane decision and the run's
             # snapshot — the lane-pure program may now be wrong for this
             # batch (e.g. an id reassigned across families).  Discard that
             # dispatch and redo on the both-lane program, which is correct
             # under any generation's tables.
-            self.engine.credit_packets(-buf.shape[0])  # never served
-            self.engine.credit_bytes(-buf.size, -future.size)
+            self.engine.credit_packets(-size)  # never served
+            self.engine.credit_bytes(-size * in_row, -size * out_row)
             lanes = "both"
             gen_before = self.cp.version
-            future = self.engine.run(buf, block=False, lanes=lanes)
+            future = self.engine.run_features(x0, mid, block=False,
+                                              lanes=lanes)
             gen_after = self.cp.version
         generation = gen_before if gen_after == gen_before else None
         self._inflight.append(_InFlight(
             future=future, miss_idx=o.miss_idx[:count].copy(), count=count,
-            buf_idx=o.buf, generation=generation))
-        self.stats["dispatched_rows"] += self.batch_size
+            size=size, buf_idx=o.buf, generation=generation))
+        self.stats["dispatched_rows"] += size
         self.stats["batches"] += 1
         self.stats["lane_batches"][lanes] += 1
 
@@ -887,10 +1119,16 @@ class IngressPipeline:
     def _retire_oldest(self) -> None:
         rec = self._inflight.popleft()
         out = np.asarray(rec.future)  # blocks until the device batch is done
+        # the one egress encode of the serving path (host twin of the
+        # device deparser, byte-identical): int32 output codes → wire rows
+        rows = emit_results_np(self._stg_mid[rec.buf_idx][: rec.count],
+                               self._stg_flags[rec.buf_idx][: rec.count],
+                               out[: rec.count, : self.out_feats],
+                               self.engine.frac)
         idx = rec.miss_idx
         hi = int(idx.max()) + 1 if idx.size else 0
         self._miss_out.ensure(hi)
-        self._miss_out.a[idx] = out[: rec.count, : self.out_bytes]
+        self._miss_out.a[idx] = rows
         self._miss_out.n = max(self._miss_out.n, hi)
         self._ensure_retired(self._n_miss)
         self._miss_retired[idx] = True
@@ -900,12 +1138,16 @@ class IngressPipeline:
         self._miss_done = (self._n_miss if rem.all()
                            else self._miss_done + int(np.argmin(rem)))
         if self.cache is not None and rec.generation is not None:
-            rows = self._staging[rec.buf_idx][: rec.count]
-            words = self._staging_words[rec.buf_idx][: rec.count]
-            hashes = self._staging_hashes[rec.buf_idx][: rec.count]
-            mids = (rows[:, 0].astype(np.int64) << 8) | rows[:, 1]
-            self.cache.insert(words, out[: rec.count, : self.out_bytes],
-                              mids, rec.generation, hashes)
+            # gate open: admit the whole batch; gate closed: admit a stride
+            # sample so reappearing cross-chunk duplication still produces
+            # the hits that re-open the gate (see the class comment)
+            sl = (slice(None, rec.count) if self._admit()
+                  else slice(None, rec.count, self._PROBE_STRIDE))
+            words = self._staging_words[rec.buf_idx][sl]
+            hashes = self._staging_hashes[rec.buf_idx][sl]
+            mids = self._stg_mid[rec.buf_idx][sl].astype(np.int64)
+            self.cache.insert(words, rows[sl], mids, rec.generation, hashes,
+                              assume_unique=True)
         self._free_bufs.append(rec.buf_idx)
         self._resolve_ready_chunks()
 
@@ -965,7 +1207,7 @@ class IngressPipeline:
         self._inflight.clear()
         self._chunks.clear()
         self._open.clear()
-        self._free_bufs = deque(range(len(self._staging)))
+        self._free_bufs = deque(range(len(self._stg_x0)))
         self._n_tickets = 0
         self._results.reset()
         self._status[:] = 0

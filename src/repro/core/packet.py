@@ -37,7 +37,9 @@ __all__ = [
     "encode_packets_np",
     "write_header_np",
     "parse_packets",
+    "parse_packets_np",
     "emit_results",
+    "emit_results_np",
     "FLAG_PADDED",
     "FLAG_RESULT",
 ]
@@ -223,6 +225,59 @@ def parse_packets(pkts: jax.Array, max_features: int) -> ParsedBatch:
     return ParsedBatch(model_id=model_id, feature_cnt=feature_cnt,
                        output_cnt=output_cnt, scale=scale, flags=flags,
                        features_q=features)
+
+
+def parse_packets_np(rows: np.ndarray, max_features: int):
+    """Host-side numpy twin of :func:`parse_packets` — bit-identical header
+    fields and feature codes for the same ``(B, L)`` uint8 rows (asserted by
+    the tier-1 suite).
+
+    The ingress pipeline parses each chunk **once** on the host and stages
+    int32 feature batches, so the device program is pure compute
+    (``kernels.fused_serve``) with no per-dispatch byte unpacking.  The
+    feature read is a big-endian view (SIMD byteswap, memcpy-class) instead
+    of per-byte shift towers.
+
+    Returns ``(model_id, feature_cnt, flags, features_q)`` — the fields the
+    serving path consumes (Output Cnt and Scale are parsed by the data plane
+    but never read by the compute lanes; the egress scale is the engine's).
+    """
+    rows = np.ascontiguousarray(rows, np.uint8)
+    b, length = rows.shape
+    model_id = ((rows[:, 0].astype(np.int32) << 8)
+                | rows[:, 1]).astype(np.int32)
+    feature_cnt = rows[:, 2].astype(np.int32)
+    flags = rows[:, 6].astype(np.int32)
+    avail = (length - HEADER_BYTES) // FEATURE_BYTES
+    n = min(max_features, avail)
+    if n:
+        blk = np.ascontiguousarray(
+            rows[:, HEADER_BYTES: HEADER_BYTES + FEATURE_BYTES * n])
+        feats = blk.view(">i4").astype(np.int32)
+    else:
+        feats = np.zeros((b, 0), np.int32)
+    if n < max_features:
+        feats = np.concatenate(
+            [feats, np.zeros((b, max_features - n), np.int32)], axis=1)
+    idx = np.arange(max_features, dtype=np.int32)[None, :]
+    feats = np.where(idx < feature_cnt[:, None], feats, 0)
+    return model_id, feature_cnt, flags, feats
+
+
+def emit_results_np(model_id: np.ndarray, flags: np.ndarray,
+                    outputs_q: np.ndarray, out_scale: int) -> np.ndarray:
+    """Host-side numpy twin of :func:`emit_results` — byte-identical egress
+    rows for the same header fields and output codes (asserted by the tier-1
+    suite).  The ingress pipeline encodes each retired batch's egress rows
+    here, once, so the wire byte layout is paid exactly at the two edges of
+    the serving path and never inside the device program.  Delegates to
+    :func:`encode_packets_np`, mirroring how :func:`emit_results` delegates
+    to :func:`encode_packets` — one definition of the layout per side."""
+    outputs_q = np.asarray(outputs_q, np.int32)
+    n_out = outputs_q.shape[1]
+    return encode_packets_np(
+        model_id, out_scale, outputs_q,
+        flags=np.asarray(flags, np.int64) | FLAG_RESULT, output_cnt=n_out)
 
 
 # ---------------------------------------------------------------------------

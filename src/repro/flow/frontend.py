@@ -18,13 +18,15 @@ previously skipped: real traffic has no feature vectors, it has packets.
     FeatureSpec gather                per-packet: which flow-feature lanes
         │                             feed this Model ID's input columns
         ▼
-    encode_packets_np ──▶ IngressPipeline.submit()   (dedup → cache →
-                                                      lane-pure dispatch)
+    IngressPipeline.submit_features()   (dedup → cache → lane-pure fused
+                                         dispatch; wire bytes only at egress)
 
-Everything upstream of ``IngressPipeline.submit`` is host-side vectorized
-numpy (the registers live next to the flow hash table), so a FeatureSpec
-reinstall — re-mapping which registers feed which model — is a pure
-control-plane swap: zero data-plane retraces by construction.
+Everything upstream of the pipeline is host-side vectorized numpy (the
+registers live next to the flow hash table), so a FeatureSpec reinstall —
+re-mapping which registers feed which model — is a pure control-plane
+swap: zero data-plane retraces by construction.  On TPU the whole stage
+can instead run as one device dispatch (``serve_raw_fused``: flow-update
+kernel → in-program spec take → compute lanes → egress encode).
 
 Converged flows are where this design pays: a periodic/telemetry flow's
 EWMA registers reach a fixed point, its feature rows byte-repeat, and the
@@ -36,12 +38,13 @@ from raw packets.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import numpy as np
 
 from ..core.ingress import _dedup_rows
-from ..core.packet import HEADER_BYTES, write_header_np
+from ..core.packet import HEADER_BYTES
 from ..data.packets import RAW_KEY_BYTES, RawHeaderBatch, parse_raw_headers
 from ..kernels.ops import flow_update
 from ..kernels.ref import N_FLOW_FEATURES, flow_update_numpy
@@ -130,6 +133,7 @@ class FlowFrontend:
         self.stats = {"raw_packets": 0, "raw_batches": 0}
         self._arange = np.arange(0).reshape(0, 1)  # grown on demand
         self._ones = np.ones(0, np.int32)
+        self._fused_serve = None  # jitted serve_raw program (lazy)
 
     # -- feature extraction -------------------------------------------------
 
@@ -168,30 +172,84 @@ class FlowFrontend:
 
     def submit_raw(self, raw) -> Tuple[int, int]:
         """Feed one raw header batch through flow-update → feature-spec
-        gather → encapsulation → the ingress pipeline.  Returns the
-        pipeline's ``(first_ticket, n_packets)``; results arrive through
-        the usual ``drain()`` surface in submission order."""
+        gather → the ingress pipeline's **feature-domain** entry.  Returns
+        the pipeline's ``(first_ticket, n_packets)``; results arrive
+        through the usual ``drain()`` surface in submission order.
+
+        No wire rows are built on ingress any more: the spec gather lands
+        each packet's flow-feature lanes on its model's input columns (one
+        int32 gather — ``-1`` columns read the appended zero lane, exactly
+        the device program's ``fused_serve.spec_take`` convention) and the
+        parsed features go straight to ``IngressPipeline.submit_features``
+        (dedup → cache → lane-pure fused dispatch).  The wire byte layout
+        is paid once, at egress, when a retired batch's results are
+        encoded — byte-identical to the old encapsulate→parse round trip
+        (asserted by the tier-1 suite).
+        """
         feats, fields, _ = self.extract(raw)
         n = feats.shape[0]
         if n == 0:
-            return self.pipeline.submit(
-                np.zeros((0, self.pipeline.wire_bytes), np.uint8))
-        cols, lens = self.cp.feature_spec_rows(fields.model_id, self.width)
-        # unused columns are -1, which indexes the appended zero column —
-        # one int32 gather builds every model's input layout, no masking
-        # pass; the big-endian byteswap then writes straight into the
-        # pre-allocated wire rows
+            return self.pipeline.submit_features(
+                np.zeros((0, self.width), np.int32), np.zeros(0, np.int32))
+        cols, _ = self.cp.feature_spec_rows(fields.model_id, self.width)
         feats_z = np.concatenate(
             [feats, np.zeros((n, 1), np.int32)], axis=1)
         if self._arange.shape[0] < n:
             self._arange = np.arange(n).reshape(n, 1)
-        gathered = feats_z[self._arange[:n], cols]
-        wire = np.empty((n, HEADER_BYTES + 4 * self.width), np.uint8)
-        write_header_np(wire, fields.model_id, self.params.frac,
-                        feature_cnt=lens)
-        wire[:, HEADER_BYTES:] = gathered.astype(">i4").view(
-            np.uint8).reshape(n, -1)
-        return self.pipeline.submit(wire)
+        gathered = np.ascontiguousarray(feats_z[self._arange[:n], cols])
+        return self.pipeline.submit_features(gathered, fields.model_id)
+
+    def serve_raw_fused(self, raw) -> np.ndarray:
+        """One-dispatch raw serving: the whole cold path — flow-update
+        kernel → in-program spec gather → lane dispatch → egress encode —
+        as a single jitted device program (``kernels.fused_serve.
+        serve_raw``), bypassing the ingress caches entirely.
+
+        This is the TPU deployment shape; off-TPU the kernel runs under
+        the Pallas interpreter, so the staged ``submit_raw`` path is the
+        CPU production route.  The host still resolves 5-tuples → register
+        slots (the flow hash table is the one intrinsically host-side
+        stage), and — because that table also owns eviction — the register
+        file and sketch currently round-trip host↔device per batch; making
+        them device-resident across batches (donated buffers, host-side
+        eviction mirrored by index) is the remaining step for the real-TPU
+        run (ROADMAP).  Returns the egress wire rows in batch order,
+        bit-exact with ``submit_raw``'s results for the same arrivals.
+        """
+        import jax
+        from ..kernels.fused_serve import serve_raw
+
+        fields = parse_raw_headers(raw)
+        n = fields.model_id.shape[0]
+        if n == 0:
+            return np.zeros((0, HEADER_BYTES + 4 * self.width), np.uint8)
+        self.stats["raw_packets"] += n
+        self.stats["raw_batches"] += 1
+        words, hashes = FlowTable.pack_keys(fields.key_bytes, self.key_words)
+        # no rank wanted: the in-kernel walk is batch-ordered, unlike the
+        # host rank-round lowering extract() feeds
+        slots, _ = self.table.lookup_or_insert(words, hashes, fields.ts)
+        cells = self.params.cms_cells(hashes)
+        cols, _ = self.cp.feature_spec_rows(fields.model_id, self.width)
+        eng = self.engine
+        if self._fused_serve is None:
+            self._fused_serve = jax.jit(
+                functools.partial(serve_raw, cfg=eng.lane_cfg._replace(
+                    backend="pallas" if eng.backend == "auto"
+                    else eng.backend)),
+                static_argnames=("use_mlp", "use_forest", "ewma_shift",
+                                 "byte_shift", "dur_shift"))
+        use_mlp, use_forest = eng._lane_flags("both")
+        p = self.params
+        state, cms, rows = self._fused_serve(
+            self.table.registers, self.cms, slots, cells, fields.ts,
+            fields.length, np.ones(n, np.int32), cols, fields.model_id,
+            eng.cp.tables(), *eng._forest_snapshots(use_forest),
+            use_mlp=use_mlp, use_forest=use_forest, ewma_shift=p.ewma_shift,
+            byte_shift=p.byte_shift, dur_shift=p.dur_shift)
+        self.table.registers[:] = np.asarray(state)
+        self.cms[:] = np.asarray(cms)
+        return np.asarray(rows)
 
     def flow_table_hit_rate(self) -> float:
         return self.table.hit_rate()

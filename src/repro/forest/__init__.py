@@ -7,17 +7,25 @@ batched data plane (and ingress pipeline) as the MLP family:
 
   * ``compile``   — pure-NumPy CART trainer, sklearn-convention import path,
                     fixed-point threshold/leaf quantization, table packing
-  * traversal     — ``repro.kernels.forest_traverse`` (Pallas kernel +
-                    gathered CPU lowering, bit-exact vs the pure-Python
+  * ``ranges``    — the pForest range-table compilation: per-threshold
+                    leaf-mask entries served by the ``variant="range"``
+                    traversal lane (``pack_forest_ranges``), walk-validated
+                    at install
+  * traversal     — ``repro.kernels.forest_traverse`` (Pallas kernels +
+                    gathered CPU lowerings for both the pointer-chase and
+                    range-table variants, bit-exact vs the pure-Python
                     oracle in ``repro.kernels.ref``)
   * installation  — ``ControlPlane.install_forest`` (generation-swapped,
-                    zero-retrace hot-swap exactly like MLP installs)
+                    zero-retrace hot-swap exactly like MLP installs; both
+                    lowerings publish in one swap)
 """
 
 from .compile import (FOREST_CLASSIFY, FOREST_REGRESS, DecisionTree, Forest,
                       PackedForest, pack_forest, predict_float, train_forest,
                       train_tree)
+from .ranges import RangePacked, pack_forest_ranges, range_bounds
 
 __all__ = ["DecisionTree", "Forest", "PackedForest", "pack_forest",
            "predict_float", "train_forest", "train_tree",
-           "FOREST_REGRESS", "FOREST_CLASSIFY"]
+           "FOREST_REGRESS", "FOREST_CLASSIFY",
+           "RangePacked", "pack_forest_ranges", "range_bounds"]

@@ -1,0 +1,176 @@
+"""Range-table compilation of tree ensembles (the pForest ternary-match
+lowering, compiled for a vector data plane).
+
+pForest (Busse-Grawitz et al.) and Planter ("Automating In-Network Machine
+Learning", Zheng et al.) compile decision trees into per-feature
+threshold-range match tables: hardware evaluates every range predicate in
+parallel and the surviving leaf is the conjunction, so tree inference costs
+one match-action stage per feature instead of a depth-long pointer chase.
+This module is that compilation for our data plane:
+
+  * every internal node ``(feature, threshold)`` becomes one **range-table
+    entry** carrying a *leaf mask* — the set of leaves still reachable when
+    the comparison ``x[feature] <= threshold`` is false (i.e. the left
+    subtree's leaves are dropped).  Entries whose comparison holds
+    contribute the full mask;
+  * evaluation is a pure compare + AND-reduce: AND the masks of every
+    failed comparison and the exit leaf is the **lowest set bit** (leaves
+    are numbered in-order, left to right — the classic QuickScorer
+    invariant, which is exactly the vectorized form of pForest's per-feature
+    range conjunction);
+  * leaf payloads ride in a dense per-tree table indexed by that bit.
+
+Bit-exactness is structural: thresholds are the *already-quantized* int32
+codes from the packed node tables, and bucket membership is decided by the
+same ``x <= threshold`` comparisons the pointer chase performs, so the range
+lowering reproduces ``ref.forest_traverse_numpy`` bit for bit on every
+well-formed tree (asserted by hypothesis three-way property tests).
+
+The compiler *validates* tree shape as it walks: child pointers must form a
+proper binary tree (each node reached once, leaves self-looping, depth
+within the data plane's unroll bound) and the leaf count must fit the
+32-bit mask.  ``ControlPlane.install_forest`` runs this at install time, so
+a malformed ``PackedForest`` that the dense-table checks cannot see (cycles,
+node reuse) fails loudly at the control plane instead of serving garbage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["RangePacked", "pack_forest_ranges", "range_bounds"]
+
+_INT32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+def range_bounds(max_nodes: int):
+    """Static range-table extents for a ``max_nodes`` node budget: a proper
+    binary tree with ``i`` internal nodes has ``i + 1`` leaves, so
+    ``n = 2i + 1 <= max_nodes`` bounds both sides.  Returns
+    ``(max_internal, max_leaves)``."""
+    max_internal = max(0, (int(max_nodes) - 1) // 2)
+    return max_internal, max_internal + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RangePacked:
+    """Range-table form of one ensemble, padded to ``(n_trees, NI)`` /
+    ``(n_trees, L)`` extents (``ControlPlane`` pads further into its static
+    slot shapes).
+
+    ``feat``/``thresh``/``lmask`` hold one row per range-table entry
+    (= internal node): padded entries carry ``thresh = INT32_MAX`` so their
+    comparison always holds and the mask is never applied.  ``lmask`` is the
+    uint32 leaf set remaining when the entry's comparison fails; ``payload``
+    is the per-leaf output code in in-order leaf numbering.
+    """
+
+    feat: np.ndarray     # (T, NI) int32 feature index per entry
+    thresh: np.ndarray   # (T, NI) int32 quantized threshold code
+    lmask: np.ndarray    # (T, NI) uint32 surviving-leaf mask (cond false)
+    payload: np.ndarray  # (T, L) int32 leaf payload codes
+    depth: int           # max root->leaf edges seen during the walk
+
+
+def _compile_tree(nodes: np.ndarray, *, max_depth: int):
+    """Walk one packed tree (``(N, 5)`` field rows, leaves self-looping) and
+    return ``(entries, payloads, depth)`` with ``entries`` a list of
+    ``(feature, threshold, surviving_mask)``.  Raises ``ValueError`` on any
+    structure the level-bounded traversal could not have served: revisited
+    nodes, out-of-range children, depth beyond ``max_depth``, or more leaves
+    than the 32-bit mask holds."""
+    n_nodes = nodes.shape[0]
+    leaves: list = []       # in-order leaf node ids
+    internal: list = []     # (node id, depth) in walk order
+    seen = set()
+
+    # iterative in-order walk (explicit stack: max_nodes is a table bound,
+    # not a Python recursion bound)
+    stack = [(0, 0)]
+    depth_max = 0
+    while stack:
+        node, depth = stack.pop()
+        if node in seen:
+            raise ValueError(
+                f"node {node} reachable twice — child pointers do not form "
+                "a tree; the range compilation (and the pointer chase's "
+                "self-loop contract) require a proper binary tree")
+        if not 0 <= node < n_nodes:
+            raise ValueError(f"child pointer {node} outside [0, {n_nodes})")
+        seen.add(node)
+        depth_max = max(depth_max, depth)
+        left, right = int(nodes[node, 2]), int(nodes[node, 3])
+        if left == node and right == node:   # leaf (self-loop)
+            if len(leaves) >= 32:
+                raise ValueError(
+                    "tree has more than 32 leaves — beyond the range "
+                    "lane's 32-bit leaf mask (raise max_nodes past 64 only "
+                    "for the pointer-chase lane)")
+            leaves.append(node)
+            continue
+        if left == node or right == node:
+            raise ValueError(
+                f"node {node} half-self-loops — neither leaf nor split")
+        if depth + 1 > max_depth:
+            raise ValueError(
+                f"tree depth exceeds the unroll bound {max_depth}")
+        internal.append((node, depth))
+        stack.append((right, depth + 1))   # pushed first → popped second:
+        stack.append((left, depth + 1))    # left subtree walks first
+
+    # second pass: per internal node, the leaf set under its left subtree
+    # (in-order numbering makes every subtree's leaf set a contiguous bit
+    # run, so the surviving mask of a failed comparison is well formed)
+    leaf_idx = {n: i for i, n in enumerate(leaves)}
+
+    def subtree_mask(node: int) -> int:
+        left, right = int(nodes[node, 2]), int(nodes[node, 3])
+        if left == node:
+            return 1 << leaf_idx[node]
+        return subtree_mask(left) | subtree_mask(right)
+
+    full = (1 << len(leaves)) - 1
+    entries = []
+    for node, _ in internal:
+        drop = subtree_mask(int(nodes[node, 2]))
+        entries.append((int(nodes[node, 0]), int(nodes[node, 1]),
+                        (full & ~drop) & 0xFFFFFFFF))
+    payloads = [int(nodes[n, 4]) for n in leaves]
+    return entries, payloads, depth_max
+
+
+def pack_forest_ranges(nodes: np.ndarray, tree_on: np.ndarray, *,
+                       max_depth: int) -> RangePacked:
+    """Compile one packed ensemble's node tables ``(T, N, 5)`` into range
+    tables.  ``tree_on`` masks padded (dead) trees — their table rows stay
+    all-padding (every comparison holds, mask never applied, payload 0), so
+    the data-plane ``tree_on`` gate is the only liveness authority, same as
+    the chase lane."""
+    nodes = np.asarray(nodes, np.int32)
+    tree_on = np.asarray(tree_on)
+    n_trees = nodes.shape[0]
+    compiled = []
+    depth = 0
+    for t in range(n_trees):
+        if not tree_on[t]:
+            compiled.append(([], [0], 0))
+            continue
+        entries, payloads, d = _compile_tree(nodes[t], max_depth=max_depth)
+        depth = max(depth, d)
+        compiled.append((entries, payloads, d))
+    ni = max(1, max(len(e) for e, _, _ in compiled))
+    nl = max(1, max(len(p) for _, p, _ in compiled))
+    feat = np.zeros((n_trees, ni), np.int32)
+    thresh = np.full((n_trees, ni), _INT32_MAX, np.int32)
+    lmask = np.zeros((n_trees, ni), np.uint32)
+    payload = np.zeros((n_trees, nl), np.int32)
+    for t, (entries, payloads, _) in enumerate(compiled):
+        for i, (f, th, m) in enumerate(entries):
+            feat[t, i] = f
+            thresh[t, i] = th
+            lmask[t, i] = m
+        payload[t, : len(payloads)] = payloads
+    return RangePacked(feat=feat, thresh=thresh, lmask=lmask,
+                       payload=payload, depth=depth)

@@ -12,12 +12,22 @@
                              v5e MXU native rate), both bit-exact against
                              their jnp oracles
   * ``forest_traverse``    — (module ``forest_traversal``) fused
-                             multi-forest tree-ensemble traversal:
-                             one-hot forest dispatch + level-bounded node
-                             pointer chase unrolled to ``max_depth`` +
-                             majority/mean vote, all in one kernel over the
-                             stacked forest node tables (the pForest/Planter
-                             match-action pipeline)
+                             multi-forest tree-ensemble traversal, two
+                             lowerings of one oracle (``FOREST_VARIANTS``):
+                             ``"chase"`` — one-hot forest dispatch +
+                             level-bounded node pointer chase unrolled to
+                             ``max_depth`` + majority/mean vote; ``"range"``
+                             — the pForest range-table form (parallel
+                             threshold compares + leaf-mask AND-reduce,
+                             exit leaf = lowest set bit), both in one
+                             kernel over the stacked forest tables
+  * ``fused_serve``        — the device-resident fused serving program:
+                             ``serve_lanes`` (the lane-dispatch core both
+                             engine surfaces share), ``spec_take`` (the
+                             feature-spec gather as an in-program int32
+                             take) and ``serve_raw`` (flow-update →
+                             spec-take → lanes → egress encode in ONE
+                             dispatch — the cold-path tentpole)
   * ``flow_update``        — (module ``flow_update``) stateful per-flow
                              register update + feature emit for the flow
                              engine (``repro.flow``): sequential scatter
@@ -35,10 +45,11 @@ has a pure-Python scalar oracle); `ops.py` wrappers dispatch by platform
 """
 
 from . import ops, ref, wkv_scan
-from .ops import (KERNEL_VARIANTS, fixedpoint_matmul, flow_update,
-                  forest_traverse, fused_mlp, taylor_activation)
+from .ops import (FOREST_VARIANTS, KERNEL_VARIANTS, fixedpoint_matmul,
+                  flow_update, forest_traverse, fused_mlp, taylor_activation)
 from .wkv_scan import wkv_scan_pallas
 
 __all__ = ["ops", "ref", "wkv_scan", "fixedpoint_matmul",
            "taylor_activation", "fused_mlp", "forest_traverse",
-           "flow_update", "wkv_scan_pallas", "KERNEL_VARIANTS"]
+           "flow_update", "wkv_scan_pallas", "KERNEL_VARIANTS",
+           "FOREST_VARIANTS"]

@@ -46,7 +46,22 @@ from jax.experimental import pallas as pl
 
 from .ref import FOREST_CLASSIFY
 
-__all__ = ["forest_traverse_pallas", "FB"]
+__all__ = ["forest_traverse_pallas", "forest_range_pallas", "FB",
+           "FOREST_VARIANTS"]
+
+# Traversal variants of the forest lane:
+#   * "chase" — the PR-3 level-bounded pointer chase (kernel below): per
+#     step, the current node's fields are masked row reductions and the
+#     child select is one ``where`` — work scales with *visited* nodes
+#     (depth per tree) but the steps are serially dependent.
+#   * "range" — the pForest range-table lowering (``repro.forest.ranges``):
+#     every range entry's ``x[feat] <= thresh`` comparison evaluates at
+#     once, surviving-leaf masks of failed comparisons AND-reduce, and the
+#     exit leaf is the lowest set bit — work scales with *all* internal
+#     nodes, but there is no sequential dependency chain, which is the
+#     right trade on a wide vector unit (the chase stays the measured CPU
+#     default; see ops.forest_traverse).
+FOREST_VARIANTS = ("chase", "range")
 
 # Batch-tile rows per grid step.  The traversal working set per tile is the
 # gathered tree table (bb, 5·N) plus a handful of (bb, 1) lanes — VMEM-tiny
@@ -149,3 +164,108 @@ def forest_traverse_pallas(x_q: jax.Array, slot: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n_batch, width), jnp.int32),
         interpret=interpret,
     )(x_q, slot, nodes_t, tree_on_t, mode)
+
+
+def _range_kernel(x_ref, slot_ref, rng_ref, on_ref, mode_ref, o_ref, *,
+                  n_trees: int, n_entries: int, n_leaves: int, frac: int):
+    """Range-table traversal: per tree, one one-hot dot hands every packet
+    its own forest's range rows (feat | thresh | mask | payload, field-major
+    columns), then the whole tree evaluates as ``n_entries`` parallel
+    compares + a leaf-mask AND-reduce — no pointer chase, no per-step
+    serial dependency (the P4 analogue is a ternary-match range table)."""
+    x = x_ref[...]        # (bb, W) int32 feature codes
+    slot = slot_ref[...]  # (bb, 1) int32, pre-clamped to [0, F)
+    bb, width = x.shape
+    n_forests = mode_ref.shape[0]
+
+    f_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, n_forests), 1)
+    onehot_f = (slot == f_iota).astype(jnp.int32)  # (bb, F)
+    mode_p = jax.lax.dot_general(onehot_f, mode_ref[...],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)  # (bb, 1)
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, width), 1)
+    one_q = jnp.int32(1 << frac)
+    all_ones = jnp.uint32(0xFFFFFFFF)
+
+    acc = jnp.zeros((bb, width), jnp.int32)
+    for t in range(n_trees):  # static: max_trees is a synthesis-time bound
+        tbl = jax.lax.dot_general(onehot_f, rng_ref[t],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        feat_t = tbl[:, 0 * n_entries: 1 * n_entries]
+        th_t = tbl[:, 1 * n_entries: 2 * n_entries]
+        mask_t = tbl[:, 2 * n_entries: 3 * n_entries].astype(jnp.uint32)
+        pay_t = tbl[:, 3 * n_entries: 3 * n_entries + n_leaves]
+        on = jax.lax.dot_general(onehot_f, on_ref[t],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32) > 0
+        word = jnp.full((bb, 1), 0xFFFFFFFF, jnp.uint32)
+        for i in range(n_entries):  # static: all entries, no serial chain
+            fe = feat_t[:, i: i + 1]
+            xv = jnp.sum(jnp.where(w_iota == fe, x, 0), axis=1,
+                         keepdims=True)
+            cond = xv <= th_t[:, i: i + 1]
+            word = word & jnp.where(cond, all_ones, mask_t[:, i: i + 1])
+        iso = word & (~word + jnp.uint32(1))       # lowest set bit
+        below = iso - jnp.uint32(1)                # ones strictly below it
+        l_iota = jax.lax.broadcasted_iota(jnp.uint32, (bb, n_leaves), 1)
+        bits = ((below >> l_iota) & jnp.uint32(1)).astype(jnp.int32)
+        leaf_idx = jnp.sum(bits, axis=1, keepdims=True)  # popcount(below)
+        li32 = jax.lax.broadcasted_iota(jnp.int32, (bb, n_leaves), 1)
+        leaf = jnp.sum(jnp.where(li32 == leaf_idx, pay_t, 0), axis=1,
+                       keepdims=True)              # (bb, 1)
+        vote_cls = jnp.where(w_iota == leaf, one_q, 0)
+        vote_reg = jnp.where(w_iota == 0, leaf, 0)
+        contrib = jnp.where(mode_p == FOREST_CLASSIFY, vote_cls, vote_reg)
+        acc = acc + jnp.where(on, contrib, 0)
+
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_entries", "n_leaves", "frac",
+                                             "bb", "interpret"))
+def forest_range_pallas(x_q: jax.Array, slot: jax.Array, rng_t: jax.Array,
+                        tree_on_t: jax.Array, mode: jax.Array, *,
+                        n_entries: int, n_leaves: int, frac: int,
+                        bb: int = FB, interpret: bool = False) -> jax.Array:
+    """Fused multi-forest **range-table** traversal on integer codes
+    (``variant="range"``).
+
+    x_q        (B, W)              int32 feature codes at ``frac`` bits
+    slot       (B, 1)              int32 forest slot per packet, in [0, F)
+    rng_t      (T, F, 3·NI + L)    int32 range rows, tree-major, field-major
+                                   columns feat | thresh | mask | payload
+                                   (``ops.forest_traverse`` preps this from
+                                   the control plane's RangeTables)
+    tree_on_t  (T, F, 1)           int32 tree-exists flags
+    mode       (F, 1)              int32 vote mode
+    Returns    (B, W)              int32 output codes.
+
+    ``B % bb == 0`` (the ops.py wrapper pads).  ``n_entries``/``n_leaves``
+    are the static table extents — synthesis-time properties derived from
+    the control plane's ``max_nodes``.
+    """
+    n_batch, width = x_q.shape
+    n_trees, n_forests, ncols = rng_t.shape
+    if ncols != 3 * n_entries + n_leaves:
+        raise ValueError(f"rng_t columns {ncols} != 3*{n_entries} + "
+                         f"{n_leaves}")
+    if n_batch % bb:
+        raise ValueError(f"batch {n_batch} not a multiple of tile {bb}; "
+                         "use ops.forest_traverse, which pads")
+    grid = (n_batch // bb,)
+    return pl.pallas_call(
+        functools.partial(_range_kernel, n_trees=n_trees,
+                          n_entries=n_entries, n_leaves=n_leaves, frac=frac),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, width), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n_trees, n_forests, ncols), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_trees, n_forests, 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_forests, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_batch, width), jnp.int32),
+        interpret=interpret,
+    )(x_q, slot, rng_t, tree_on_t, mode)

@@ -25,11 +25,13 @@ from . import ref
 from .fixedpoint_matmul import BK, BM, BN, fixedpoint_matmul_pallas
 from .fixedpoint_mlp import BB, KERNEL_VARIANTS, fixedpoint_mlp_pallas
 from .flow_update import flow_update_gather, flow_update_pallas
-from .forest_traversal import FB, forest_traverse_pallas
+from .forest_traversal import (FB, FOREST_VARIANTS, forest_range_pallas,
+                               forest_traverse_pallas)
 from .taylor_activation import BC, BR, taylor_activation_pallas
 
 __all__ = ["fixedpoint_matmul", "taylor_activation", "fused_mlp",
-           "forest_traverse", "flow_update", "on_tpu", "KERNEL_VARIANTS"]
+           "forest_traverse", "flow_update", "on_tpu", "KERNEL_VARIANTS",
+           "FOREST_VARIANTS"]
 
 
 def on_tpu() -> bool:
@@ -138,7 +140,9 @@ def fused_mlp(x_q: jax.Array, slot: jax.Array, w: jax.Array, b: jax.Array,
 
 def forest_traverse(x_q: jax.Array, slot: jax.Array, nodes: jax.Array,
                     tree_on: jax.Array, mode: jax.Array, *, max_depth: int,
-                    frac: int, backend: str = "auto") -> jax.Array:
+                    frac: int, backend: str = "auto",
+                    variant: str = "chase",
+                    ranges=None) -> jax.Array:
     """Fused multi-forest traversal over *stacked* control-plane node tables.
 
     Layout prep lives here so callers hand over tables exactly as the
@@ -156,12 +160,55 @@ def forest_traverse(x_q: jax.Array, slot: jax.Array, nodes: jax.Array,
     mirrors ``fused_mlp``: Pallas on TPU (interpreted when forced off-TPU),
     the gathered batched lowering on CPU, the masked jnp oracle for
     ``backend="ref"``.
+
+    ``variant`` selects the traversal lowering (``FOREST_VARIANTS``):
+    ``"chase"`` is the level-bounded pointer chase over ``nodes``;
+    ``"range"`` is the pForest range-table form (parallel compares +
+    leaf-mask AND-reduce) over ``ranges`` — a ``(feat, thresh, lmask,
+    payload)`` tuple or a ``control_plane.RangeTables`` (the dense
+    ``nodes`` argument is then only read for its shape).  Both variants are
+    bit-exact against the same scalar oracle ``ref.forest_traverse_numpy``;
+    the chase does less total work (visited nodes only) and stays the
+    measured CPU default, the range form has no serial step dependency —
+    the vector-unit trade (see forest_traversal.FOREST_VARIANTS).
     """
     if backend not in ("auto", "pallas", "ref"):
         raise ValueError(f"unknown backend: {backend!r}")
+    if variant not in FOREST_VARIANTS:
+        raise ValueError(f"unknown forest variant: {variant!r}")
     n_batch, _ = x_q.shape
     n_forests, n_trees, n_nodes, _ = nodes.shape
     use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    if variant == "range":
+        if ranges is None:
+            raise ValueError("variant='range' needs the compiled range "
+                             "tables (ControlPlane.range_tables())")
+        feat, thresh, lmask, payload = (
+            (ranges.feat, ranges.thresh, ranges.lmask, ranges.payload)
+            if hasattr(ranges, "lmask") else ranges)
+        if backend == "auto" and not on_tpu():
+            return ref.forest_range_gather_ref(
+                x_q, slot.astype(jnp.int32), feat, thresh, lmask, payload,
+                tree_on, mode, frac=frac)
+        ni = feat.shape[-1]
+        nl = payload.shape[-1]
+        # tree-major field-major columns: feat | thresh | mask | payload
+        mask_i32 = jax.lax.bitcast_convert_type(lmask, jnp.int32)
+        rng_t = jnp.concatenate(
+            [jnp.transpose(jnp.asarray(a, jnp.int32), (1, 0, 2))
+             for a in (feat, thresh, mask_i32, payload)], axis=2)
+        on_t = jnp.transpose(tree_on, (1, 0)).astype(jnp.int32)[:, :, None]
+        mode2 = mode.astype(jnp.int32)[:, None]
+        slot2 = slot.astype(jnp.int32)[:, None]
+        if not use_pallas:  # backend == "ref": the literal kernel oracle
+            return ref.forest_range_ref(x_q, slot2, rng_t, on_t, mode2,
+                                        n_entries=ni, n_leaves=nl, frac=frac)
+        xp = _pad_to(x_q, (FB, 1))
+        sp = _pad_to(slot2, (FB, 1))
+        out = forest_range_pallas(xp, sp, rng_t, on_t, mode2, n_entries=ni,
+                                  n_leaves=nl, frac=frac,
+                                  interpret=not on_tpu())
+        return out[:n_batch]
     if backend == "auto" and not on_tpu():
         # CPU lowering: the per-packet table gather + vectorized pointer
         # chase (take_along_axis) vectorizes on XLA:CPU; the masked form's

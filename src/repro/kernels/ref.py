@@ -10,7 +10,8 @@ import numpy as np
 __all__ = ["fixedpoint_matmul_ref", "taylor_activation_ref", "fused_mlp_ref",
            "fused_mlp_gather_ref", "rounding_rshift", "lane_clamp",
            "wkv_scan_ref", "forest_traverse_numpy", "forest_traverse_ref",
-           "forest_traverse_gather_ref", "FOREST_REGRESS", "FOREST_CLASSIFY",
+           "forest_traverse_gather_ref", "forest_range_ref",
+           "forest_range_gather_ref", "FOREST_REGRESS", "FOREST_CLASSIFY",
            "flow_update_numpy", "rounding_rshift_np", "sat_shl_np",
            "N_FLOW_REGISTERS", "N_FLOW_FEATURES", "FLOW_CODE_MAX",
            "REG_PKT_COUNT", "REG_BYTE_COUNT", "REG_LAST_TS", "REG_FIRST_TS",
@@ -346,6 +347,122 @@ def forest_traverse_gather_ref(x_q: jax.Array, slot: jax.Array,
     reg = jnp.sum(jnp.where(on, leaf, 0), axis=1)        # (B,)
     reg_out = jnp.where(lane[0] == 0, reg[:, None], 0)
     return jnp.where(md == FOREST_CLASSIFY, votes, reg_out)
+
+
+def _forest_vote(leaf: jax.Array, on: jax.Array, md: jax.Array, width: int,
+                 frac: int) -> jax.Array:
+    """Shared vote accumulation over per-tree exit leaves: classify forests
+    one-hot their leaf's class lane with ``1 << frac`` per live tree,
+    regress forests sum pre-divided leaf codes into lane 0.  ``leaf``/``on``
+    are (B, T); ``md`` is (B, 1)."""
+    one_q = jnp.int32(1 << frac)
+    lane = jnp.arange(width, dtype=jnp.int32)[None, None, :]
+    votes = jnp.sum(jnp.where((leaf[:, :, None] == lane) & on[:, :, None],
+                              one_q, 0), axis=1)         # (B, W)
+    reg = jnp.sum(jnp.where(on, leaf, 0), axis=1)        # (B,)
+    reg_out = jnp.where(lane[0] == 0, reg[:, None], 0)
+    return jnp.where(md == FOREST_CLASSIFY, votes, reg_out)
+
+
+def forest_range_gather_ref(x_q: jax.Array, slot: jax.Array,
+                            feat: jax.Array, thresh: jax.Array,
+                            lmask: jax.Array, payload: jax.Array,
+                            tree_on: jax.Array, mode: jax.Array, *,
+                            frac: int) -> jax.Array:
+    """CPU realization of the **range-table** forest lane (``variant=
+    "range"`` — the pForest ternary-match lowering compiled by
+    ``repro.forest.ranges``).
+
+    Per tree, every range entry's comparison ``x[feat] <= thresh`` is
+    evaluated at once (pure vectorized compare — no step-by-step gather
+    chain), the surviving-leaf masks of the *failed* comparisons AND-reduce
+    into one word, and the exit leaf is the lowest set bit (in-order leaf
+    numbering).  Bit-exact against ``forest_traverse_numpy`` on every
+    well-formed tree: the comparisons are the identical quantized-code
+    compares the pointer chase performs, just evaluated in parallel.
+
+    Tables in control-plane layout: feat/thresh (F, T, NI) int32, lmask
+    (F, T, NI) uint32, payload (F, T, L) int32, tree_on (F, T), mode (F,);
+    slot (B,) int32.  Returns (B, W) int32.
+    """
+    n_batch, width = x_q.shape
+    fg = feat[slot]                      # (B, T, NI)
+    tg = thresh[slot]                    # (B, T, NI)
+    mg = lmask[slot]                     # (B, T, NI) uint32
+    n_trees, ni = fg.shape[1], fg.shape[2]
+    xv = jnp.take_along_axis(
+        x_q[:, None, :], fg.reshape(n_batch, 1, n_trees * ni),
+        axis=2).reshape(fg.shape)
+    cond = xv <= tg
+    terms = jnp.where(cond, jnp.uint32(0xFFFFFFFF), mg)
+    word = terms[:, :, 0]
+    for i in range(1, ni):               # static NI: unrolled AND-reduce
+        word = word & terms[:, :, i]
+    iso = word & (~word + jnp.uint32(1))            # lowest set bit
+    leaf_idx = jax.lax.population_count(iso - jnp.uint32(1)) \
+        .astype(jnp.int32)                          # (B, T)
+    leaf = jnp.take_along_axis(payload[slot], leaf_idx[:, :, None],
+                               axis=2)[..., 0]      # (B, T)
+    on = tree_on[slot] > 0
+    md = mode[slot][:, None]
+    return _forest_vote(leaf, on, md, width, frac)
+
+
+def forest_range_ref(x_q: jax.Array, slot: jax.Array, rng_t: jax.Array,
+                     tree_on_t: jax.Array, mode: jax.Array, *,
+                     n_entries: int, n_leaves: int, frac: int) -> jax.Array:
+    """Masked (one-hot) jnp oracle for the Pallas range kernel — the literal
+    kernel formulation, operand for operand (the ``backend="ref"`` path of
+    ``variant="range"``, exactly like :func:`forest_traverse_ref` for the
+    chase kernel).
+
+    Kernel layout (see ``ops.forest_traverse`` for the prep): rng_t
+    ``(T, F, 3·NI + L)`` int32, tree-major with field-major columns
+    ``feat | thresh | leaf-mask (uint32 bitcast) | payload``; tree_on_t
+    (T, F, 1); mode (F, 1); slot (B, 1).  Returns (B, W) int32.
+    """
+    n_batch, width = x_q.shape
+    n_trees, n_forests, _ = rng_t.shape
+    f_iota = jnp.arange(n_forests, dtype=jnp.int32)[None, :]
+    onehot_f = (slot == f_iota).astype(jnp.int32)  # (B, F)
+    mode_p = jax.lax.dot_general(onehot_f, mode, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+    w_iota = jnp.arange(width, dtype=jnp.int32)[None, :]
+    acc = jnp.zeros((n_batch, width), jnp.int32)
+    for t in range(n_trees):
+        tbl = jax.lax.dot_general(onehot_f, rng_t[t],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        feat_t = tbl[:, 0 * n_entries: 1 * n_entries]
+        th_t = tbl[:, 1 * n_entries: 2 * n_entries]
+        mask_t = tbl[:, 2 * n_entries: 3 * n_entries].astype(jnp.uint32)
+        pay_t = tbl[:, 3 * n_entries: 3 * n_entries + n_leaves]
+        on = jax.lax.dot_general(onehot_f, tree_on_t[t],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32) > 0
+        word = jnp.full((n_batch, 1), 0xFFFFFFFF, jnp.uint32)
+        for i in range(n_entries):
+            fe = feat_t[:, i: i + 1]
+            xv = jnp.sum(jnp.where(w_iota == fe, x_q, 0), axis=1,
+                         keepdims=True)
+            cond = xv <= th_t[:, i: i + 1]
+            word = word & jnp.where(cond, jnp.uint32(0xFFFFFFFF),
+                                    mask_t[:, i: i + 1])
+        iso = word & (~word + jnp.uint32(1))
+        bit = (iso - jnp.uint32(1)).astype(jnp.uint32)
+        l_iota = jnp.arange(n_leaves, dtype=jnp.uint32)[None, :]
+        is_leaf = ((bit >> l_iota) & jnp.uint32(1)).astype(jnp.int32)
+        # popcount(iso - 1) as a bit-test dot: leaf_idx = Σ_l bit[l]
+        leaf_idx = jnp.sum(is_leaf, axis=1, keepdims=True)  # (B, 1)
+        l32 = jnp.arange(n_leaves, dtype=jnp.int32)[None, :]
+        leaf = jnp.sum(jnp.where(l32 == leaf_idx, pay_t, 0), axis=1,
+                       keepdims=True)                       # (B, 1)
+        one_q = jnp.int32(1 << frac)
+        vote_cls = jnp.where(w_iota == leaf, one_q, 0)
+        vote_reg = jnp.where(w_iota == 0, leaf, 0)
+        contrib = jnp.where(mode_p == FOREST_CLASSIFY, vote_cls, vote_reg)
+        acc = acc + jnp.where(on, contrib, 0)
+    return acc
 
 
 # ---------------------------------------------------------------------------

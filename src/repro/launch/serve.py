@@ -73,11 +73,13 @@ class PacketServer:
                  max_width: int = 32, frac_bits: int = 8,
                  weight_bits: int = 16, taylor_order: int = 3,
                  dispatch: str = "fused", kernel_variant: str = "int16",
+                 forest_variant: str = "auto",
                  max_inflight: int = 8, ingress_batch: int = 2048,
                  use_cache: bool = True,
                  max_forests: int = 8, max_trees: int = 16,
                  max_nodes: int = 64, max_tree_depth: int = 6,
                  flush_after: Optional[float] = None,
+                 adaptive_batch: bool = False,
                  flow_capacity_pow2: int = 14,
                  flow_idle_timeout: Optional[int] = None,
                  clock=None):
@@ -93,14 +95,16 @@ class PacketServer:
                                       max_features=max_width,
                                       taylor_order=taylor_order,
                                       dispatch=dispatch,
-                                      kernel_variant=kernel_variant)
+                                      kernel_variant=kernel_variant,
+                                      forest_variant=forest_variant)
         # the pipeline pools max_inflight+2 staging buffers of
-        # ingress_batch x wire_bytes each (two open family batches + the
+        # ingress_batch feature rows each (two open family batches + the
         # in-flight window) — the same window the batch API gets
         self.ingress = IngressPipeline(
             self.engine, batch_size=ingress_batch,
             max_inflight=max_inflight, use_cache=use_cache,
-            flush_after=flush_after, clock=clock)
+            flush_after=flush_after, adaptive_batch=adaptive_batch,
+            clock=clock)
         self.max_inflight = max_inflight
         self._inflight: deque = deque()
         self._window_t0: Optional[float] = None

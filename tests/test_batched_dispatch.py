@@ -53,9 +53,13 @@ class TestFusedKernel:
         outs = {b: np.asarray(fused_mlp(x, slot, t.w, t.b, t.act, t.layer_on,
                                         backend=b, **kw))
                 for b in ("ref", "pallas", "auto")}
-        eng = DataPlaneEngine(cp, max_features=width, dispatch="gather")
-        gathered = np.asarray(
-            jax.jit(eng._forward_gathered)(x, slot, t))
+        # the seed per-packet-gather formulation (what dispatch="gather"
+        # routes through serve_lanes) — straight from kernels.ref, the one
+        # place the integer semantics live
+        from repro.kernels.ref import fused_mlp_gather_ref
+        gathered = np.asarray(jax.jit(
+            lambda x, s: fused_mlp_gather_ref(
+                x, s, t.w, t.b, t.act, t.layer_on, **kw))(x, slot))
 
         np.testing.assert_array_equal(outs["pallas"], outs["ref"])
         np.testing.assert_array_equal(outs["auto"], outs["ref"])

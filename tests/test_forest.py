@@ -565,23 +565,23 @@ class TestForestServing:
         pipe, eng = srv.ingress, srv.engine
         f2, _, _ = _train_small(np.random.default_rng(5), "classify",
                                 n_trees=3)
-        real_run = eng.run
+        real_run = eng.run_features
         fired = {"n": 0}
 
-        def racing_run(pkts, **kw):
+        def racing_run(x0, mids, **kw):
             # the writer lands after the pipeline sampled cp.version for
-            # its lane decision but before run() snapshots the tables
+            # its lane decision but before the run snapshots the tables
             if fired["n"] == 0 and kw.get("lanes") == "forest":
                 fired["n"] += 1
                 srv.install_forest(2, f2)
-            return real_run(pkts, **kw)
+            return real_run(x0, mids, **kw)
 
-        eng.run = racing_run
+        eng.run_features = racing_run
         try:
             srv.submit_packets(wire)  # fills + dispatches the forest batch
             got = srv.drain_packets()
         finally:
-            eng.run = real_run
+            eng.run_features = real_run
         assert fired["n"] == 1
         assert pipe.stats["lane_batches"]["both"] >= 1  # redispatched
         want = np.asarray(srv.process(wire))[:, : pipe.out_bytes]
@@ -606,3 +606,171 @@ class TestForestServing:
         got = np.stack(srv.drain_packets())
         want = np.asarray(srv.process(base))[:, : srv.ingress.out_bytes]
         np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# range-table variant (PR 5): the pForest ternary-match lowering
+# ---------------------------------------------------------------------------
+
+
+def _ranges_of(nodes, tree_on, depth):
+    """Compile per-forest range tables and pad to common static extents —
+    the same layout ControlPlane.range_tables() publishes."""
+    from repro.forest.ranges import pack_forest_ranges
+    packs = [pack_forest_ranges(nodes[f], tree_on[f], max_depth=depth)
+             for f in range(nodes.shape[0])]
+    ni = max(p.feat.shape[1] for p in packs)
+    nl = max(p.payload.shape[1] for p in packs)
+    n_forests, n_trees = nodes.shape[0], nodes.shape[1]
+    feat = np.zeros((n_forests, n_trees, ni), np.int32)
+    th = np.full((n_forests, n_trees, ni), np.iinfo(np.int32).max, np.int32)
+    lm = np.zeros((n_forests, n_trees, ni), np.uint32)
+    pay = np.zeros((n_forests, n_trees, nl), np.int32)
+    for f, p in enumerate(packs):
+        feat[f, :, : p.feat.shape[1]] = p.feat
+        th[f, :, : p.thresh.shape[1]] = p.thresh
+        lm[f, :, : p.lmask.shape[1]] = p.lmask
+        pay[f, :, : p.payload.shape[1]] = p.payload
+    return feat, th, lm, pay
+
+
+class TestRangeVariant:
+    """The range-table forest lane must be bit-exact against the *same*
+    scalar oracle as the pointer chase, on every backend — the three-way
+    contract (range vs chase vs ``ref.forest_traverse_numpy``)."""
+
+    def _check_three_way(self, x, slot, nodes, tree_on, mode, depth):
+        want = ref.forest_traverse_numpy(x, slot, nodes, tree_on, mode,
+                                         max_depth=depth, frac=FRAC)
+        ranges = _ranges_of(nodes, tree_on, depth)
+        xj = jnp.asarray(x)
+        sj = jnp.asarray(slot)
+        nj = jnp.asarray(nodes)
+        tj = jnp.asarray(tree_on)
+        mj = jnp.asarray(mode)
+        chase = np.asarray(ops.forest_traverse(
+            xj, sj, nj, tj, mj, max_depth=depth, frac=FRAC, backend="auto",
+            variant="chase"))
+        np.testing.assert_array_equal(chase, want)
+        for backend in ("auto", "ref", "pallas"):
+            got = np.asarray(ops.forest_traverse(
+                xj, sj, nj, tj, mj, max_depth=depth, frac=FRAC,
+                backend=backend, variant="range", ranges=ranges))
+            np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10 ** 6),
+           n_forests=st.integers(min_value=1, max_value=4),
+           depth=st.integers(min_value=1, max_value=5))
+    def test_property_three_way_random_tables(self, seed, n_forests, depth):
+        """Arbitrary well-formed node tables, arbitrary packed rows: the
+        range compilation reproduces both the chase and the scalar oracle
+        bit for bit on every backend."""
+        rng = np.random.default_rng(seed)
+        nodes, tree_on, mode = _random_forest_tables(rng, n_forests, WIDTH,
+                                                     depth)
+        n = int(rng.integers(1, 40))
+        x = rng.integers(-1000, 1000, (n, WIDTH)).astype(np.int32)
+        slot = rng.integers(0, n_forests, n).astype(np.int32)
+        self._check_three_way(x, slot, nodes, tree_on, mode, depth)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10 ** 6),
+           task=st.sampled_from(["classify", "regress"]))
+    def test_property_three_way_trained_forests(self, seed, task):
+        rng = np.random.default_rng(seed)
+        f, _, _ = _train_small(rng, task, n_trees=4)
+        packed = pack_forest(f, frac_bits=FRAC)
+        n = int(rng.integers(1, 32))
+        x = rng.integers(-800, 800, (n, WIDTH)).astype(np.int32)
+        slot = np.zeros(n, np.int32)
+        self._check_three_way(x, slot, packed.nodes[None],
+                              packed.tree_on[None],
+                              np.asarray([packed.mode], np.int32),
+                              max(packed.depth, 1))
+
+    def test_saturating_thresholds(self):
+        """INT32_MAX thresholds (comparison always holds → always left) and
+        INT32_MIN (holds only at exactly INT32_MIN) must agree between the
+        chase and the range masks — the padding-entry convention must not
+        blur with real saturated entries."""
+        rng = np.random.default_rng(7)
+        nodes, tree_on, mode = _random_forest_tables(rng, 2, WIDTH, 3)
+        lo, hi = np.iinfo(np.int32).min, np.iinfo(np.int32).max
+        for f in range(nodes.shape[0]):
+            for t in range(nodes.shape[1]):
+                internal = nodes[f, t, :, 2] != np.arange(nodes.shape[2])
+                idx = np.nonzero(internal)[0]
+                for k, i in enumerate(idx):
+                    nodes[f, t, i, 1] = hi if k % 2 == 0 else lo
+        x = np.concatenate([
+            rng.integers(-1000, 1000, (20, WIDTH)).astype(np.int32),
+            np.full((2, WIDTH), lo, np.int32),
+            np.full((2, WIDTH), hi, np.int32)])
+        slot = rng.integers(0, 2, x.shape[0]).astype(np.int32)
+        self._check_three_way(x, slot, nodes, tree_on, mode, 3)
+
+    def test_depth_one_stumps(self):
+        """Depth-1 stumps: one range entry per tree, two leaves."""
+        rng = np.random.default_rng(8)
+        n_trees = 3
+        nodes = np.zeros((1, n_trees, 3, 5), np.int32)
+        for t in range(n_trees):
+            nodes[0, t, 0] = (int(rng.integers(0, WIDTH)),
+                              int(rng.integers(-500, 500)), 1, 2, 0)
+            nodes[0, t, 1] = (0, 0, 1, 1, int(rng.integers(-900, 900)))
+            nodes[0, t, 2] = (0, 0, 2, 2, int(rng.integers(-900, 900)))
+        tree_on = np.ones((1, n_trees), np.int32)
+        mode = np.asarray([FOREST_REGRESS], np.int32)
+        x = rng.integers(-1000, 1000, (30, WIDTH)).astype(np.int32)
+        slot = np.zeros(30, np.int32)
+        self._check_three_way(x, slot, nodes, tree_on, mode, 1)
+
+    def test_malformed_tree_rejected_at_install(self):
+        """The range compiler's structural walk rejects a cyclic 'tree' the
+        dense-table bounds checks cannot see."""
+        from repro.forest import PackedForest
+        cp = ControlPlane(max_models=2, max_width=WIDTH, max_forests=2,
+                          max_trees=2, max_nodes=7, max_tree_depth=3)
+        assert cp.range_available
+        nodes = np.zeros((3, 5), np.int32)
+        nodes[0] = (0, 10, 1, 2, 0)
+        nodes[1] = (1, 20, 0, 2, 0)   # cycles back to the root
+        nodes[2] = (0, 0, 2, 2, 5)
+        bad = PackedForest(nodes=nodes[None], tree_on=np.ones(1, np.int32),
+                           mode=FOREST_REGRESS, out_dim=1, depth=2,
+                           frac_bits=FRAC)
+        with pytest.raises(ValueError, match="tree"):
+            cp.install_forest(9, bad)
+
+    def test_engine_range_variant_end_to_end(self):
+        """A range-variant engine serves the identical egress bytes as the
+        chase engine on mixed MLP+forest traffic, and forest hot-swaps stay
+        retrace-free (RangeTables ride the same generation swap)."""
+        rng = np.random.default_rng(9)
+
+        def build(variant):
+            cp = ControlPlane(max_models=8, max_layers=2, max_width=WIDTH,
+                              frac_bits=FRAC, max_forests=2, max_trees=4,
+                              max_nodes=31, max_tree_depth=4)
+            _install_mlp(cp, np.random.default_rng(5), 1)
+            f, _, _ = _train_small(np.random.default_rng(6), "classify",
+                                   n_trees=3)
+            cp.install_forest(2, f)
+            return cp, DataPlaneEngine(cp, max_features=WIDTH,
+                                       forest_variant=variant)
+
+        cp_c, eng_c = build("chase")
+        cp_r, eng_r = build("range")
+        wire, _ = _wire(rng, 64, rng.choice([1, 2], 64))
+        want = np.asarray(eng_c.process(wire))
+        got = np.asarray(eng_r.process(wire))
+        np.testing.assert_array_equal(got, want)
+        traces = eng_r.trace_count
+        f2, _, _ = _train_small(np.random.default_rng(7), "classify",
+                                n_trees=3)
+        cp_r.install_forest(2, f2)
+        got2 = np.asarray(eng_r.process(wire))
+        assert eng_r.trace_count == traces  # hot-swap: zero retraces
+        cp_c.install_forest(2, f2)
+        np.testing.assert_array_equal(got2, np.asarray(eng_c.process(wire)))

@@ -150,6 +150,23 @@ class TestResultCache:
         assert hm.all()
         np.testing.assert_array_equal(got, vals)
 
+    def test_duplicate_keys_with_assume_unique_refresh_not_double_insert(self):
+        """assume_unique is an optimization hint, not a correctness
+        precondition: duplicate keys slipping past a best-effort upstream
+        dedup (e.g. the pending window dropped a row) must resolve as
+        in-place refreshes — never claim a second slot for the same key."""
+        rng = np.random.default_rng(9)
+        words, vals, mids = self._kv(rng, 10)
+        dup_words = np.concatenate([words, words])
+        dup_vals = np.concatenate([vals, vals])
+        dup_mids = np.concatenate([mids, mids])
+        c = ResultCache(3, 16)
+        c.insert(dup_words, dup_vals, dup_mids, 1, assume_unique=True)
+        assert len(c) == 10
+        hm, got = c.lookup(words, 1)
+        assert hm.all()
+        np.testing.assert_array_equal(got, vals)
+
     def test_tombstone_slots_reclaimed_under_model_churn(self):
         """The PR-3 satellite regression test: a long-running serve loop
         that keeps installing and dropping models must not degrade toward
