@@ -61,7 +61,8 @@ import time
 # and booleans, not absolute pkt/s.)
 os.environ.setdefault(
     "XLA_FLAGS",
-    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1 "
+    "--xla_force_host_platform_device_count=4")
 
 import numpy as np
 
@@ -92,7 +93,7 @@ DUP_FRACTION = 0.5    # fraction of trace packets that repeat an earlier one
 # bool is gated by CI, and on noisy shared runners the adjacent-row
 # separation is exactly what the retries exist to establish.
 _REDUCED_OVERRIDES = dict(BATCH=4096, REPS=2, SWEEPS=1, RETRY_SWEEPS=5,
-                          LOOPS=2, TRACE_TOTAL=8192)
+                          LOOPS=2, TRACE_TOTAL=8192, SHARD_TRACE=16384)
 
 
 def _min_time(fn, reps: int | None = None) -> float:
@@ -804,6 +805,191 @@ def _flow_raw_comparison(rng, verbose: bool):
     return res
 
 
+# Sharded-fabric section (PR-6 tentpole): RSS-dispatched N-shard serving.
+SHARD_COUNTS = (1, 2, 4)
+SHARD_INGRESS_BATCH = 1024  # per shard — small enough that a 4-way split
+                            # of the trace still fills mostly-whole batches
+SHARD_TRACE = 65536  # sharded-section trace length: long enough that the
+                     # one padded partial batch closing each shard's RSS
+                     # slice (≤ ingress_batch−1 dead rows) stays a few
+                     # percent of the slice even at 4 shards — otherwise
+                     # the efficiency number measures tail padding, not
+                     # the sharding layer
+SHARD_FLOWS = 1024
+SHARD_SCALING_FLOOR = 0.7   # acceptance: >= 0.7x linear at 4 shards
+
+
+def _sharded_comparison(rng, verbose: bool):
+    """PR-6 tentpole: the N-shard serving fabric (``ShardedPacketServer``)
+    on the raw-packet path — RSS 5-tuple dispatch, per-shard flow tables
+    (flow affinity, no cross-shard coherence), one global count-min
+    sketch, shared control plane as the generation fence.
+
+    **Methodology — critical-path estimator.**  This container exposes a
+    single CPU core, so N shards cannot execute concurrently here; timing
+    the fabric's serialized loop would show ~1x by construction and say
+    nothing.  Instead each shard's RSS slice is timed *independently* and
+    the fabric window is scored as the slowest shard's time — the
+    wall-clock a truly parallel N-core/N-device host would observe for the
+    same dispatch (modulo shared-memory effects).  The estimator therefore
+    measures exactly what the sharding layer controls: RSS load balance
+    across shards and how well per-shard fixed costs (parse, probe,
+    staging, padding) amortize over 1/N of the traffic.
+    ``scaling_efficiency_4 = agg_pps(4) / (4 * agg_pps(1))`` carries the
+    >= 0.7x-linear acceptance floor (full mode only).
+
+    Every configuration gets a result cache sized to hold the whole
+    converged trace (``cache_capacity_pow2`` above the trace length over
+    the cache's load limit).  Otherwise N=1 thrashes its epoch-evicting
+    cache on a working set that happens to fit each N=4 slice, and the
+    "efficiency" number reports a superlinear cache-capacity artifact
+    instead of the sharding layer's own costs (RSS skew, padding,
+    amortization).
+
+    The untimed passes pin the refactor's invariants: sharded egress is
+    bit-exact with N=1 in per-packet submission order, every flow's
+    registers live on exactly one shard, and the timed replay retraces
+    nothing on any shard.
+    """
+    from repro.data.packets import parse_raw_headers, raw_trace
+    from repro.serve import ShardedPacketServer
+
+    width = SERVE_WIDTH
+    total = SHARD_TRACE
+    spec = (2, 3, 4, 5) * (width // 4)
+
+    def build(n):
+        srv = ShardedPacketServer(
+            n_shards=n, max_models=N_MODELS, max_layers=SERVE_LAYERS,
+            max_width=width, frac_bits=8,
+            ingress_batch=SHARD_INGRESS_BATCH, max_inflight=2,
+            cache_capacity_pow2=17, flow_capacity_pow2=13)
+        _install_serving_zoo(srv)
+        for mid in range(1, N_MODELS + 1):
+            srv.install_feature_spec(mid, spec)
+        return srv
+
+    trng = np.random.default_rng(21)
+    raw = raw_trace(trng, total, n_flows=SHARD_FLOWS,
+                    model_ids=tuple(range(1, N_MODELS + 1)))
+    fields = parse_raw_headers(raw)
+    n_unique_flows = np.unique(fields.key_bytes, axis=0).shape[0]
+
+    ref_rows = None
+    bitexact = flow_affinity = zero_retraces = True
+    agg, balance = {}, {}
+    for n in SHARD_COUNTS:
+        srv = build(n)
+        srv.submit_raw(raw)  # warm every shard + the bit-exactness pass
+        rows = np.stack(srv.drain_packets())
+        if ref_rows is None:
+            ref_rows = rows
+        else:
+            bitexact &= bool(np.array_equal(rows, ref_rows))
+        # flow affinity: the shard tables partition the flow set exactly
+        flow_affinity &= (sum(len(sh.flow.table) for sh in srv.shards)
+                          == n_unique_flows)
+        shard_ids = srv.dispatch_shards(raw)
+        slices = [raw[shard_ids == s] for s in range(n)]
+        balance[n] = [int(sl.shape[0]) for sl in slices]
+        per_shard_t = []
+        for s, sh in enumerate(srv.shards):
+            raw_s = slices[s]
+
+            def loop(sh=sh, raw_s=raw_s):
+                sh.pipeline.reset_tickets()
+                sh.flow.submit_raw(raw_s)
+                sh.pipeline.flush()
+
+            loop()  # converge this replay path's state before timing
+            tc0 = sh.engine.trace_count
+            t = float("inf")
+            for _ in range(SWEEPS):
+                t = min(t, _min_time(loop))
+            zero_retraces &= sh.engine.trace_count == tc0
+            per_shard_t.append(t)
+        agg[n] = total / max(per_shard_t)  # critical path = slowest shard
+        if verbose:
+            print(f"  {n} shard(s): aggregate {agg[n]:,.0f} pkt/s  "
+                  f"(critical-path est.; slice balance "
+                  f"{[f'{b / total:.0%}' for b in balance[n]]})")
+
+    eff4 = agg[4] / (4 * agg[1]) if 4 in agg and agg.get(1) else 0.0
+    res = {
+        "shard_counts": list(SHARD_COUNTS),
+        "trace_packets": total,
+        "n_flows": SHARD_FLOWS,
+        "aggregate_pps": {str(n): agg[n] for n in SHARD_COUNTS},
+        "slice_balance": {str(n): balance[n] for n in SHARD_COUNTS},
+        "scaling_efficiency_4": eff4,
+        "scaling_floor": SHARD_SCALING_FLOOR,
+        "meets_scaling_floor": bool(eff4 >= SHARD_SCALING_FLOOR),
+        "estimator": "critical_path_single_core",
+        "bitexact_vs_n1": bitexact,
+        "flow_affinity": flow_affinity,
+        "zero_retraces": zero_retraces,
+    }
+    if verbose:
+        print(f"  scaling efficiency @4      : {eff4:.2f}x linear "
+              f"(floor {SHARD_SCALING_FLOOR}: "
+              f"{'MET' if res['meets_scaling_floor'] else 'BELOW'})")
+        print(f"  bit-exact vs N=1: {bitexact}   flow affinity: "
+              f"{flow_affinity}   shard retraces: "
+              f"{0 if zero_retraces else 'NONZERO'}")
+    return res
+
+
+def _activation_lowering_note(rng, verbose: bool):
+    """Carried perf thread: the per-layer activation select inside the
+    fused MLP is now a branchless opcode-indexed ``lax.select_n`` (one
+    clamped-index 5-way select) instead of the 4-deep ``jnp.where`` chain
+    (four chained masked merges).  Both lowerings live in ``ref.py``
+    behind ``lowering=`` — bit-exact with each other by the tier-1 suite —
+    so this micro-bench can keep reporting before/after on a
+    serving-shaped operand as the PRs evolve."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.taylor import scaled_constants
+    from repro.kernels.ref import _select_activation_ref
+
+    frac = 8
+    sig = tuple(int(c) for c in scaled_constants("sigmoid", 3, frac))
+    alpha_q = int(round(0.01 * (1 << frac)))
+    y = jnp.asarray(rng.integers(-2 ** 12, 2 ** 12,
+                                 (MIXED_BATCH, SERVE_WIDTH)), jnp.int32)
+    op = jnp.asarray(rng.integers(0, 5, (MIXED_BATCH, 1)), jnp.int32)
+
+    fns = {}
+    for lowering in ("where_chain", "select_n"):
+        f = jax.jit(lambda y, op, lw=lowering: _select_activation_ref(
+            y, op, frac=frac, sig_coeffs=sig, leaky_alpha_q=alpha_q,
+            lowering=lw))
+        f(y, op).block_until_ready()  # compile + warm
+        fns[lowering] = f
+
+    times = {}
+    for lowering, f in fns.items():
+        t = float("inf")
+        for _ in range(SWEEPS):
+            t = min(t, _min_time(
+                lambda: f(y, op).block_until_ready()))
+        times[lowering] = t
+
+    res = {
+        "rows": MIXED_BATCH,
+        "where_chain_us": times["where_chain"] * 1e6,
+        "select_n_us": times["select_n"] * 1e6,
+        "speedup": times["where_chain"] / times["select_n"],
+    }
+    if verbose:
+        print(f"  activation select lowering : where-chain "
+              f"{res['where_chain_us']:.0f} us -> select_n "
+              f"{res['select_n_us']:.0f} us  "
+              f"({res['speedup']:.2f}x on {MIXED_BATCH} rows)")
+    return res
+
+
 def _json_path() -> str:
     default = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_fig1.json")
@@ -840,12 +1026,15 @@ def run(verbose: bool = True, reduced: bool | None = None,
         pipeline = _pipeline_comparison(rng, verbose)
         forest = _forest_mixed_comparison(rng, verbose)
         flow = _flow_raw_comparison(rng, verbose)
+        sharded = _sharded_comparison(rng, verbose)
+        act_note = _activation_lowering_note(rng, verbose)
     finally:
         if saved:
             globals().update(saved)
 
     result = {"rows": rows, "trend_validated": bool(monotonic), **mixed,
-              "pipeline": pipeline, "forest": forest, "flow": flow}
+              "pipeline": pipeline, "forest": forest, "flow": flow,
+              "sharded": sharded, "activation_lowering": act_note}
     payload = {
         "schema": 1,
         "bench": "fig1_throughput",
@@ -860,6 +1049,8 @@ def run(verbose: bool = True, reduced: bool | None = None,
         "pipeline": pipeline,
         "forest": forest,
         "flow": flow,
+        "sharded": sharded,
+        "activation_lowering": act_note,
     }
     if write_json:
         path = json_path or _json_path()

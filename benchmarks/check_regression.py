@@ -64,13 +64,22 @@ TRACKED = {
     ("flow", "steady_short_circuit_rate"): ("floor", 0.8),
     ("flow", "bitexact_vs_handbuilt"): "bool",
     ("flow", "spec_reinstall_zero_retraces"): "bool",
+    # PR-6: the sharded fabric's machine-independent invariants — sharded
+    # egress bit-exact with N=1, per-shard flow affinity, zero retraces
+    ("sharded", "bitexact_vs_n1"): "bool",
+    ("sharded", "flow_affinity"): "bool",
+    ("sharded", "zero_retraces"): "bool",
     ("trend_validated",): "bool",
 }
 
-# PR-5 cold-path floors (full-mode only — see ("floor_full", x) above).
+# Full-mode-only absolute floors — see ("floor_full", x) above.
 FULL_FLOORS = {
+    # PR-5 cold-path throughput floors
     ("forest", "pipeline_cold_pps"): ("floor_full", 6.0e5),
     ("forest", "forest_only_pps"): ("floor_full", 6.0e5),
+    # PR-6 acceptance: >= 0.7x linear aggregate scaling at 4 shards
+    # (critical-path estimator — see the bench's sharded section docstring)
+    ("sharded", "scaling_efficiency_4"): ("floor_full", 0.7),
 }
 
 

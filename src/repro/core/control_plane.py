@@ -295,9 +295,19 @@ class ControlPlane:
         # family never re-uploads the other's unchanged tables
         self._mlp_gen = 0
         self._forest_gen = 0
-        self._snapshot: Optional[Tuple[int, "ModelTables"]] = None
-        self._forest_snapshot: Optional[Tuple[int, "ForestTables"]] = None
-        self._range_snapshot: Optional[Tuple[int, "RangeTables"]] = None
+        # per-device snapshot caches (key None = the default device).  One
+        # control plane can feed N engine shards on N devices: each device
+        # gets its own cached upload of the SAME host generation, so a
+        # broadcast install is one host write + one lazy upload per shard —
+        # and the shared ``_version`` counter is the cross-shard generation
+        # fence (no per-shard version can ever diverge, because there is
+        # only one).
+        self._snapshot: Dict[Optional[object],
+                             Tuple[int, "ModelTables"]] = {}
+        self._forest_snapshot: Dict[Optional[object],
+                                    Tuple[int, "ForestTables"]] = {}
+        self._range_snapshot: Dict[Optional[object],
+                                   Tuple[int, "RangeTables"]] = {}
 
     def _begin_write(self) -> None:
         """Copy-on-write: detach the MLP-family back buffers from any
@@ -633,27 +643,40 @@ class ControlPlane:
         most once per process)."""
         return self._forest_ever
 
-    def forest_tables(self) -> ForestTables:
+    @staticmethod
+    def _uploader(device):
+        """Host→device array upload for one snapshot: ``jnp.asarray`` when
+        no placement is requested (the N=1 path — uncommitted, lands on the
+        default device exactly as before), else a committed
+        ``jax.device_put`` so a sharded engine's whole dispatch follows its
+        tables onto its own device."""
+        if device is None:
+            return jnp.asarray
+        return lambda a: jax.device_put(a, device)
+
+    def forest_tables(self, device=None) -> ForestTables:
         """Device snapshot of the forest table generation — same caching
         and double-buffer read semantics as :meth:`tables`.  Keyed on the
         forest family's own write counter, so MLP hot-swaps never re-upload
         the unchanged forest tables (and vice versa)."""
         with self._lock:
-            return self._forest_tables_locked()
+            return self._forest_tables_locked(device)
 
-    def _forest_tables_locked(self) -> ForestTables:
-        if self._forest_snapshot is None \
-                or self._forest_snapshot[0] != self._forest_gen:
-            self._forest_snapshot = (self._forest_gen, ForestTables(
-                nodes=jnp.asarray(self._f_nodes),
-                tree_on=jnp.asarray(self._f_tree_on),
-                mode=jnp.asarray(self._f_mode),
-                out_dim=jnp.asarray(self._f_out_dim),
-                id_map=jnp.asarray(self._f_id_map),
+    def _forest_tables_locked(self, device=None) -> ForestTables:
+        snap = self._forest_snapshot.get(device)
+        if snap is None or snap[0] != self._forest_gen:
+            put = self._uploader(device)
+            snap = (self._forest_gen, ForestTables(
+                nodes=put(self._f_nodes),
+                tree_on=put(self._f_tree_on),
+                mode=put(self._f_mode),
+                out_dim=put(self._f_out_dim),
+                id_map=put(self._f_id_map),
             ))
-        return self._forest_snapshot[1]
+            self._forest_snapshot[device] = snap
+        return snap[1]
 
-    def range_tables(self) -> RangeTables:
+    def range_tables(self, device=None) -> RangeTables:
         """Device snapshot of the range-table lowering of the forest family
         — same caching and double-buffer read semantics as
         :meth:`forest_tables`, keyed on the same forest write counter (the
@@ -663,20 +686,22 @@ class ControlPlane:
                 f"range tables unavailable: max_nodes={self.max_nodes} "
                 "exceeds the 32-leaf mask bound (needs max_nodes <= 64)")
         with self._lock:
-            return self._range_tables_locked()
+            return self._range_tables_locked(device)
 
-    def _range_tables_locked(self) -> RangeTables:
-        if self._range_snapshot is None \
-                or self._range_snapshot[0] != self._forest_gen:
-            self._range_snapshot = (self._forest_gen, RangeTables(
-                feat=jnp.asarray(self._r_feat),
-                thresh=jnp.asarray(self._r_th),
-                lmask=jnp.asarray(self._r_mask),
-                payload=jnp.asarray(self._r_payload),
+    def _range_tables_locked(self, device=None) -> RangeTables:
+        snap = self._range_snapshot.get(device)
+        if snap is None or snap[0] != self._forest_gen:
+            put = self._uploader(device)
+            snap = (self._forest_gen, RangeTables(
+                feat=put(self._r_feat),
+                thresh=put(self._r_th),
+                lmask=put(self._r_mask),
+                payload=put(self._r_payload),
             ))
-        return self._range_snapshot[1]
+            self._range_snapshot[device] = snap
+        return snap[1]
 
-    def forest_snapshots(self, want_ranges: bool
+    def forest_snapshots(self, want_ranges: bool, device=None
                          ) -> Tuple[ForestTables, Optional[RangeTables]]:
         """One-lock read of BOTH forest lowerings from the **same**
         generation.  Readers that mix fields across the two pytrees (the
@@ -688,13 +713,14 @@ class ControlPlane:
         generation-N+1 range rows are already padding, which votes garbage
         rather than serving stale-but-consistent results."""
         with self._lock:
-            ftables = self._forest_tables_locked()
-            rtables = self._range_tables_locked() if want_ranges else None
+            ftables = self._forest_tables_locked(device)
+            rtables = (self._range_tables_locked(device) if want_ranges
+                       else None)
             return ftables, rtables
 
     # -- data-plane reads -------------------------------------------------
 
-    def tables(self) -> ModelTables:
+    def tables(self, device=None) -> ModelTables:
         """Device snapshot of the current table generation.
 
         The snapshot is cached until the next write bumps the generation, so
@@ -704,29 +730,37 @@ class ControlPlane:
         double-buffer read side.  The arrays are traced arguments of the
         data plane, never captured constants, so a generation swap is just
         different buffers: zero retraces.
+
+        ``device`` asks for a snapshot committed to that device (one cache
+        entry per device): N engine shards reading one control plane each
+        get their own resident copy of the same generation, uploaded lazily
+        and only re-uploaded when a write bumps the family counter.
         """
         with self._lock:
-            if self._snapshot is None or self._snapshot[0] != self._mlp_gen:
-                self._snapshot = (self._mlp_gen, ModelTables(
-                    w=jnp.asarray(self._w),
-                    b=jnp.asarray(self._b),
-                    act=jnp.asarray(self._act),
-                    layer_on=jnp.asarray(self._layer_on),
-                    out_dim=jnp.asarray(self._out_dim),
-                    id_map=jnp.asarray(self._id_map),
+            snap = self._snapshot.get(device)
+            if snap is None or snap[0] != self._mlp_gen:
+                put = self._uploader(device)
+                snap = (self._mlp_gen, ModelTables(
+                    w=put(self._w),
+                    b=put(self._b),
+                    act=put(self._act),
+                    layer_on=put(self._layer_on),
+                    out_dim=put(self._out_dim),
+                    id_map=put(self._id_map),
                 ))
-            return self._snapshot[1]
+                self._snapshot[device] = snap
+            return snap[1]
 
     def invalidate_snapshot(self) -> None:
-        """Drop the cached device snapshot so the next ``tables()`` call
+        """Drop every cached device snapshot so the next ``tables()`` call
         re-uploads from host buffers.  Not needed in normal operation (the
         generation counter invalidates automatically); exists for benchmarks
         emulating the pre-double-buffer per-batch-upload behavior and for
         tests that want to force a fresh transfer."""
         with self._lock:
-            self._snapshot = None
-            self._forest_snapshot = None
-            self._range_snapshot = None
+            self._snapshot.clear()
+            self._forest_snapshot.clear()
+            self._range_snapshot.clear()
 
     @property
     def version(self) -> int:

@@ -110,7 +110,8 @@ class DataPlaneEngine:
                  dispatch: str = "fused", backend: str = "auto",
                  kernel_variant: str = "int16",
                  forest_variant: str = "auto",
-                 interpret_only: bool = False):
+                 interpret_only: bool = False,
+                 device=None):
         if dispatch not in ("fused", "gather"):
             raise ValueError(f"unknown dispatch strategy: {dispatch!r}")
         if backend not in ("auto", "pallas", "ref"):
@@ -136,6 +137,12 @@ class DataPlaneEngine:
         self.kernel_variant = kernel_variant
         self.forest_variant = forest_variant
         self.cp = control_plane
+        # shard placement: with a device, every batch's operands (inputs and
+        # the control plane's per-device table snapshot) are committed there,
+        # so the whole dispatch runs on that device — N engines over one
+        # control plane each compute on their own mesh device.  None keeps
+        # the single-device behavior exactly (uncommitted default placement).
+        self.device = device
         self.max_features = max_features
         # static unroll bound of the forest traversal lane (a synthesis-time
         # property of the data plane, like max_layers for the MLP lane)
@@ -201,7 +208,15 @@ class DataPlaneEngine:
         rows from another (stale-but-consistent is safe; torn is not)."""
         if not use_forest:
             return None, None
-        return self.cp.forest_snapshots(self.forest_variant == "range")
+        return self.cp.forest_snapshots(self.forest_variant == "range",
+                                        device=self.device)
+
+    def _place(self, arr: jax.Array) -> jax.Array:
+        """Commit one batch operand to this engine's device (identity when
+        unplaced — the computation then follows the uncommitted default)."""
+        if self.device is None:
+            return arr
+        return jax.device_put(arr, self.device)
 
     # -- host API -----------------------------------------------------------
 
@@ -223,8 +238,8 @@ class DataPlaneEngine:
         """
         if lanes not in ("both", "mlp", "forest"):
             raise ValueError(f"unknown lanes hint: {lanes!r}")
-        pkts = jnp.asarray(pkts, jnp.uint8)
-        tables = self.cp.tables()  # current generation snapshot
+        pkts = self._place(jnp.asarray(pkts, jnp.uint8))
+        tables = self.cp.tables(device=self.device)  # current generation
         use_mlp, use_forest = self._lane_flags(lanes)
         ftables, rtables = self._forest_snapshots(use_forest)
         t0 = time.perf_counter()
@@ -252,9 +267,9 @@ class DataPlaneEngine:
         """
         if lanes not in ("both", "mlp", "forest"):
             raise ValueError(f"unknown lanes hint: {lanes!r}")
-        feats_q = jnp.asarray(feats_q, jnp.int32)
-        model_id = jnp.asarray(model_id, jnp.int32)
-        tables = self.cp.tables()
+        feats_q = self._place(jnp.asarray(feats_q, jnp.int32))
+        model_id = self._place(jnp.asarray(model_id, jnp.int32))
+        tables = self.cp.tables(device=self.device)
         use_mlp, use_forest = self._lane_flags(lanes)
         ftables, rtables = self._forest_snapshots(use_forest)
         t0 = time.perf_counter()

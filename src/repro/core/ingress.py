@@ -605,10 +605,18 @@ class IngressPipeline:
     # within-chunk repeats immediately), and **probe inserts** — while the
     # gate is closed, every retired batch still admits a 1-in-8 stride
     # sample of its rows, so duplication that only repeats *across* chunks
-    # starts hitting the sampled entries (hit rate ≈ 1/8 on fully
-    # duplicate traffic > the 0.05 threshold) and the gate re-opens within
-    # a few chunks instead of latching shut forever.  Correctness never
-    # depends on the gate — a skipped insert can only cost a future hit.
+    # starts hitting the sampled entries and re-opens the gate within a
+    # few chunks instead of latching shut forever.  The gate is a
+    # **hysteresis** pair, not one threshold: a closed gate's observable
+    # hit rate is attenuated by the probe stride (only 1-in-8 rows are in
+    # the cache to hit), so it re-opens at ``threshold / stride`` —
+    # cross-chunk duplication at e.g. 20% shows up as ≈ 20%/8 = 2.5%
+    # through the probe sample, which a flat 5% reopen bar would latch
+    # shut forever despite the true rate being 4× the threshold.  Both
+    # comparisons gate the *same* effective duplication: open-state closes
+    # below 5% observed, closed-state re-opens at the stride-attenuated
+    # image of that same 5%.  Correctness never depends on the gate — a
+    # skipped insert can only cost a future hit.
     _ADMIT_THRESHOLD = 0.05
     _ADMIT_ALPHA = 0.5
     _PROBE_STRIDE = 8
@@ -618,7 +626,7 @@ class IngressPipeline:
                  cache_capacity_pow2: int = 16,
                  flush_after: Optional[float] = None,
                  adaptive_batch: bool = False,
-                 clock=None):
+                 clock=None, shard_id: int = 0):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
         if max_inflight <= 0:
@@ -627,6 +635,11 @@ class IngressPipeline:
             raise ValueError("flush_after must be >= 0 seconds (or None)")
         self.engine = engine
         self.cp = engine.cp
+        # shard-local identity: tickets, miss indices, the result cache and
+        # the pending window are all per-pipeline state, so a pipeline IS a
+        # shard — the id only names it (stats, fabric drain bookkeeping);
+        # no cross-shard coherence exists to need it for correctness.
+        self.shard_id = int(shard_id)
         self.batch_size = batch_size
         self.max_inflight = max_inflight
         self.width = engine.max_features
@@ -703,6 +716,7 @@ class IngressPipeline:
         self.flush_after = flush_after
         self._clock = clock if clock is not None else time.perf_counter
         self._dup_ewma = 1.0  # optimistic start: admit until proven unique
+        self._gate_open = True  # hysteresis state (see the class comment)
 
         self._inflight: Deque[_InFlight] = deque()
         self._chunks: Deque[_ChunkRecord] = deque()
@@ -976,17 +990,26 @@ class IngressPipeline:
 
     def _observe_duplication(self, n: int, short_circuited: int) -> None:
         """Fold one chunk's observed short-circuit rate into the admission
-        EWMA (always-on intra-chunk dedup is the detector that re-opens
-        admission when duplication reappears)."""
+        EWMA and step the gate's hysteresis: an open gate closes when the
+        EWMA falls below the threshold; a closed gate re-opens at the
+        threshold divided by the probe stride, because a closed gate's hit
+        rate is stride-attenuated (only the 1-in-``_PROBE_STRIDE`` probe
+        sample is in the cache to be hit) — both comparisons measure the
+        same ≥5% true duplication (see the class comment)."""
         if n:
             obs = short_circuited / n
             self._dup_ewma = (self._ADMIT_ALPHA * self._dup_ewma
                               + (1.0 - self._ADMIT_ALPHA) * obs)
+            if self._gate_open:
+                self._gate_open = self._dup_ewma >= self._ADMIT_THRESHOLD
+            else:
+                self._gate_open = (self._dup_ewma >= self._ADMIT_THRESHOLD
+                                   / self._PROBE_STRIDE)
 
     def _admit(self) -> bool:
         """True when cache/pending insert sweeps are currently worth their
         cost (recent traffic showed duplication)."""
-        return self._dup_ewma >= self._ADMIT_THRESHOLD
+        return self._gate_open
 
     def _pick_size(self) -> int:
         """Load-adaptive device batch size for a newly-opened staging batch:

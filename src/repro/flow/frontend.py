@@ -137,13 +137,27 @@ class FlowFrontend:
 
     # -- feature extraction -------------------------------------------------
 
-    def extract(self, raw) -> Tuple[np.ndarray, RawHeaderBatch, np.ndarray]:
+    def extract(self, raw, *, fields: Optional[RawHeaderBatch] = None,
+                cms_est_q: Optional[np.ndarray] = None
+                ) -> Tuple[np.ndarray, RawHeaderBatch, np.ndarray]:
         """Run the stateful stage for one raw header batch: resolve flows,
         update registers/sketch, emit features.  Returns ``(features,
         fields, is_new)`` with ``features`` (B, N_FLOW_FEATURES) int32 codes
         at ``params.frac`` (post-update state as each packet observed it).
+
+        ``fields`` lets a caller that already parsed the headers (the
+        sharded fabric's dispatcher hashes the 5-tuples before routing)
+        skip the second parse; ``cms_est_q`` overrides the count-min
+        feature lane with externally computed codes — the fabric maintains
+        ONE global sketch across shards (heavy-hitter counts are a
+        whole-fabric property; a per-shard sketch would see only its own
+        flows and diverge from the N=1 estimates whenever flows on
+        different shards collide in a cell), so each shard's private
+        sketch becomes scratch and the global per-packet estimates ride in
+        through this override.
         """
-        fields = parse_raw_headers(raw)
+        if fields is None:
+            fields = parse_raw_headers(raw)
         n = fields.model_id.shape[0]
         if n == 0:
             return (np.zeros((0, N_FLOW_FEATURES), np.int32), fields,
@@ -166,15 +180,23 @@ class FlowFrontend:
         if state is not self.table.registers:  # pallas/ref return fresh
             self.table.registers[:] = np.asarray(state)
             self.cms[:] = np.asarray(cms)
-        return np.asarray(feats), fields, is_new
+        feats = np.asarray(feats)
+        if cms_est_q is not None:
+            if not feats.flags.writeable:
+                feats = np.array(feats)
+            feats[:, N_FLOW_FEATURES - 1] = cms_est_q
+        return feats, fields, is_new
 
     # -- serving -------------------------------------------------------------
 
-    def submit_raw(self, raw) -> Tuple[int, int]:
+    def submit_raw(self, raw, *, fields: Optional[RawHeaderBatch] = None,
+                   cms_est_q: Optional[np.ndarray] = None) -> Tuple[int, int]:
         """Feed one raw header batch through flow-update → feature-spec
         gather → the ingress pipeline's **feature-domain** entry.  Returns
         the pipeline's ``(first_ticket, n_packets)``; results arrive
         through the usual ``drain()`` surface in submission order.
+        ``fields``/``cms_est_q`` pass through to :meth:`extract` (the
+        sharded fabric's pre-parsed, global-sketch entry).
 
         No wire rows are built on ingress any more: the spec gather lands
         each packet's flow-feature lanes on its model's input columns (one
@@ -186,7 +208,8 @@ class FlowFrontend:
         encoded — byte-identical to the old encapsulate→parse round trip
         (asserted by the tier-1 suite).
         """
-        feats, fields, _ = self.extract(raw)
+        feats, fields, _ = self.extract(raw, fields=fields,
+                                        cms_est_q=cms_est_q)
         n = feats.shape[0]
         if n == 0:
             return self.pipeline.submit_features(

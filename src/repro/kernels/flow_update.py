@@ -49,7 +49,8 @@ from .ref import (FLOW_CODE_MAX, N_FLOW_FEATURES, N_FLOW_REGISTERS,
                   REG_LAST_TS, REG_MAX_LEN, REG_MIN_LEN, REG_PKT_COUNT,
                   rounding_rshift, rounding_rshift_np, sat_shl_np)
 
-__all__ = ["flow_update_pallas", "flow_update_gather", "rank_from_order"]
+__all__ = ["flow_update_pallas", "flow_update_gather", "rank_from_order",
+           "cms_estimate_update"]
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +204,38 @@ def _rank_within_groups(keys: np.ndarray, key_bound: int = 1 << 62):
     return rank_from_order(order, newg)
 
 
+def cms_estimate_update(cms: np.ndarray, cells: np.ndarray) -> np.ndarray:
+    """Count-min lane closed form, shared by the vectorized lowering below
+    and the sharded fabric's *global* sketch: increments commute, so the
+    post-update estimate each packet observes is
+    ``min(prior + rank_in_cell + 1, FLOW_CODE_MAX)`` — no sequential
+    rounds — and the cell totals fold in as one saturating bincount per
+    sketch row.  Updates ``cms`` **in place** (int32 ``(D, Wc)``) and
+    returns the per-packet estimates (int32 ``(B,)``, pre-quantization).
+
+    One definition on purpose: the fabric computes this over the whole
+    arrival batch (every shard's packets, original order) against one
+    shared sketch, which is exactly what the N=1 path computes — so the
+    sharded CMS feature is bit-exact with single-shard serving by
+    construction, not by parallel reimplementation.
+    """
+    cl = np.asarray(cells, np.int64).reshape(cells.shape[0], -1)
+    code_max = np.int32(FLOW_CODE_MAX)
+    est = np.full(cl.shape[0], FLOW_CODE_MAX, np.int32)
+    if cl.shape[0] == 0:
+        return est
+    for d in range(cms.shape[0]):
+        cd = cl[:, d]
+        prior = cms[d, cd]
+        est_d = np.minimum(prior + (_rank_within_groups(cd, cms.shape[1])
+                                    + 1).astype(np.int32), code_max)
+        est = np.minimum(est, est_d)
+        counts = np.bincount(cd, minlength=cms.shape[1])
+        np.minimum(cms[d] + counts.astype(np.int32), code_max,
+                   out=cms[d])
+    return est
+
+
 def flow_update_gather(state: np.ndarray, cms: np.ndarray, slots: np.ndarray,
                        cells: np.ndarray, ts: np.ndarray, length: np.ndarray,
                        live: np.ndarray, *, frac: int, ewma_shift: int,
@@ -308,23 +341,11 @@ def flow_update_gather(state: np.ndarray, cms: np.ndarray, slots: np.ndarray,
             np.maximum(t - first, 0) >> dur_shift, frac)
         feats[sel, : N_FLOW_FEATURES - 1] = block[:, : N_FLOW_FEATURES - 1]
 
-    # count-min lane: increments commute, so the post-update estimate each
-    # packet observes is prior + its rank within the cell + 1 (clamped) —
-    # closed form, no rounds, and the cell totals are one bincount per row
+    # count-min lane: the shared closed form (see cms_estimate_update)
     cl = np.asarray(cells, np.int64).reshape(n, -1)
     if idx is not None:
         cl = cl[idx]
-    m = cl.shape[0]
-    est = np.full(m, FLOW_CODE_MAX, np.int32)
-    for d in range(cms.shape[0]):
-        cd = cl[:, d]
-        prior = cms[d, cd]
-        est_d = np.minimum(prior + (_rank_within_groups(cd, cms.shape[1])
-                                    + 1).astype(np.int32), code_max)
-        est = np.minimum(est, est_d)
-        counts = np.bincount(cd, minlength=cms.shape[1])
-        np.minimum(cms[d] + counts.astype(np.int32), code_max,
-                   out=cms[d])
+    est = cms_estimate_update(cms, cl)
     cms_q = sat_shl_np(est, frac)
     if idx is None:
         feats[:, N_FLOW_FEATURES - 1] = cms_q

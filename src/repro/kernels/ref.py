@@ -81,9 +81,26 @@ def fixedpoint_matmul_ref(x_codes: jax.Array, w_codes: jax.Array,
 
 
 def _select_activation_ref(y: jax.Array, opcode: jax.Array, *, frac: int,
-                           sig_coeffs, leaky_alpha_q: int) -> jax.Array:
+                           sig_coeffs, leaky_alpha_q: int,
+                           lowering: str = "select_n") -> jax.Array:
     """Opcode-gated integer activation (opcodes as in core.control_plane:
-    1=relu, 2=taylor-sigmoid, 3=leaky-relu, 4=hard-sigmoid)."""
+    1=relu, 2=taylor-sigmoid, 3=leaky-relu, 4=hard-sigmoid; anything else
+    is the identity).
+
+    All five arms are computed unconditionally (they are cheap VPU
+    elementwise chains; per-packet opcodes make real branching impossible
+    anyway) and one selection picks each lane's arm.  ``lowering`` chooses
+    the selection form — shared by the Pallas kernel and both jnp oracles,
+    so the choice can never split the bit-exactness contract:
+
+      * ``"select_n"`` (default) — one branchless opcode-indexed
+        ``jax.lax.select_n`` over the five arms: the opcode is clamped to
+        the valid range (invalid → case 0 = identity, same semantics as
+        the chain) and a single N-way select replaces four dependent
+        2-way selects.
+      * ``"where_chain"`` — the original four-deep ``jnp.where`` chain,
+        kept for the before/after comparison in the bench.
+    """
     relu = jnp.maximum(y, 0)
     leaky = jnp.where(y > 0, y,
                       rounding_rshift(y * jnp.int32(leaky_alpha_q), frac))
@@ -94,6 +111,10 @@ def _select_activation_ref(y: jax.Array, opcode: jax.Array, *, frac: int,
     half = jnp.int32(1 << (frac - 1))
     one = jnp.int32(1 << frac)
     hsig = jnp.clip(half + rounding_rshift(y, 2), 0, one)
+    if lowering == "select_n":
+        idx = jnp.where((opcode >= 1) & (opcode <= 4), opcode, 0)
+        idx = jnp.broadcast_to(idx, y.shape)
+        return jax.lax.select_n(idx, y, relu, sig, leaky, hsig)
     out = y
     out = jnp.where(opcode == 1, relu, out)
     out = jnp.where(opcode == 2, sig, out)

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_mesh", "make_production_mesh", "HW"]
+__all__ = ["make_mesh", "make_production_mesh", "shard_devices", "HW"]
 
 
 def make_mesh(shape, axes):
@@ -26,6 +26,21 @@ def make_mesh(shape, axes):
                              axis_types=(axis_type,) * len(axes))
     except (AttributeError, TypeError):
         return jax.make_mesh(shape, axes)
+
+
+def shard_devices(n_shards: int):
+    """Round-robin ``n_shards`` placements over the local devices.
+
+    The sharded serving fabric calls this once at construction.  On a
+    single-device host every shard lands on the same device (still correct —
+    shards are then a concurrency/affinity construct, not a placement one);
+    with ``--xla_force_host_platform_device_count=N`` or real multi-chip
+    hosts the shards spread.  Returns a list of length ``n_shards``.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    devs = jax.local_devices()
+    return [devs[i % len(devs)] for i in range(n_shards)]
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -36,8 +36,9 @@ from ..core.inference import DataPlaneEngine
 from ..core.ingress import BatchError, IngressPipeline
 from ..core.packet import HEADER_BYTES
 from ..models import build_model
+from ..serve import ShardedPacketServer
 
-__all__ = ["PacketServer", "LMServer", "BatchError"]
+__all__ = ["PacketServer", "ShardedPacketServer", "LMServer", "BatchError"]
 
 
 class PacketServer:
@@ -75,7 +76,7 @@ class PacketServer:
                  dispatch: str = "fused", kernel_variant: str = "int16",
                  forest_variant: str = "auto",
                  max_inflight: int = 8, ingress_batch: int = 2048,
-                 use_cache: bool = True,
+                 use_cache: bool = True, cache_capacity_pow2: int = 16,
                  max_forests: int = 8, max_trees: int = 16,
                  max_nodes: int = 64, max_tree_depth: int = 6,
                  flush_after: Optional[float] = None,
@@ -103,6 +104,7 @@ class PacketServer:
         self.ingress = IngressPipeline(
             self.engine, batch_size=ingress_batch,
             max_inflight=max_inflight, use_cache=use_cache,
+            cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
             clock=clock)
         self.max_inflight = max_inflight

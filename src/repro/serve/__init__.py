@@ -1,0 +1,5 @@
+"""Sharded serving fabric (scale-out past the single-engine PacketServer)."""
+
+from .fabric import ShardedPacketServer, rss_shard
+
+__all__ = ["ShardedPacketServer", "rss_shard"]

@@ -1,0 +1,349 @@
+"""Sharded serving fabric: N data-plane shards behind one RSS dispatcher.
+
+The single-engine :class:`~repro.launch.serve.PacketServer` is the paper's
+deployment shape — one NIC, one register file, one serving pipeline.  This
+module is the scale-out refactor: a :class:`ShardedPacketServer` owns N
+complete shard stacks (``DataPlaneEngine`` + ``IngressPipeline`` +
+``FlowFrontend``), places each on a mesh device
+(:func:`repro.launch.mesh.shard_devices`; on CPU hosts
+``--xla_force_host_platform_device_count=N`` fakes the devices), and routes
+traffic the way receive-side scaling does on real NICs:
+
+* **flow affinity** — raw packets are dispatched by a hash of the 5-tuple
+  (``shard = key_hash mod N``), so every packet of a flow lands on exactly
+  one shard.  That shard's :class:`~repro.flow.table.FlowTable` owns the
+  flow's registers outright: per-flow state needs **no cross-shard
+  coherence**, and because a flow's register trajectory depends only on its
+  own packets (relative order preserved by the dispatch slicing), the
+  per-packet features are bit-exact with single-shard serving.
+* **one global sketch** — the count-min lane is the exception: heavy-hitter
+  counts are a whole-fabric property, and per-shard sketches would diverge
+  from N=1 whenever flows on different shards collide in a cell.  The
+  dispatcher therefore computes the CMS estimates *globally* (the shared
+  closed form :func:`repro.kernels.flow_update.cms_estimate_update`, over
+  the whole arrival batch in original order, against one fabric-owned
+  sketch) and rides them into each shard through ``extract()``'s
+  ``cms_est_q`` override — bit-exact by sharing the definition, not by
+  reimplementation.
+* **round-robin for stateless traffic** — already-encapsulated
+  ``submit_packets()`` chunks carry no flow state, so whole chunks
+  round-robin across shards for load balance.
+* **global-order egress** — every submit records how its packets were
+  scattered; ``drain_packets()`` drains all shards and interleaves their
+  (shard-ordered) results back into exact global submission order.
+* **cross-shard generation fence** — all shards share ONE
+  :class:`~repro.core.control_plane.ControlPlane` (its single ``version``
+  counter *is* the fence: there is no per-shard generation to diverge), and
+  every fabric operation — submits, drains, installs — serializes on the
+  fabric lock, so an ``install()`` lands entirely between arrival batches:
+  no batch can observe shard A at generation g and shard B at g+1.
+  In-flight shard batches keep the old tables (control-plane double
+  buffering), and each shard engine jits its own fixed-shape programs, so
+  installs stay zero-retrace per shard exactly as they are at N=1.
+
+N=1 degenerates to the single-engine behavior (same values, same order),
+which is what lets the whole tier-1 suite double as the fabric's oracle.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.control_plane import ControlPlane
+from ..core.inference import DataPlaneEngine
+from ..core.ingress import IngressPipeline, PacketError
+from ..data.packets import (RAW_KEY_BYTES, RawHeaderBatch,
+                            parse_raw_headers)
+from ..flow import FlowFrontend, FlowParams
+from ..flow.table import FlowTable
+from ..kernels.flow_update import cms_estimate_update
+from ..kernels.ref import sat_shl_np
+from ..launch.mesh import shard_devices
+
+__all__ = ["ShardedPacketServer", "rss_shard"]
+
+
+def rss_shard(key_hashes: np.ndarray, n_shards: int) -> np.ndarray:
+    """RSS dispatch function: 64-bit flow-key hashes → shard ids.
+
+    Pure and stateless — the same 5-tuple always maps to the same shard
+    (the flow-affinity invariant the property tests pin down).  The hash is
+    :func:`repro.flow.table.FlowTable.pack_keys`'s mixing hash, i.e. the
+    exact value the shard's own flow table will re-derive, so dispatcher
+    and table can never disagree about a key.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return (np.asarray(key_hashes, np.uint64)
+            % np.uint64(n_shards)).astype(np.int64)
+
+
+class _Shard:
+    """One complete serving stack: engine + pipeline + (lazy) flow frontend,
+    pinned to one device."""
+
+    def __init__(self, shard_id: int, cp: ControlPlane, device, *,
+                 max_width: int, taylor_order: int, dispatch: str,
+                 kernel_variant: str, forest_variant: str,
+                 ingress_batch: int, max_inflight: int, use_cache: bool,
+                 cache_capacity_pow2: int,
+                 flush_after: Optional[float], adaptive_batch: bool,
+                 flow_capacity_pow2: int, flow_idle_timeout: Optional[int],
+                 clock):
+        self.shard_id = shard_id
+        self.device = device
+        self.engine = DataPlaneEngine(
+            cp, max_features=max_width, taylor_order=taylor_order,
+            dispatch=dispatch, kernel_variant=kernel_variant,
+            forest_variant=forest_variant, device=device)
+        self.pipeline = IngressPipeline(
+            self.engine, batch_size=ingress_batch,
+            max_inflight=max_inflight, use_cache=use_cache,
+            cache_capacity_pow2=cache_capacity_pow2,
+            flush_after=flush_after, adaptive_batch=adaptive_batch,
+            clock=clock, shard_id=shard_id)
+        self._flow_capacity_pow2 = flow_capacity_pow2
+        self._flow_idle_timeout = flow_idle_timeout
+        self._flow: Optional[FlowFrontend] = None
+
+    @property
+    def flow(self) -> FlowFrontend:
+        if self._flow is None:
+            self._flow = FlowFrontend(
+                self.pipeline, capacity_pow2=self._flow_capacity_pow2,
+                idle_timeout=self._flow_idle_timeout)
+        return self._flow
+
+
+class _Submit:
+    """Global-order record of one submit: which shard(s) got its packets."""
+
+    __slots__ = ("shard_ids",)
+
+    def __init__(self, shard_ids: np.ndarray):
+        self.shard_ids = shard_ids  # (n,) int64 — per-packet shard
+
+
+class ShardedPacketServer:
+    """N-shard serving fabric with the :class:`PacketServer` surface.
+
+    Parameters are the single-engine server's plus ``n_shards``;
+    ``ingress_batch`` is **per shard** (each shard keeps its own
+    fixed-shape staging, so per-shard batch shapes — and therefore jit
+    cache keys — are identical to a standalone server's).
+    """
+
+    def __init__(self, *, n_shards: int = 1, max_models: int = 16,
+                 max_layers: int = 4, max_width: int = 32,
+                 frac_bits: int = 8, weight_bits: int = 16,
+                 taylor_order: int = 3, dispatch: str = "fused",
+                 kernel_variant: str = "int16", forest_variant: str = "auto",
+                 max_inflight: int = 8, ingress_batch: int = 2048,
+                 use_cache: bool = True, cache_capacity_pow2: int = 16,
+                 max_forests: int = 8,
+                 max_trees: int = 16, max_nodes: int = 64,
+                 max_tree_depth: int = 6,
+                 flush_after: Optional[float] = None,
+                 adaptive_batch: bool = False,
+                 flow_capacity_pow2: int = 14,
+                 flow_idle_timeout: Optional[int] = None,
+                 clock=None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        self.control_plane = ControlPlane(
+            max_models=max_models, max_layers=max_layers,
+            max_width=max_width, weight_bits=weight_bits,
+            frac_bits=frac_bits, max_forests=max_forests,
+            max_trees=max_trees, max_nodes=max_nodes,
+            max_tree_depth=max_tree_depth)
+        devices = shard_devices(n_shards)
+        self.shards = [
+            _Shard(s, self.control_plane, devices[s],
+                   max_width=max_width, taylor_order=taylor_order,
+                   dispatch=dispatch, kernel_variant=kernel_variant,
+                   forest_variant=forest_variant,
+                   ingress_batch=ingress_batch, max_inflight=max_inflight,
+                   use_cache=use_cache,
+                   cache_capacity_pow2=cache_capacity_pow2,
+                   flush_after=flush_after,
+                   adaptive_batch=adaptive_batch,
+                   flow_capacity_pow2=flow_capacity_pow2,
+                   flow_idle_timeout=flow_idle_timeout, clock=clock)
+            for s in range(n_shards)]
+        # global count-min sketch (see the module docstring: the one piece
+        # of flow state that is a whole-fabric property)
+        self.flow_params = FlowParams(frac=frac_bits)
+        self.cms = np.zeros(
+            (self.flow_params.cms_depth,
+             1 << self.flow_params.cms_width_pow2), np.int32)
+        self._key_words = (RAW_KEY_BYTES + 7) // 8
+        # THE fence: every fabric operation holds this, so installs
+        # serialize against submits/drains and a split arrival batch can
+        # never straddle a generation bump (reentrant: public methods may
+        # stack)
+        self._lock = threading.RLock()
+        self._order: deque = deque()   # _Submit records, submission order
+        self._n_slots = 0              # global tickets this drain window
+        self._rr = 0                   # round-robin cursor (stateless path)
+        self._window_t0: Optional[float] = None
+
+    # -- control plane (broadcast by construction: one shared plane) -------
+
+    def install(self, model_id: int, layers, activations, **kw) -> int:
+        """Hot-swap a model across the whole fabric.  One shared control
+        plane means one generation counter: the swap is atomic across
+        shards by construction, and the fabric lock keeps it from landing
+        mid-dispatch of a split arrival batch."""
+        with self._lock:
+            return self.control_plane.install(
+                model_id, layers, activations, **kw)
+
+    def install_forest(self, model_id: int, forest) -> int:
+        with self._lock:
+            return self.control_plane.install_forest(model_id, forest)
+
+    def install_feature_spec(self, model_id: int, columns) -> int:
+        with self._lock:
+            return self.control_plane.install_feature_spec(model_id, columns)
+
+    def remove(self, model_id: int) -> None:
+        with self._lock:
+            self.control_plane.remove(model_id)
+            for sh in self.shards:
+                sh.pipeline.on_model_removed(model_id)
+
+    # -- dispatch ----------------------------------------------------------
+
+    def dispatch_shards(self, raw) -> np.ndarray:
+        """Pure RSS mapping for a raw header batch: per-packet shard ids
+        (no state is touched — exposed for tests and observability)."""
+        fields = parse_raw_headers(raw)
+        _, hashes = FlowTable.pack_keys(fields.key_bytes, self._key_words)
+        return rss_shard(hashes, self.n_shards)
+
+    def submit_raw(self, raw) -> Tuple[int, int]:
+        """Raw 5-tuple ingress through the RSS dispatcher: parse once,
+        hash once, update the global sketch once (arrival order), then
+        scatter each packet to its flow's home shard (relative order
+        preserved).  Returns global ``(first_ticket, n_packets)``."""
+        with self._lock:
+            if self._window_t0 is None:
+                self._window_t0 = time.perf_counter()
+            fields = parse_raw_headers(raw)
+            n = fields.model_id.shape[0]
+            first = self._n_slots
+            if n == 0:
+                return first, 0
+            _, hashes = FlowTable.pack_keys(fields.key_bytes,
+                                            self._key_words)
+            shard_ids = rss_shard(hashes, self.n_shards)
+            # global CMS: estimates for the WHOLE batch in arrival order
+            # against the fabric sketch — exactly the N=1 computation
+            cells = self.flow_params.cms_cells(hashes)
+            est = cms_estimate_update(self.cms, cells)
+            est_q = sat_shl_np(est, self.flow_params.frac)
+            raw_arr = np.ascontiguousarray(raw, np.uint8)
+            for s in range(self.n_shards):
+                sel = shard_ids == s
+                if not sel.any():
+                    continue
+                fields_s = RawHeaderBatch(
+                    key_bytes=fields.key_bytes[sel],
+                    model_id=fields.model_id[sel],
+                    ts=fields.ts[sel], length=fields.length[sel])
+                self.shards[s].flow.submit_raw(
+                    raw_arr[sel], fields=fields_s, cms_est_q=est_q[sel])
+            self._order.append(_Submit(shard_ids))
+            self._n_slots += n
+            return first, n
+
+    def submit_packets(self, packets) -> Tuple[int, int]:
+        """Encapsulated-packet ingress (no flow state): whole chunks
+        round-robin across shards.  Returns global ``(first_ticket,
+        n_packets)``."""
+        with self._lock:
+            if self._window_t0 is None:
+                self._window_t0 = time.perf_counter()
+            arr = np.asarray(packets)
+            n = arr.shape[0] if arr.ndim == 2 else 0
+            s = self._rr
+            self._rr = (self._rr + 1) % self.n_shards
+            first = self._n_slots
+            self.shards[s].pipeline.submit(arr)
+            self._order.append(
+                _Submit(np.full(n, s, np.int64)))
+            self._n_slots += n
+            return first, n
+
+    def drain_packets(self) -> List[Union[np.ndarray, PacketError]]:
+        """Drain every shard and merge the results back into exact global
+        submission order (each shard's drain is already in that shard's
+        submission order; the recorded scatter says how to interleave).
+        Per-packet error slots are re-ticketed to their global position."""
+        with self._lock:
+            per: List[deque] = [deque(sh.pipeline.drain())
+                                for sh in self.shards]
+            out: List[Union[np.ndarray, PacketError]] = []
+            for rec in self._order:
+                for sid in rec.shard_ids.tolist():
+                    r = per[sid].popleft()
+                    if isinstance(r, PacketError):
+                        r = PacketError(ticket=len(out), reason=r.reason)
+                    out.append(r)
+            assert all(not q for q in per), \
+                "shard drained more results than the fabric dispatched"
+            self._order.clear()
+            self._n_slots = 0
+            self._close_window()
+            return out
+
+    def _close_window(self) -> None:
+        if self._window_t0 is not None:
+            dt = time.perf_counter() - self._window_t0
+            # every shard shares the window's wall-clock, so the aggregate
+            # rate (sum of per-shard rates) is total packets / wall time —
+            # the honest number for a host that serializes shard work
+            for sh in self.shards:
+                sh.engine.add_seconds(dt)
+            self._window_t0 = None
+
+    def process(self, packets):
+        """Synchronous single-batch path (shard 0 — API parity with the
+        single-engine server; no flow state involved)."""
+        with self._lock:
+            if self._window_t0 is not None:
+                self.drain_packets()
+            return self.shards[0].engine.process(packets)
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """Fabric-level aggregates plus the per-shard breakdown."""
+        with self._lock:
+            per_shard = []
+            for sh in self.shards:
+                d = {"shard": sh.shard_id,
+                     "packets_per_s": sh.engine.packets_per_second(),
+                     "throughput_gbps": sh.engine.throughput_gbps(),
+                     "recompiles": sh.engine.trace_count,
+                     "cache_hit_rate": sh.pipeline.cache_hit_rate(),
+                     "packets": sh.pipeline.stats["packets"]}
+                if sh._flow is not None:
+                    d["flows"] = len(sh._flow.table)
+                per_shard.append(d)
+            return {
+                "n_shards": self.n_shards,
+                "packets_per_s": sum(d["packets_per_s"] for d in per_shard),
+                "throughput_gbps": sum(d["throughput_gbps"]
+                                       for d in per_shard),
+                "recompiles": sum(d["recompiles"] for d in per_shard),
+                "table_generation": self.control_plane.version,
+                "flows": sum(d.get("flows", 0) for d in per_shard),
+                "shards": per_shard,
+            }

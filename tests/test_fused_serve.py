@@ -248,6 +248,56 @@ class TestAdmissionGate:
         assert pipe.cache.hits - h0 == 32  # full cache serve again
         pipe.drain()
 
+    def test_partial_duplication_reopens_gate(self):
+        """The hysteresis fix: 20% cross-chunk duplication through a closed
+        gate is observed stride-attenuated (≈ 20%/8 = 2.5% — *below* the 5%
+        close threshold but 4× the true-rate image of it), so a flat
+        threshold latched the gate shut forever.  The closed-state reopen
+        bar is threshold/stride: the gate must come back open and serve the
+        duplicated pool from cache."""
+        rng = np.random.default_rng(11)
+        cp, eng, pipe = self._pipeline(rng)
+        for _ in range(10):  # close the gate on unique traffic
+            pipe.submit(_wire(rng, 32, model_lo=1, model_hi=3))
+            pipe.flush()
+        assert not pipe._admit()
+        pool = _wire(rng, 64, model_lo=1, model_hi=3)  # the repeating 20%
+        for _ in range(60):
+            dup = pool[rng.choice(64, 6, replace=False)]  # 6/32 ≈ 19%
+            fresh = _wire(rng, 26, model_lo=1, model_hi=3)
+            pipe.submit(np.concatenate([dup, fresh]))
+            pipe.flush()
+        assert pipe._admit()  # re-opened despite sub-threshold observation
+        h0 = pipe.cache.hits
+        pipe.submit(pool)
+        pipe.flush()
+        assert pipe.cache.hits - h0 >= 48  # the pool largely serves cached
+        pipe.drain()
+
+    def test_light_duplication_still_serves_probe_hits(self):
+        """5% duplication sits exactly at the open-state threshold, so the
+        gate may flutter — the invariant is weaker but must hold: probe
+        inserts keep the duplicated rows reachable, cache hits keep
+        accruing, and correctness is unchanged either way."""
+        rng = np.random.default_rng(12)
+        cp, eng, pipe = self._pipeline(rng)
+        for _ in range(10):
+            pipe.submit(_wire(rng, 32, model_lo=1, model_hi=3))
+            pipe.flush()
+        assert not pipe._admit()
+        pool = _wire(rng, 16, model_lo=1, model_hi=3)
+        hits = []
+        for _ in range(80):
+            dup = pool[rng.choice(16, 2, replace=False)]  # 2/32 ≈ 6%
+            fresh = _wire(rng, 30, model_lo=1, model_hi=3)
+            pipe.submit(np.concatenate([dup, fresh]))
+            pipe.flush()
+            hits.append(pipe.cache.hits)
+        # the gate never latches into a no-hit regime: the second half of
+        # the run keeps producing cache hits
+        assert hits[-1] > hits[40]
+        pipe.drain()
+
 
 class _FakeClock:
     def __init__(self):
