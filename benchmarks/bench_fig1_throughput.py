@@ -93,7 +93,8 @@ DUP_FRACTION = 0.5    # fraction of trace packets that repeat an earlier one
 # bool is gated by CI, and on noisy shared runners the adjacent-row
 # separation is exactly what the retries exist to establish.
 _REDUCED_OVERRIDES = dict(BATCH=4096, REPS=2, SWEEPS=1, RETRY_SWEEPS=5,
-                          LOOPS=2, TRACE_TOTAL=8192, SHARD_TRACE=16384)
+                          LOOPS=2, TRACE_TOTAL=8192, SHARD_TRACE=16384,
+                          FAULT_TRACE=8192)
 
 
 def _min_time(fn, reps: int | None = None) -> float:
@@ -939,6 +940,151 @@ def _sharded_comparison(rng, verbose: bool):
     return res
 
 
+FAULT_TRACE = 16384   # faults-section trace length (per window: /4)
+FAULT_FLOWS = 512
+
+
+def _faults_section(rng, verbose: bool):
+    """PR-7 tentpole: the fault-tolerant fabric — kill 1 of 4 shards
+    mid-stream and measure what degradation actually costs.
+
+    Untimed invariants (the machine-independent booleans the regression
+    gate pins): after the kill every outstanding ticket still resolves
+    (``drain_packets`` never hangs), the dead shard's flows continue on
+    the survivors **bit-exact** vs the uninterrupted N=1 oracle (live
+    flow-state migration under the generation fence), and the survivors
+    pay **zero retraces** (failover changes routing, never batch shapes).
+    ``recovery_chunks`` counts post-kill windows until a window drains
+    with zero per-packet errors — 1 with host-side flow state, because
+    the first window routed after the death is already clean.
+
+    Timed: the same critical-path estimator as the sharded section
+    (slowest shard's independent slice time), once with all 4 shards
+    alive and once with 3 survivors serving the re-homed trace —
+    ``degraded_ratio_3of4`` says how much of the fabric's throughput one
+    dead shard costs (ideal: 0.75 of full, minus re-homing skew)."""
+    from repro.data.packets import raw_trace
+    from repro.launch.serve import PacketServer
+    from repro.serve import ShardedPacketServer
+
+    width = SERVE_WIDTH
+    spec = (2, 3, 4, 5) * (width // 4)
+
+    def build_fabric():
+        srv = ShardedPacketServer(
+            n_shards=4, max_models=N_MODELS, max_layers=SERVE_LAYERS,
+            max_width=width, frac_bits=8,
+            ingress_batch=SHARD_INGRESS_BATCH, max_inflight=2,
+            cache_capacity_pow2=17, flow_capacity_pow2=13)
+        _install_serving_zoo(srv)
+        for mid in range(1, N_MODELS + 1):
+            srv.install_feature_spec(mid, spec)
+        return srv
+
+    def build_oracle():
+        srv = PacketServer(
+            max_models=N_MODELS, max_layers=SERVE_LAYERS, max_width=width,
+            frac_bits=8, ingress_batch=SHARD_INGRESS_BATCH, max_inflight=2,
+            cache_capacity_pow2=17, flow_capacity_pow2=13)
+        _install_serving_zoo(srv)
+        for mid in range(1, N_MODELS + 1):
+            srv.install_feature_spec(mid, spec)
+        return srv
+
+    trng = np.random.default_rng(31)
+    raw = raw_trace(trng, FAULT_TRACE, n_flows=FAULT_FLOWS,
+                    model_ids=tuple(range(1, N_MODELS + 1)))
+    quarter = FAULT_TRACE // 4
+    windows = [raw[i * quarter:(i + 1) * quarter] for i in range(4)]
+
+    # -- the drill: warm, kill mid-stream, compare against the oracle ----
+    fab, oracle = build_fabric(), build_oracle()
+    fab.submit_raw(windows[0])
+    oracle.submit_raw(windows[0])
+    fab.drain_packets()
+    oracle.drain_packets()
+    traces0 = [sh.engine.trace_count for sh in fab.shards]
+    fab.submit_raw(windows[1])
+    oracle.submit_raw(windows[1])
+    fab.kill_shard(1, "bench drill")
+    fab.submit_raw(windows[2])
+    oracle.submit_raw(windows[2])
+    got = fab.drain_packets()
+    want = oracle.drain_packets()
+    all_resolved = len(got) == len(want) == 2 * quarter
+    from repro.core.ingress import PacketError
+    bitexact = all_resolved and all(
+        (not isinstance(a, PacketError)) and np.array_equal(a, b)
+        for a, b in zip(got, want))
+    recovery_chunks = 0
+    for w in windows[3:]:
+        recovery_chunks += 1
+        fab.submit_raw(w)
+        oracle.submit_raw(w)
+        g, o = fab.drain_packets(), oracle.drain_packets()
+        clean = not any(isinstance(r, PacketError) for r in g)
+        bitexact &= all(np.array_equal(a, b) for a, b in zip(g, o)
+                        if not isinstance(a, PacketError))
+        if clean:
+            break
+    zero_retraces = all(
+        fab.shards[s].engine.trace_count == traces0[s]
+        for s in fab.alive_shards)
+    migrated = int(fab.fault_stats["migrated_flows"])
+
+    # -- degraded throughput: critical path over 3 survivors vs 4 alive --
+    def critical_path(srv):
+        from repro.flow.table import FlowTable
+        from repro.data.packets import parse_raw_headers
+        fields = parse_raw_headers(raw)
+        _, hashes = FlowTable.pack_keys(fields.key_bytes, srv._key_words)
+        sids = srv._route(hashes)
+        per_t = []
+        for s in srv.alive_shards:
+            raw_s = raw[sids == s]
+            sh = srv.shards[s]
+
+            def loop(sh=sh, raw_s=raw_s):
+                sh.pipeline.reset_tickets()
+                sh.flow.submit_raw(raw_s)
+                sh.pipeline.flush()
+
+            loop()  # converge this replay path before timing
+            per_t.append(_min_time(loop))
+        return FAULT_TRACE / max(per_t)
+
+    full = build_fabric()
+    full_pps = critical_path(full)
+    degraded = build_fabric()
+    degraded.kill_shard(1, "bench degraded timing")
+    degraded_pps = critical_path(degraded)
+    ratio = degraded_pps / full_pps if full_pps else 0.0
+
+    res = {
+        "trace_packets": FAULT_TRACE,
+        "n_flows": FAULT_FLOWS,
+        "all_tickets_resolved": bool(all_resolved),
+        "bitexact_after_migration": bool(bitexact),
+        "zero_retraces_on_survivors": bool(zero_retraces),
+        "migrated_flows": migrated,
+        "recovery_chunks": recovery_chunks,
+        "full_pps_4shards": full_pps,
+        "degraded_pps_3of4": degraded_pps,
+        "degraded_ratio_3of4": ratio,
+    }
+    if verbose:
+        print("  kill-1-of-4 drill: "
+              f"tickets resolved: {all_resolved}   "
+              f"bit-exact after migration: {bitexact}   "
+              f"survivor retraces: {0 if zero_retraces else 'NONZERO'}")
+        print(f"  migrated flows: {migrated}   recovery chunks: "
+              f"{recovery_chunks}")
+        print(f"  degraded throughput (3 of 4 alive): "
+              f"{degraded_pps:,.0f} pkt/s = {ratio:.2f}x of full "
+              f"{full_pps:,.0f} pkt/s (ideal 0.75)")
+    return res
+
+
 def _activation_lowering_note(rng, verbose: bool):
     """Carried perf thread: the per-layer activation select inside the
     fused MLP is now a branchless opcode-indexed ``lax.select_n`` (one
@@ -1027,6 +1173,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
         forest = _forest_mixed_comparison(rng, verbose)
         flow = _flow_raw_comparison(rng, verbose)
         sharded = _sharded_comparison(rng, verbose)
+        faults = _faults_section(rng, verbose)
         act_note = _activation_lowering_note(rng, verbose)
     finally:
         if saved:
@@ -1034,7 +1181,8 @@ def run(verbose: bool = True, reduced: bool | None = None,
 
     result = {"rows": rows, "trend_validated": bool(monotonic), **mixed,
               "pipeline": pipeline, "forest": forest, "flow": flow,
-              "sharded": sharded, "activation_lowering": act_note}
+              "sharded": sharded, "faults": faults,
+              "activation_lowering": act_note}
     payload = {
         "schema": 1,
         "bench": "fig1_throughput",
@@ -1050,6 +1198,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
         "forest": forest,
         "flow": flow,
         "sharded": sharded,
+        "faults": faults,
         "activation_lowering": act_note,
     }
     if write_json:

@@ -69,6 +69,11 @@ TRACKED = {
     ("sharded", "bitexact_vs_n1"): "bool",
     ("sharded", "flow_affinity"): "bool",
     ("sharded", "zero_retraces"): "bool",
+    # PR-7: the fault-tolerant fabric's kill-1-of-4 drill — every ticket
+    # resolves, migrated flows bit-exact vs N=1, survivors never retrace
+    ("faults", "all_tickets_resolved"): "bool",
+    ("faults", "bitexact_after_migration"): "bool",
+    ("faults", "zero_retraces_on_survivors"): "bool",
     ("trend_validated",): "bool",
 }
 

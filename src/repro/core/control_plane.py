@@ -232,6 +232,10 @@ class ControlPlane:
         self.fmt = FixedPointFormat(total_bits=weight_bits, frac_bits=frac_bits)
         self.frac_bits = frac_bits
         self._lock = threading.Lock()
+        # fault-injection hook (serve.faults.FaultPlan.install attaches it);
+        # fired between table preparation and the commit point of every
+        # install so the all-or-nothing swap property is testable
+        self.fault_plan = None
         w_dtype = np.dtype(self.fmt.dtype)
         self._w = np.zeros((max_models, max_layers, max_width, max_width), w_dtype)
         self._b = np.zeros((max_models, max_layers, max_width), np.int32)
@@ -309,6 +313,15 @@ class ControlPlane:
         self._range_snapshot: Dict[Optional[object],
                                    Tuple[int, "RangeTables"]] = {}
 
+    def _fire_fault(self, site: str) -> None:
+        """Fault-injection hook (no-op without an installed plan).  Sits at
+        the last point before an install's commit block: anything it raises
+        must leave the live tables bit-identical and the version counter
+        unchanged — the crash-safety property the chaos tests assert."""
+        plan = self.fault_plan
+        if plan is not None:
+            plan.fire(site, shard=-1)
+
     def _begin_write(self) -> None:
         """Copy-on-write: detach the MLP-family back buffers from any
         published snapshot before mutating (caller holds the lock)."""
@@ -373,28 +386,49 @@ class ControlPlane:
             if slot is None and not self._free_slots \
                     and self._next_slot >= self.max_models:
                 raise ValueError("control plane table full")
-            self._begin_write()
+            # Prepare on private copies; the commit block below is plain
+            # exception-free assignments, so an exception anywhere up to
+            # (and including) the fault hook rolls back for free: live
+            # tables bit-identical, version unchanged, zero retraces.
+            w, b, act = self._w.copy(), self._b.copy(), self._act.copy()
+            layer_on = self._layer_on.copy()
+            out_dim, id_map = self._out_dim.copy(), self._id_map.copy()
+            slots, free = dict(self._slots), list(self._free_slots)
+            next_slot = self._next_slot
             if slot is None:
                 # prefer recycled slots: a fresh index for every install
                 # would collide live models once remove() had been used
-                slot = (self._free_slots.pop() if self._free_slots
-                        else self._next_slot)
-                if slot == self._next_slot:
-                    self._next_slot += 1
-                self._slots[model_id] = slot
-                self._id_map[model_id] = slot
-            self._w[slot] = 0
-            self._b[slot] = 0
-            self._layer_on[slot] = 0
+                slot = free.pop() if free else next_slot
+                if slot == next_slot:
+                    next_slot += 1
+                slots[model_id] = slot
+                id_map[model_id] = slot
+            w[slot] = 0
+            b[slot] = 0
+            layer_on[slot] = 0
             for l, (din, dout, wq, bq, opcode) in enumerate(quantized):
-                self._w[slot, l, :din, :dout] = wq
-                self._b[slot, l, :dout] = bq
-                self._act[slot, l] = opcode
-                self._layer_on[slot, l] = 1
-            self._out_dim[slot] = layers[-1][0].shape[1]
+                w[slot, l, :din, :dout] = wq
+                b[slot, l, :dout] = bq
+                act[slot, l] = opcode
+                layer_on[slot, l] = 1
+            out_dim[slot] = layers[-1][0].shape[1]
+            self._fire_fault("install")
+            # -- commit (atomic under the lock) --
+            self._w, self._b, self._act = w, b, act
+            self._layer_on, self._out_dim = layer_on, out_dim
+            self._id_map = id_map
+            self._slots, self._free_slots = slots, free
+            self._next_slot = next_slot
             self._mlp_gen += 1
             self._version += 1
             return slot
+
+    def installed_ids(self) -> frozenset:
+        """Model ids currently installed in either family — the admission
+        whitelist for strict serving surfaces (a raw row naming any other
+        id would ride an uninstalled slot to all-zero egress)."""
+        with self._lock:
+            return frozenset(self._slots) | frozenset(self._f_slots)
 
     def remove(self, model_id: int) -> None:
         """Uninstall a model from whichever family holds it (no-op if
@@ -503,31 +537,50 @@ class ControlPlane:
             if slot is None and not self._f_free_slots \
                     and self._f_next_slot >= self.max_forests:
                 raise ValueError("forest table full")
-            self._begin_write_forest()
+            # prepare-then-commit, same crash-safety contract as install():
+            # BOTH lowerings stage on private copies and publish together
+            f_nodes = self._f_nodes.copy()
+            f_tree_on = self._f_tree_on.copy()
+            f_mode, f_out_dim = self._f_mode.copy(), self._f_out_dim.copy()
+            f_id_map = self._f_id_map.copy()
+            f_slots, f_free = dict(self._f_slots), list(self._f_free_slots)
+            f_next = self._f_next_slot
             if slot is None:
-                slot = (self._f_free_slots.pop() if self._f_free_slots
-                        else self._f_next_slot)
-                if slot == self._f_next_slot:
-                    self._f_next_slot += 1
-                self._f_slots[model_id] = slot
-                self._f_id_map[model_id] = slot
-            self._f_nodes[slot] = 0
-            self._f_tree_on[slot] = 0
-            self._f_nodes[slot, :n_trees, :n_nodes] = packed.nodes
-            self._f_tree_on[slot, :n_trees] = packed.tree_on
-            self._f_mode[slot] = packed.mode
-            self._f_out_dim[slot] = packed.out_dim
+                slot = f_free.pop() if f_free else f_next
+                if slot == f_next:
+                    f_next += 1
+                f_slots[model_id] = slot
+                f_id_map[model_id] = slot
+            f_nodes[slot] = 0
+            f_tree_on[slot] = 0
+            f_nodes[slot, :n_trees, :n_nodes] = packed.nodes
+            f_tree_on[slot, :n_trees] = packed.tree_on
+            f_mode[slot] = packed.mode
+            f_out_dim[slot] = packed.out_dim
             if ranges is not None:
-                self._r_feat[slot] = 0
-                self._r_th[slot] = np.iinfo(np.int32).max
-                self._r_mask[slot] = 0
-                self._r_payload[slot] = 0
+                r_feat, r_th = self._r_feat.copy(), self._r_th.copy()
+                r_mask = self._r_mask.copy()
+                r_payload = self._r_payload.copy()
+                r_feat[slot] = 0
+                r_th[slot] = np.iinfo(np.int32).max
+                r_mask[slot] = 0
+                r_payload[slot] = 0
                 ni = ranges.feat.shape[1]
                 nl = ranges.payload.shape[1]
-                self._r_feat[slot, :n_trees, :ni] = ranges.feat
-                self._r_th[slot, :n_trees, :ni] = ranges.thresh
-                self._r_mask[slot, :n_trees, :ni] = ranges.lmask
-                self._r_payload[slot, :n_trees, :nl] = ranges.payload
+                r_feat[slot, :n_trees, :ni] = ranges.feat
+                r_th[slot, :n_trees, :ni] = ranges.thresh
+                r_mask[slot, :n_trees, :ni] = ranges.lmask
+                r_payload[slot, :n_trees, :nl] = ranges.payload
+            self._fire_fault("install")
+            # -- commit (atomic under the lock) --
+            self._f_nodes, self._f_tree_on = f_nodes, f_tree_on
+            self._f_mode, self._f_out_dim = f_mode, f_out_dim
+            self._f_id_map = f_id_map
+            self._f_slots, self._f_free_slots = f_slots, f_free
+            self._f_next_slot = f_next
+            if ranges is not None:
+                self._r_feat, self._r_th = r_feat, r_th
+                self._r_mask, self._r_payload = r_mask, r_payload
             self._forest_ever = True
             self._forest_gen += 1
             self._version += 1
@@ -572,22 +625,24 @@ class ControlPlane:
                 f"FeatureSpec has {len(spec.columns)} columns > "
                 f"max_width={self.max_width} input lanes")
         with self._lock:
-            slot = int(self._spec_map[model_id])
+            # prepare-then-commit (same crash-safety contract as install())
+            smap = self._spec_map
+            rows, lens = self._spec_rows.copy(), self._spec_lens.copy()
+            slot = int(smap[model_id])
             if slot < 0:  # the map only changes when a new slot is minted
-                self._spec_map = self._spec_map.copy()
-                slot = self._spec_rows.shape[0]
-                self._spec_rows = np.concatenate(
-                    [self._spec_rows,
-                     np.full((1, self.max_width), -1, np.int32)])
-                self._spec_lens = np.concatenate(
-                    [self._spec_lens, np.zeros(1, np.int32)])
-                self._spec_map[model_id] = slot
-            else:
-                self._spec_rows = self._spec_rows.copy()
-                self._spec_lens = self._spec_lens.copy()
-            self._spec_rows[slot] = -1
-            self._spec_rows[slot, : len(spec.columns)] = spec.columns
-            self._spec_lens[slot] = len(spec.columns)
+                smap = smap.copy()
+                slot = rows.shape[0]
+                rows = np.concatenate(
+                    [rows, np.full((1, self.max_width), -1, np.int32)])
+                lens = np.concatenate([lens, np.zeros(1, np.int32)])
+                smap[model_id] = slot
+            rows[slot] = -1
+            rows[slot, : len(spec.columns)] = spec.columns
+            lens[slot] = len(spec.columns)
+            self._fire_fault("install")
+            # -- commit (atomic under the lock) --
+            self._spec_map, self._spec_rows, self._spec_lens = \
+                smap, rows, lens
             self._specs[model_id] = spec
             self._version += 1
             return slot

@@ -526,6 +526,8 @@ class _InFlight:
     size: int               # dispatched device batch rows (incl. padding)
     buf_idx: int            # staging buffer holding the ingress rows
     generation: Optional[int]  # table generation at dispatch (None = ambiguous)
+    lanes: str = "both"     # lane program dispatched (salvage probes reuse
+                            # it — same jit shape, zero retraces)
 
 
 @dataclasses.dataclass
@@ -626,13 +628,16 @@ class IngressPipeline:
                  cache_capacity_pow2: int = 16,
                  flush_after: Optional[float] = None,
                  adaptive_batch: bool = False,
-                 clock=None, shard_id: int = 0):
+                 clock=None, shard_id: int = 0,
+                 max_retries: int = 2, retry_backoff: float = 0.0):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
         if max_inflight <= 0:
             raise ValueError("max_inflight must be positive")
         if flush_after is not None and flush_after < 0:
             raise ValueError("flush_after must be >= 0 seconds (or None)")
+        if max_retries < 0 or retry_backoff < 0:
+            raise ValueError("max_retries/retry_backoff must be >= 0")
         self.engine = engine
         self.cp = engine.cp
         # shard-local identity: tickets, miss indices, the result cache and
@@ -732,10 +737,33 @@ class IngressPipeline:
         # family batches retire out of index order; the prefix pointer
         # advances over this per-index retirement map
         self._miss_retired = np.zeros(1024, bool)
+        # per-miss-row failure codes parallel to _miss_retired: 0 = served,
+        # 1 = dispatch failed / quarantined, 2 = egress row corrupted.  A
+        # failed row is still "retired" (the prefix advances, chunks
+        # resolve, drain never hangs) — it just resolves to a PacketError.
+        self._miss_failed = np.zeros(1024, np.uint8)
+
+        # degraded-mode serving: bounded retry-with-backoff around every
+        # device dispatch, then same-shape bisection probes to quarantine
+        # the offending rows while the rest of the batch serves.  The
+        # consecutive-failure streak (whole batches lost, reset by any
+        # served row) is what a supervising fabric reads to declare the
+        # shard dead.
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.consecutive_dispatch_failures = 0
+        # fault-injection hook (serve.faults); chaos mode (REPRO_CHAOS=1)
+        # self-installs a transient plan so the whole tier-1 suite runs
+        # through the retry path.  Function-level import: serve.__init__
+        # pulls in the fabric, which imports this module.
+        from ..serve.faults import chaos_plan_from_env
+        self.fault_plan = chaos_plan_from_env()
 
         self.stats = {"packets": 0, "cache_hits": 0, "coalesced": 0,
                       "dispatched_rows": 0, "padded_rows": 0, "batches": 0,
-                      "errors": 0,
+                      "errors": 0, "dispatch_retries": 0,
+                      "dispatch_failures": 0, "quarantined_rows": 0,
+                      "probe_batches": 0, "corrupted_rows": 0,
                       "lane_batches": {"mlp": 0, "forest": 0, "both": 0}}
 
     # -- ticket bookkeeping ------------------------------------------------
@@ -754,10 +782,16 @@ class IngressPipeline:
             self._status = status
         return np.arange(t0, t0 + n, dtype=np.int64)
 
-    def _mark_errors(self, tickets: np.ndarray, reason: str) -> None:
+    def _mark_errors(self, tickets: np.ndarray, reason) -> None:
+        """Resolve tickets as :class:`PacketError` slots.  ``reason`` is one
+        string for the whole group or a per-ticket sequence."""
         self._status[tickets] = STATUS_ERROR
-        for t in tickets.tolist():
-            self._errors[t] = PacketError(ticket=t, reason=reason)
+        if isinstance(reason, str):
+            for t in tickets.tolist():
+                self._errors[t] = PacketError(ticket=t, reason=reason)
+        else:
+            for t, r in zip(tickets.tolist(), reason):
+                self._errors[t] = PacketError(ticket=t, reason=str(r))
         self.stats["errors"] += tickets.size
 
     # -- ingress -----------------------------------------------------------
@@ -837,7 +871,9 @@ class IngressPipeline:
         self._ingest(rows_g, tickets_g)
         return first, n
 
-    def submit_features(self, x0, model_id, flags=None) -> Tuple[int, int]:
+    def submit_features(self, x0, model_id, flags=None, *,
+                        error_mask=None,
+                        error_reason="rejected upstream") -> Tuple[int, int]:
         """Feature-domain ingress (the flow engine's entry): already-parsed
         int32 feature codes + Model IDs.  The wire-row **key** is still
         built (one vectorized encode — byte-identical to what the jax
@@ -845,7 +881,13 @@ class IngressPipeline:
         one key space and e.g. a converged flow's rows hit entries a wire
         replay of the same features populated; but the parsed features ride
         along, so miss rows stage with no byte parse at all.  Returns
-        ``(first_ticket, n_packets)``."""
+        ``(first_ticket, n_packets)``.
+
+        ``error_mask`` marks rows an upstream stage already rejected
+        (malformed raw headers, flow-table overflow): they take error slots
+        at their submission-order positions — ``error_reason`` is one
+        string or a per-row sequence — and never touch the cache, the
+        pending window, or a device batch."""
         try:
             x0 = np.ascontiguousarray(x0, np.int32)
             n = x0.shape[0]
@@ -857,13 +899,26 @@ class IngressPipeline:
             mid = np.ascontiguousarray(model_id, np.int32).reshape(n)
             fl = (np.zeros(n, np.int32) if flags is None
                   else np.ascontiguousarray(flags, np.int32).reshape(n))
+            tickets_g = tickets
+            if error_mask is not None:
+                em = np.asarray(error_mask, bool).reshape(n)
+                if em.any():
+                    reasons = (error_reason if isinstance(error_reason, str)
+                               else np.asarray(error_reason, object)[em])
+                    self._mark_errors(tickets[em], reasons)
+                    good = np.nonzero(~em)[0]
+                    if good.size == 0:
+                        return first, n
+                    x0, mid, fl = x0[good], mid[good], fl[good]
+                    tickets_g = tickets[good]
             if x0.shape[1] < self.width:
                 x0 = np.concatenate(
-                    [x0, np.zeros((n, self.width - x0.shape[1]), np.int32)],
+                    [x0, np.zeros((x0.shape[0], self.width - x0.shape[1]),
+                                  np.int32)],
                     axis=1)
             from .packet import encode_packets_np
             rows = encode_packets_np(mid, self.engine.frac, x0, flags=fl)
-            self._ingest(rows, tickets, parsed=(mid, fl, x0))
+            self._ingest(rows, tickets_g, parsed=(mid, fl, x0))
             self._observe_rate(n)
             return first, n
         finally:
@@ -1105,28 +1160,161 @@ class IngressPipeline:
         # racing install()/remove() may have reassigned an id, so fall back
         # to the always-correct both-lane program for this batch
         lanes = o.family if gen_before == o.gen0 else "both"
-        future = self.engine.run_features(x0, mid, block=False, lanes=lanes)
-        gen_after = self.cp.version
-        if lanes != "both" and gen_after != gen_before:
-            # a table write landed between the lane decision and the run's
-            # snapshot — the lane-pure program may now be wrong for this
-            # batch (e.g. an id reassigned across families).  Discard that
-            # dispatch and redo on the both-lane program, which is correct
-            # under any generation's tables.
-            self.engine.credit_packets(-size)  # never served
-            self.engine.credit_bytes(-size * in_row, -size * out_row)
-            lanes = "both"
-            gen_before = self.cp.version
-            future = self.engine.run_features(x0, mid, block=False,
-                                              lanes=lanes)
+        try:
+            future = self._run_guarded(x0, mid, lanes)
             gen_after = self.cp.version
+            if lanes != "both" and gen_after != gen_before:
+                # a table write landed between the lane decision and the
+                # run's snapshot — the lane-pure program may now be wrong
+                # for this batch (e.g. an id reassigned across families).
+                # Discard that dispatch and redo on the both-lane program,
+                # which is correct under any generation's tables.
+                self.engine.credit_packets(-size)  # never served
+                self.engine.credit_bytes(-size * in_row, -size * out_row)
+                lanes = "both"
+                gen_before = self.cp.version
+                future = self._run_guarded(x0, mid, lanes)
+                gen_after = self.cp.version
+        except Exception as err:
+            # every retry exhausted at the dispatch site: the device never
+            # accepted this batch.  Salvage row-by-row with same-shape
+            # probes; unservable rows resolve as PacketError (drain never
+            # hangs, the server never dies).
+            self.stats["dispatch_failures"] += 1
+            self._salvage_failed_batch(o.buf, o.miss_idx[:count].copy(),
+                                       count, size, lanes, err)
+            return
         generation = gen_before if gen_after == gen_before else None
         self._inflight.append(_InFlight(
             future=future, miss_idx=o.miss_idx[:count].copy(), count=count,
-            size=size, buf_idx=o.buf, generation=generation))
+            size=size, buf_idx=o.buf, generation=generation, lanes=lanes))
         self.stats["dispatched_rows"] += size
         self.stats["batches"] += 1
         self.stats["lane_batches"][lanes] += 1
+
+    def _run_guarded(self, x0: np.ndarray, mid: np.ndarray, lanes: str):
+        """One device dispatch under the fault plan and the bounded
+        retry-with-backoff policy.  The stall site fires first (an injected
+        wedge a supervising watchdog must notice — it delays, never
+        raises); a dispatch-site fault or a real engine error is retried
+        ``max_retries`` times with exponential backoff before giving up."""
+        last = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self.stats["dispatch_retries"] += 1
+                if self.retry_backoff:
+                    time.sleep(self.retry_backoff * (1 << (attempt - 1)))
+            try:
+                plan = self.fault_plan
+                if plan is not None:
+                    plan.fire("stall", self.shard_id, mid)
+                    plan.fire("dispatch", self.shard_id, mid)
+                return self.engine.run_features(x0, mid, block=False,
+                                                lanes=lanes)
+            except Exception as e:  # noqa: BLE001 — any device failure
+                last = e
+        raise last
+
+    # -- failure salvage ---------------------------------------------------
+
+    def _salvage_failed_batch(self, buf: int, miss_idx: np.ndarray,
+                              count: int, size: int, lanes: str,
+                              err: Exception) -> None:
+        """A batch the device would not serve (dispatch raised after every
+        retry, or its future raised at retire): bisect it with same-shape
+        probe dispatches to quarantine the offending rows, serve the rest,
+        and resolve every miss row either way — the failure never strands a
+        ticket.  Reuses the failing batch's lane program and shape, so the
+        probes add zero jit traces."""
+        in_row = HEADER_BYTES + FEATURE_BYTES * self.width
+        out_row = self.out_bytes
+        ok, out = self._bisect_probe(buf, count, size, lanes)
+        n_ok = int(ok.sum())
+        if n_ok:
+            # some rows served — the device is alive, the failure was the
+            # batch's content (or transient): not a shard-death signal
+            self.consecutive_dispatch_failures = 0
+            self.stats["quarantined_rows"] += count - n_ok
+        else:
+            self.consecutive_dispatch_failures += 1
+        hi = int(miss_idx.max()) + 1 if miss_idx.size else 0
+        self._miss_out.ensure(hi)
+        self._miss_out.a[miss_idx] = 0
+        if n_ok:
+            rows = emit_results_np(
+                self._stg_mid[buf][:count][ok],
+                self._stg_flags[buf][:count][ok],
+                out[ok], self.engine.frac)
+            self._miss_out.a[miss_idx[ok]] = rows
+        self._miss_out.n = max(self._miss_out.n, hi)
+        self._ensure_retired(self._n_miss)
+        self._miss_retired[miss_idx] = True
+        if count - n_ok:
+            self._miss_failed[miss_idx[~ok]] = 1
+        rem = self._miss_retired[self._miss_done: self._n_miss]
+        self._miss_done = (self._n_miss if rem.all()
+                           else self._miss_done + int(np.argmin(rem)))
+        # one batch's worth of engine accounting (the probes all
+        # self-cancel): +size packets rejoins the -(size-count) padding
+        # adjustment applied at dispatch for a net of `count`, exactly the
+        # success path.  Quarantined batches stay out of the result cache.
+        self.engine.credit_packets(size)
+        self.engine.credit_bytes(size * in_row, size * out_row)
+        self._free_bufs.append(buf)
+        self._resolve_ready_chunks()
+
+    def _bisect_probe(self, buf: int, count: int, size: int, lanes: str
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Group-bisection over a failing batch's real rows: probe subsets
+        with **same-shape** dispatches (unselected rows zeroed to Model ID
+        0 — uninstalled, zero egress — so every probe reuses the failing
+        batch's jit program).  Returns ``(ok_mask, outputs)`` over the
+        ``count`` real rows; rows never cleared by a passing probe within
+        the probe budget stay quarantined.  Probe credits self-cancel —
+        the caller accounts the batch once."""
+        x0 = self._stg_x0[buf][:size]
+        mid = self._stg_mid[buf][:size]
+        in_row = HEADER_BYTES + FEATURE_BYTES * self.width
+        out_row = self.out_bytes
+        ok = np.zeros(count, bool)
+        out = np.zeros((count, self.out_feats), np.int32)
+        plan = self.fault_plan
+
+        def probe(sel: np.ndarray) -> np.ndarray:
+            self.stats["probe_batches"] += 1
+            xp = np.zeros((size, self.width), np.int32)
+            mp = np.zeros(size, np.int32)
+            xp[sel] = x0[sel]
+            mp[sel] = mid[sel]
+            if plan is not None:
+                plan.fire("stall", self.shard_id, mp)
+                plan.fire("dispatch", self.shard_id, mp)
+            fut = self.engine.run_features(xp, mp, block=False, lanes=lanes)
+            try:  # run_features credited on return — self-cancel even on a
+                return np.asarray(fut)  # future that raises here
+            finally:
+                self.engine.credit_packets(-size)
+                self.engine.credit_bytes(-size * in_row, -size * out_row)
+
+        # worst case the bisection degenerates to one probe per row (every
+        # row bad, tested individually, plus the interior splits) — 2n
+        # bounds that; typical cost is O(k log n) for k bad rows
+        budget = 2 * count + 8
+        stack = [np.arange(count)]
+        while stack and budget > 0:
+            sel = stack.pop()
+            budget -= 1
+            try:
+                res = probe(sel)
+            except Exception:  # noqa: BLE001 — split and keep probing
+                if sel.size > 1:
+                    half = sel.size // 2
+                    stack.append(sel[half:])
+                    stack.append(sel[:half])
+                continue
+            ok[sel] = True
+            out[sel] = res[sel, : self.out_feats]
+        return ok, out
 
     # -- retire ------------------------------------------------------------
 
@@ -1138,16 +1326,42 @@ class IngressPipeline:
             a = np.zeros(cap, bool)
             a[: self._miss_retired.shape[0]] = self._miss_retired
             self._miss_retired = a
+            f = np.zeros(cap, np.uint8)
+            f[: self._miss_failed.shape[0]] = self._miss_failed
+            self._miss_failed = f
 
     def _retire_oldest(self) -> None:
         rec = self._inflight.popleft()
-        out = np.asarray(rec.future)  # blocks until the device batch is done
+        try:
+            out = np.asarray(rec.future)  # blocks until the batch is done
+        except Exception as err:  # noqa: BLE001 — device died mid-batch
+            # run_features credited this batch when it dispatched; cancel
+            # so the salvage pass accounts it exactly once
+            in_row = HEADER_BYTES + FEATURE_BYTES * self.width
+            self.engine.credit_packets(-rec.size)
+            self.engine.credit_bytes(-rec.size * in_row,
+                                     -rec.size * self.out_bytes)
+            self.stats["dispatch_failures"] += 1
+            self._salvage_failed_batch(rec.buf_idx, rec.miss_idx, rec.count,
+                                       rec.size, rec.lanes, err)
+            return
+        # a whole batch came back: the device is alive
+        self.consecutive_dispatch_failures = 0
         # the one egress encode of the serving path (host twin of the
         # device deparser, byte-identical): int32 output codes → wire rows
         rows = emit_results_np(self._stg_mid[rec.buf_idx][: rec.count],
                                self._stg_flags[rec.buf_idx][: rec.count],
                                out[: rec.count, : self.out_feats],
                                self.engine.frac)
+        plan = self.fault_plan
+        if plan is not None:
+            rows = plan.corrupt_egress(rows, self.shard_id)
+        # egress verification (the wire CRC stand-in): every emitted row
+        # must echo the Model ID it was staged with — emit_results_np
+        # writes the id itself, so a mismatch means the row bytes were
+        # damaged after encode and must not reach the caller or the cache
+        echo = (rows[:, 0].astype(np.int32) << 8) | rows[:, 1]
+        bad = echo != self._stg_mid[rec.buf_idx][: rec.count]
         idx = rec.miss_idx
         hi = int(idx.max()) + 1 if idx.size else 0
         self._miss_out.ensure(hi)
@@ -1155,15 +1369,21 @@ class IngressPipeline:
         self._miss_out.n = max(self._miss_out.n, hi)
         self._ensure_retired(self._n_miss)
         self._miss_retired[idx] = True
+        if bad.any():
+            self._miss_failed[idx[bad]] = 2
+            self.stats["corrupted_rows"] += int(bad.sum())
         # family batches retire out of global-index order; chunks resolve
         # against the fully-retired prefix
         rem = self._miss_retired[self._miss_done: self._n_miss]
         self._miss_done = (self._n_miss if rem.all()
                            else self._miss_done + int(np.argmin(rem)))
-        if self.cache is not None and rec.generation is not None:
+        if self.cache is not None and rec.generation is not None \
+                and not bad.any():
             # gate open: admit the whole batch; gate closed: admit a stride
             # sample so reappearing cross-chunk duplication still produces
-            # the hits that re-open the gate (see the class comment)
+            # the hits that re-open the gate (see the class comment).
+            # A batch with corrupted rows stays out entirely — a damaged
+            # egress row must never be replayed from the cache.
             sl = (slice(None, rec.count) if self._admit()
                   else slice(None, rec.count, self._PROBE_STRIDE))
             words = self._staging_words[rec.buf_idx][sl]
@@ -1174,14 +1394,32 @@ class IngressPipeline:
         self._free_bufs.append(rec.buf_idx)
         self._resolve_ready_chunks()
 
+    _FAIL_REASONS = {
+        1: "device dispatch failed — row quarantined",
+        2: "egress row corrupted — dropped at verification",
+    }
+
     def _resolve_ready_chunks(self) -> None:
         """Deliver results for head chunks whose every miss row has retired
         (chunks attaching only to already-retired rows resolve straight from
-        submit — no further device traffic involved)."""
+        submit — no further device traffic involved).  Miss rows that
+        retired as failures resolve their tickets to PacketError slots."""
         while self._chunks and self._chunks[0].hi <= self._miss_done:
             ch = self._chunks.popleft()
-            self._results.a[ch.tickets] = self._miss_out.a[ch.miss_idx]
-            self._status[ch.tickets] = STATUS_READY
+            fail = self._miss_failed[ch.miss_idx]
+            if fail.any():
+                bad = fail > 0
+                codes = fail[bad]
+                self._mark_errors(
+                    ch.tickets[bad],
+                    [self._FAIL_REASONS[int(c)] for c in codes])
+                good = ~bad
+                self._results.a[ch.tickets[good]] = \
+                    self._miss_out.a[ch.miss_idx[good]]
+                self._status[ch.tickets[good]] = STATUS_READY
+            else:
+                self._results.a[ch.tickets] = self._miss_out.a[ch.miss_idx]
+                self._status[ch.tickets] = STATUS_READY
 
     def flush(self) -> None:
         """Dispatch the partial staging batch (padded to the fixed shape) and
@@ -1226,7 +1464,10 @@ class IngressPipeline:
         records or pending-window mappings must never survive the reset.
         """
         for rec in self._inflight:
-            rec.future.block_until_ready()
+            try:
+                rec.future.block_until_ready()
+            except Exception:  # noqa: BLE001 — results are being discarded;
+                pass           # a failed future must not break the reset
         self._inflight.clear()
         self._chunks.clear()
         self._open.clear()
@@ -1239,6 +1480,7 @@ class IngressPipeline:
         self._miss_done = 0
         self._miss_out.reset()
         self._miss_retired[:] = False
+        self._miss_failed[:] = 0
         if self._pending is not None:
             self._pending.clear()
 

@@ -25,7 +25,8 @@ from ..core.packet import encode_packets
 __all__ = ["PacketGenConfig", "packet_stream", "flow_features",
            "anomaly_dataset", "qos_dataset",
            "RAW_HEADER_BYTES", "RAW_KEY_BYTES", "RawHeaderBatch",
-           "encode_raw_headers", "parse_raw_headers", "raw_trace"]
+           "encode_raw_headers", "parse_raw_headers", "validate_raw_rows",
+           "raw_trace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +149,76 @@ def parse_raw_headers(raw: np.ndarray) -> RawHeaderBatch:
         ts=be(15, 4),
         length=be(19, 2),
     )
+
+
+def validate_raw_rows(raw, known_model_ids=None):
+    """Best-effort admission of a raw header batch.
+
+    Returns ``(rows, bad_mask, reasons)``: ``rows`` is a clean
+    ``(n, RAW_HEADER_BYTES)`` uint8 array safe to hand to
+    :func:`parse_raw_headers` (rejected rows zeroed), ``bad_mask`` marks
+    rows that must resolve as per-packet errors instead of parsing garbage
+    (``None`` when every row is clean — the fast path allocates nothing),
+    and ``reasons`` is a per-row object array of rejection strings
+    (``None`` when ``bad_mask`` is).
+
+    Accepts the well-formed 2-D uint8 batch (one ``shape`` check), a batch
+    of the wrong width (every row rejected — the caller keeps serving), or
+    a ragged sequence of per-packet byte rows, where truncated/oversized
+    rows are rejected individually and the rest parse normally.  With
+    ``known_model_ids`` (any container supporting ``in``), rows whose
+    Model ID field is outside the known set are rejected too — the
+    serving surface's guard against a misclassified flow silently riding
+    an uninstalled (zero-egress) model.
+    """
+    try:
+        arr = np.asarray(raw)
+    except ValueError:  # ragged sequence: numpy refuses the coercion
+        arr = np.empty(0, object)
+    if arr.ndim == 2 and arr.dtype != object:
+        n = arr.shape[0]
+        if arr.shape[1] == RAW_HEADER_BYTES:
+            rows = np.ascontiguousarray(arr, np.uint8)
+            bad = None
+            reasons = None
+        else:
+            rows = np.zeros((n, RAW_HEADER_BYTES), np.uint8)
+            bad = np.ones(n, bool)
+            reasons = np.full(
+                n, f"malformed raw header: {arr.shape[1]} bytes != "
+                   f"{RAW_HEADER_BYTES}", object)
+    else:
+        # ragged ingress: per-row length triage
+        items = list(raw)
+        n = len(items)
+        rows = np.zeros((n, RAW_HEADER_BYTES), np.uint8)
+        bad = np.zeros(n, bool)
+        reasons = np.full(n, None, object)
+        for i, r in enumerate(items):
+            b = np.asarray(r)
+            if b.ndim != 1 or b.shape[0] != RAW_HEADER_BYTES:
+                got = b.shape[0] if b.ndim == 1 else f"shape {b.shape}"
+                bad[i] = True
+                reasons[i] = (f"malformed raw header: {got} bytes != "
+                              f"{RAW_HEADER_BYTES}")
+            else:
+                rows[i] = b.astype(np.uint8)
+    if known_model_ids is not None and n:
+        mids = ((rows[:, 13].astype(np.int64) << 8) | rows[:, 14])
+        unknown = np.asarray(
+            [m not in known_model_ids for m in mids.tolist()], bool)
+        if bad is not None:
+            unknown &= ~bad
+        if unknown.any():
+            if bad is None:
+                bad = np.zeros(n, bool)
+                reasons = np.full(n, None, object)
+                rows = rows.copy()
+            for i in np.nonzero(unknown)[0]:
+                reasons[i] = f"unknown model id {int(mids[i])}"
+            bad |= unknown
+            rows[unknown] = 0
+    return rows, bad, reasons
 
 
 def raw_trace(rng: np.random.Generator, n_packets: int, *,

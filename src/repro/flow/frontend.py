@@ -139,11 +139,16 @@ class FlowFrontend:
 
     def extract(self, raw, *, fields: Optional[RawHeaderBatch] = None,
                 cms_est_q: Optional[np.ndarray] = None
-                ) -> Tuple[np.ndarray, RawHeaderBatch, np.ndarray]:
+                ) -> Tuple[np.ndarray, RawHeaderBatch, np.ndarray,
+                           np.ndarray]:
         """Run the stateful stage for one raw header batch: resolve flows,
         update registers/sketch, emit features.  Returns ``(features,
-        fields, is_new)`` with ``features`` (B, N_FLOW_FEATURES) int32 codes
-        at ``params.frac`` (post-update state as each packet observed it).
+        fields, is_new, rejected)`` with ``features`` (B, N_FLOW_FEATURES)
+        int32 codes at ``params.frac`` (post-update state as each packet
+        observed it) and ``rejected`` True where the flow table overflowed
+        and rejected the packet's whole flow (its feature row is zeros and
+        must not be served — ``submit_raw`` turns it into a per-packet
+        error slot; rejected flows never touch register or sketch state).
 
         ``fields`` lets a caller that already parsed the headers (the
         sharded fabric's dispatcher hashes the 5-tuples before routing)
@@ -161,36 +166,73 @@ class FlowFrontend:
         n = fields.model_id.shape[0]
         if n == 0:
             return (np.zeros((0, N_FLOW_FEATURES), np.int32), fields,
-                    np.zeros(0, bool))
+                    np.zeros(0, bool), np.zeros(0, bool))
         self.stats["raw_packets"] += n
         self.stats["raw_batches"] += 1
         words, hashes = FlowTable.pack_keys(fields.key_bytes, self.key_words)
         slots, is_new, rank = self.table.lookup_or_insert(
             words, hashes, fields.ts, want_rank=True)
+        rejected = slots < 0
         cells = self.params.cms_cells(hashes)
         p = self.params
         if self._ones.shape[0] < n:
             self._ones = np.ones(n, np.int32)
-        state, cms, feats = flow_update(
-            self.table.registers, self.cms, slots, cells, fields.ts,
-            fields.length, self._ones[:n], frac=p.frac,
-            ewma_shift=p.ewma_shift, byte_shift=p.byte_shift,
-            dur_shift=p.dur_shift, backend=self.backend, copy=False,
-            rank=rank)
-        if state is not self.table.registers:  # pallas/ref return fresh
-            self.table.registers[:] = np.asarray(state)
-            self.cms[:] = np.asarray(cms)
-        feats = np.asarray(feats)
+        if rejected.any():
+            # overflow degradation: whole flows were rejected, so the kept
+            # packets' slots and within-flow ranks are still exact — run
+            # the update kernel on the kept subset and leave zero rows
+            # (never served) at the rejected positions
+            keep = np.nonzero(~rejected)[0]
+            feats = np.zeros((n, N_FLOW_FEATURES), np.int32)
+            if keep.size:
+                state, cms, kfeats = flow_update(
+                    self.table.registers, self.cms, slots[keep],
+                    cells[keep], fields.ts[keep], fields.length[keep],
+                    self._ones[: keep.size], frac=p.frac,
+                    ewma_shift=p.ewma_shift, byte_shift=p.byte_shift,
+                    dur_shift=p.dur_shift, backend=self.backend, copy=False,
+                    rank=None if rank is None else rank[keep])
+                if state is not self.table.registers:
+                    self.table.registers[:] = np.asarray(state)
+                    self.cms[:] = np.asarray(cms)
+                feats[keep] = np.asarray(kfeats)
+        else:
+            state, cms, feats = flow_update(
+                self.table.registers, self.cms, slots, cells, fields.ts,
+                fields.length, self._ones[:n], frac=p.frac,
+                ewma_shift=p.ewma_shift, byte_shift=p.byte_shift,
+                dur_shift=p.dur_shift, backend=self.backend, copy=False,
+                rank=rank)
+            if state is not self.table.registers:  # pallas/ref return fresh
+                self.table.registers[:] = np.asarray(state)
+                self.cms[:] = np.asarray(cms)
+            feats = np.asarray(feats)
         if cms_est_q is not None:
             if not feats.flags.writeable:
                 feats = np.array(feats)
             feats[:, N_FLOW_FEATURES - 1] = cms_est_q
-        return feats, fields, is_new
+        return feats, fields, is_new, rejected
 
     # -- serving -------------------------------------------------------------
 
+    def _gather(self, feats: np.ndarray, model_id: np.ndarray) -> np.ndarray:
+        """Per-model FeatureSpec gather: land each packet's flow-feature
+        lanes on its model's input columns (one int32 gather — ``-1``
+        columns read the appended zero lane, exactly the device program's
+        ``fused_serve.spec_take`` convention)."""
+        n = feats.shape[0]
+        cols, _ = self.cp.feature_spec_rows(model_id, self.width)
+        feats_z = np.concatenate(
+            [feats, np.zeros((n, 1), np.int32)], axis=1)
+        if self._arange.shape[0] < n:
+            self._arange = np.arange(n).reshape(n, 1)
+        return np.ascontiguousarray(feats_z[self._arange[:n], cols])
+
     def submit_raw(self, raw, *, fields: Optional[RawHeaderBatch] = None,
-                   cms_est_q: Optional[np.ndarray] = None) -> Tuple[int, int]:
+                   cms_est_q: Optional[np.ndarray] = None,
+                   drop_mask: Optional[np.ndarray] = None,
+                   drop_reason: str = "malformed raw header"
+                   ) -> Tuple[int, int]:
         """Feed one raw header batch through flow-update → feature-spec
         gather → the ingress pipeline's **feature-domain** entry.  Returns
         the pipeline's ``(first_ticket, n_packets)``; results arrive
@@ -198,29 +240,93 @@ class FlowFrontend:
         ``fields``/``cms_est_q`` pass through to :meth:`extract` (the
         sharded fabric's pre-parsed, global-sketch entry).
 
+        ``drop_mask`` marks rows the caller's validation already rejected
+        (truncated/malformed headers): they never touch flow state and
+        resolve as :class:`~repro.core.ingress.PacketError` slots carrying
+        ``drop_reason``, interleaved at their submission-order positions.
+        Flow-table overflow rejections from :meth:`extract` degrade the
+        same way (reason ``"flow table overflow"``).
+
         No wire rows are built on ingress any more: the spec gather lands
-        each packet's flow-feature lanes on its model's input columns (one
-        int32 gather — ``-1`` columns read the appended zero lane, exactly
-        the device program's ``fused_serve.spec_take`` convention) and the
-        parsed features go straight to ``IngressPipeline.submit_features``
-        (dedup → cache → lane-pure fused dispatch).  The wire byte layout
-        is paid once, at egress, when a retired batch's results are
-        encoded — byte-identical to the old encapsulate→parse round trip
-        (asserted by the tier-1 suite).
+        each packet's flow-feature lanes on its model's input columns and
+        the parsed features go straight to
+        ``IngressPipeline.submit_features`` (dedup → cache → lane-pure
+        fused dispatch).  The wire byte layout is paid once, at egress,
+        when a retired batch's results are encoded — byte-identical to the
+        old encapsulate→parse round trip (asserted by the tier-1 suite).
         """
-        feats, fields, _ = self.extract(raw, fields=fields,
-                                        cms_est_q=cms_est_q)
+        if drop_mask is not None and drop_mask.any():
+            return self._submit_raw_partial(raw, fields, cms_est_q,
+                                            np.asarray(drop_mask, bool),
+                                            drop_reason)
+        feats, fields, _, rejected = self.extract(raw, fields=fields,
+                                                  cms_est_q=cms_est_q)
         n = feats.shape[0]
         if n == 0:
             return self.pipeline.submit_features(
                 np.zeros((0, self.width), np.int32), np.zeros(0, np.int32))
-        cols, _ = self.cp.feature_spec_rows(fields.model_id, self.width)
-        feats_z = np.concatenate(
-            [feats, np.zeros((n, 1), np.int32)], axis=1)
-        if self._arange.shape[0] < n:
-            self._arange = np.arange(n).reshape(n, 1)
-        gathered = np.ascontiguousarray(feats_z[self._arange[:n], cols])
+        gathered = self._gather(feats, fields.model_id)
+        if rejected.any():
+            return self.pipeline.submit_features(
+                gathered, fields.model_id, error_mask=rejected,
+                error_reason="flow table overflow — flow rejected")
         return self.pipeline.submit_features(gathered, fields.model_id)
+
+    def _submit_raw_partial(self, raw, fields, cms_est_q,
+                            drop: np.ndarray, drop_reason: str
+                            ) -> Tuple[int, int]:
+        """Validation-rejected rows interleave as error tickets while the
+        good subset runs the full flow stage (rejected rows must never
+        touch register/sketch state)."""
+        n_total = drop.size
+        x_full = np.zeros((n_total, self.width), np.int32)
+        mid_full = np.zeros(n_total, np.int32)
+        err = drop.copy()
+        reasons = np.full(n_total, drop_reason, object)
+        good = np.nonzero(~drop)[0]
+        if good.size:
+            if fields is not None:
+                sub_fields = RawHeaderBatch(
+                    key_bytes=fields.key_bytes[good],
+                    model_id=fields.model_id[good],
+                    ts=fields.ts[good], length=fields.length[good])
+                sub_raw = raw
+            else:
+                sub_fields = None
+                sub_raw = np.ascontiguousarray(
+                    np.asarray(raw), np.uint8)[good]
+            sub_est = None if cms_est_q is None else cms_est_q[good]
+            feats, f2, _, rejected = self.extract(
+                sub_raw, fields=sub_fields, cms_est_q=sub_est)
+            x_full[good] = self._gather(feats, f2.model_id)
+            mid_full[good] = f2.model_id
+            if rejected.any():
+                gi = good[rejected]
+                err[gi] = True
+                reasons[gi] = "flow table overflow — flow rejected"
+        return self.pipeline.submit_features(
+            x_full, mid_full, error_mask=err, error_reason=reasons)
+
+    # -- checkpoint / restore (live-migration surface) -----------------------
+
+    def snapshot(self) -> dict:
+        """Checkpoint the whole stateful stage: flow table (live keys +
+        register rows + generation) and the count-min sketch — everything
+        a failover needs to continue this frontend's flows bit-exact
+        elsewhere."""
+        return {"table": self.table.snapshot(), "cms": self.cms.copy()}
+
+    def restore(self, snap: dict) -> None:
+        """Restore a :meth:`snapshot` (table rebuild under a generation
+        bump + sketch copy-in).  Geometry must match — a snapshot is a
+        checkpoint, not a resize tool."""
+        cms = np.asarray(snap["cms"], np.int32)
+        if cms.shape != self.cms.shape:
+            raise ValueError(
+                f"snapshot sketch geometry {cms.shape} != this "
+                f"frontend's {self.cms.shape}")
+        self.table.restore(snap["table"])
+        self.cms[:] = cms
 
     def serve_raw_fused(self, raw) -> np.ndarray:
         """One-dispatch raw serving: the whole cold path — flow-update
@@ -252,6 +358,13 @@ class FlowFrontend:
         # no rank wanted: the in-kernel walk is batch-ordered, unlike the
         # host rank-round lowering extract() feeds
         slots, _ = self.table.lookup_or_insert(words, hashes, fields.ts)
+        if np.any(slots < 0):
+            # the fused bench surface has no per-packet error channel —
+            # keep the overflow loud here rather than serving zero rows
+            raise ValueError(
+                "flow table overflow in serve_raw_fused: "
+                f"{int((slots < 0).sum())} packets' flows rejected — size "
+                "the table above the trace's flow count for the fused path")
         cells = self.params.cms_cells(hashes)
         cols, _ = self.cp.feature_spec_rows(fields.model_id, self.width)
         eng = self.engine

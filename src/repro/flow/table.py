@@ -78,7 +78,7 @@ class FlowTable:
         self.generation = 0  # bumped whenever slots may have moved/reset
         self.stats = {"lookups": 0, "flow_hits": 0, "flows_created": 0,
                       "expiries": 0, "evictions": 0, "flushes": 0,
-                      "compactions": 0}
+                      "compactions": 0, "rejects": 0, "adopted": 0}
 
     # -- introspection -----------------------------------------------------
 
@@ -226,10 +226,17 @@ class FlowTable:
         ``now`` is the per-packet arrival tick (drives idle expiry: a
         matched flow whose state is older than ``idle_timeout`` restarts
         with zeroed registers).  Returns ``(slots, is_new)`` with ``slots``
-        (B,) int64 always valid — the table makes room rather than fail —
-        and ``is_new`` True exactly where a packet (re)opens its flow.
-        Duplicate keys within the batch resolve to one slot; only the first
-        occurrence is marked new.
+        (B,) int64 and ``is_new`` True exactly where a packet (re)opens
+        its flow.  Duplicate keys within the batch resolve to one slot;
+        only the first occurrence is marked new.
+
+        **Hard overflow degrades, never raises**: when one batch carries
+        more unique flows than the table can physically hold (or churn
+        keeps the table from settling), the overflow flows' packets get
+        slot ``-1`` — whole flows are rejected, so the surviving packets'
+        slots (and within-flow ranks) stay valid — and the caller turns
+        them into per-packet errors.  One hostile burst degrades the
+        burst; it cannot kill the server (counted in ``stats["rejects"]``).
 
         ``want_rank=True`` appends each packet's within-flow occurrence
         rank (batch order) to the return — the flow-update lowering needs
@@ -250,14 +257,18 @@ class FlowTable:
         else:
             uidx, inverse = _dedup_rows(words, hashes)
         uwords, uhash, unow = words[uidx], hashes[uidx], now[uidx]
-        if uidx.size > self._cap * self._load_limit:
-            # physically unservable: even a full eviction cannot give every
-            # flow in this batch its own register row — a sizing error, not
-            # a traffic condition, so fail loudly instead of thrashing
-            raise ValueError(
-                f"batch carries {uidx.size} unique flows > the flow "
-                f"table's {int(self._cap * self._load_limit)}-flow load "
-                "limit — raise capacity_pow2 or submit smaller chunks")
+        limit = int(self._cap * self._load_limit)
+        if uidx.size > limit:
+            # physically unservable batch: even a full eviction cannot give
+            # every flow its own register row.  Serve the earliest-arriving
+            # ``limit`` flows and reject the rest per-flow (slot -1) — a
+            # hostile burst costs itself, not the server
+            keep_u = np.zeros(uidx.size, bool)
+            keep_u[np.argsort(uidx)[:limit]] = True
+            sel_u = np.nonzero(keep_u)[0]
+        else:
+            sel_u = np.arange(uidx.size)
+        uwords, uhash, unow = uwords[sel_u], uhash[sel_u], unow[sel_u]
 
         # Generation-stable resolution: maintenance (expire/compact/flush)
         # relocates slots, and a claim can itself trigger a flush — any
@@ -269,8 +280,8 @@ class FlowTable:
         # zeroed in this call — it still (re)opens its flow.  No mark can
         # go stale the other way: nothing inside this call un-zeroes a
         # register row.
-        claimed = np.zeros(uidx.size, bool)
-        reopened = np.zeros(uidx.size, bool)
+        claimed = np.zeros(sel_u.size, bool)
+        reopened = np.zeros(sel_u.size, bool)
         for _ in range(4):
             gen0 = self.generation
             match, _ = self._probe(uwords, uhash)
@@ -285,7 +296,7 @@ class FlowTable:
                 if self._count + n_new > self._cap * self._load_limit:
                     self._flush()
                 continue
-            if self.idle_timeout is not None and n_new < uidx.size:
+            if self.idle_timeout is not None and n_new < sel_u.size:
                 hit = ~miss
                 hs = match[hit]
                 idle = (self.registers[hs, REG_PKT_COUNT] > 0) \
@@ -302,21 +313,120 @@ class FlowTable:
                 self.stats["flows_created"] += int(claimed.sum())
                 break
         else:
-            raise RuntimeError(
-                "flow table could not settle a batch — capacity_pow2 is "
-                "too small for this batch's unique-flow count")
-        new_u = claimed | reopened
+            # pathological churn: the table never settled.  Serve whatever
+            # the final probe resolves and reject the rest per-flow — the
+            # old behavior here was a server-killing RuntimeError
+            match, _ = self._probe(uwords, uhash)
+            unres = match < 0
+            self.stats["flows_created"] += int((claimed & ~unres).sum())
 
-        slots = match[inverse]
+        # assemble over ALL unique flows: overflow/unsettled flows carry
+        # slot -1 (their packets are rejected; everything else is exact)
+        slots_u = np.full(uidx.size, -1, np.int64)
+        slots_u[sel_u] = match
+        new_u = np.zeros(uidx.size, bool)
+        new_u[sel_u] = (claimed | reopened) & (match >= 0)
+
+        slots = slots_u[inverse]
         is_new = np.zeros(n, bool)  # only a flow's first occurrence is new
         is_new[uidx[new_u]] = True
-        self.stats["flow_hits"] += n - int(is_new.sum())
+        n_rej = int((slots < 0).sum())
+        if n_rej:
+            self.stats["rejects"] += n_rej
+        self.stats["flow_hits"] += n - int(is_new.sum()) - n_rej
         if not want_rank:
             return slots, is_new
-        if uidx.size != np.count_nonzero(np.bincount(
-                match, minlength=1)):  # a fold split: groups ≠ flows
+        served = match[match >= 0]
+        if served.size != np.count_nonzero(np.bincount(
+                served, minlength=1)):  # a fold split: groups ≠ flows
             rank = None
         return slots, is_new, rank
+
+    # -- checkpoint / restore / migration ----------------------------------
+
+    def snapshot(self) -> dict:
+        """Checkpoint every live flow — packed key words + register rows +
+        the generation counter (the ROADMAP's "serialize/restore FlowTable
+        under a generation fence" primitive; the failover path's source of
+        truth).  Tombstoned and expired slots are dead state and are not
+        captured; slot numbers are deliberately absent (slots are
+        per-batch handles, never stable flow ids)."""
+        live = np.nonzero(self._slot_state == 1)[0]
+        return {
+            "key_words": self.key_words,
+            "keys": self._keys[live].copy(),
+            "registers": self.registers[live].copy(),
+            "generation": self.generation,
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild the table to hold exactly a :meth:`snapshot`'s flows
+        with their register rows bit-exact (slot numbers may differ — the
+        contract is the key→registers mapping, not the layout).  Always
+        bumps the generation past both the current and the snapshot's
+        value: a restore is a relocation event, and any slots handed out
+        before it are fenced off exactly like a flush's."""
+        if int(snap["key_words"]) != self.key_words:
+            raise ValueError(
+                f"snapshot packs keys into {snap['key_words']} words; "
+                f"this table uses {self.key_words}")
+        keys = np.ascontiguousarray(snap["keys"], np.uint64)
+        regs = np.ascontiguousarray(snap["registers"], np.int32)
+        if keys.shape[0] != regs.shape[0]:
+            raise ValueError("snapshot keys/registers row counts differ")
+        if keys.shape[0] > self._cap * self._load_limit:
+            raise ValueError(
+                f"snapshot holds {keys.shape[0]} live flows > this "
+                f"table's {int(self._cap * self._load_limit)}-flow load "
+                "limit — restore into a table with capacity_pow2 raised")
+        self._slot_state[:] = 0
+        self.registers[:] = 0
+        self._count = 0
+        self._tombstones = 0
+        self.generation = max(self.generation,
+                              int(snap["generation"])) + 1
+        if keys.shape[0]:
+            self._insert_new(keys, hash_words(keys), regs)
+
+    def adopt(self, words: np.ndarray, hashes: np.ndarray,
+              regs: np.ndarray) -> int:
+        """Merge foreign live flows into this table (shard failover: a dead
+        shard's checkpointed flows migrate onto a survivor).  Register rows
+        land bit-exact; keys already present are overwritten with the
+        migrated state (with disjoint RSS key spaces this never happens —
+        the overwrite is the safe resolution if it ever does).  Makes room
+        like the lookup path (compact, then wholesale eviction of
+        residents — migrants carry live state, residents can restart).
+        Returns the number of flows adopted."""
+        words = np.ascontiguousarray(words, np.uint64)
+        regs = np.ascontiguousarray(regs, np.int32)
+        n = words.shape[0]
+        if n == 0:
+            return 0
+        if self._count + n > self._cap * self._load_limit:
+            if self._tombstones:
+                self._compact()
+            if self._count + n > self._cap * self._load_limit:
+                self._flush()
+            if n > self._cap * self._load_limit:
+                raise ValueError(
+                    f"adopting {n} flows exceeds this table's "
+                    f"{int(self._cap * self._load_limit)}-flow load limit")
+        for _ in range(4):
+            gen0 = self.generation
+            match, _ = self._probe(words, hashes)
+            miss = match < 0
+            if miss.any():
+                self._insert_new(words[miss], hashes[miss], regs[miss])
+            if self.generation == gen0:
+                hit = ~miss
+                if hit.any():
+                    self.registers[match[hit]] = regs[hit]
+                self.stats["adopted"] += n
+                return n
+        # unreachable with the capacity check above; degrade rather than
+        # raise mid-failover — unsettled flows restart on their next packet
+        return 0
 
     # -- convenience -------------------------------------------------------
 

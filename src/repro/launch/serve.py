@@ -83,6 +83,8 @@ class PacketServer:
                  adaptive_batch: bool = False,
                  flow_capacity_pow2: int = 14,
                  flow_idle_timeout: Optional[int] = None,
+                 strict_model_ids: bool = False,
+                 max_retries: int = 2, retry_backoff: float = 0.0,
                  clock=None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
@@ -106,8 +108,10 @@ class PacketServer:
             max_inflight=max_inflight, use_cache=use_cache,
             cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
+            max_retries=max_retries, retry_backoff=retry_backoff,
             clock=clock)
         self.max_inflight = max_inflight
+        self.strict_model_ids = strict_model_ids
         self._inflight: deque = deque()
         self._window_t0: Optional[float] = None
         # flow engine (stage 0): created on first submit_raw() so pure
@@ -174,10 +178,25 @@ class PacketServer:
         extraction → per-model FeatureSpec gather → encapsulation → the
         ingress pipeline.  Returns ``(first_ticket, n_packets)``; results
         arrive via :meth:`drain_packets` in submission order, interleaving
-        freely with :meth:`submit_packets` chunks."""
+        freely with :meth:`submit_packets` chunks.
+
+        Rows that fail admission — truncated/oversized headers, a
+        wrong-width batch, or (with ``strict_model_ids=True``) a Model ID
+        not currently installed — never touch flow state and resolve as
+        per-packet :class:`~repro.core.ingress.PacketError` slots at their
+        submission-order positions (:func:`repro.data.packets.
+        validate_raw_rows`); the well-formed rows in the same batch serve
+        normally."""
         if self._window_t0 is None:
             self._window_t0 = time.perf_counter()
-        return self.flow.submit_raw(raw)
+        from ..data.packets import validate_raw_rows
+        known = (self.control_plane.installed_ids()
+                 if self.strict_model_ids else None)
+        rows, bad, reasons = validate_raw_rows(raw, known_model_ids=known)
+        if bad is None:
+            return self.flow.submit_raw(rows)
+        return self.flow.submit_raw(rows, drop_mask=bad,
+                                    drop_reason=reasons)
 
     # -- streaming ingress (coalescing queue + duplicate cache) ------------
 

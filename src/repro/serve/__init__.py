@@ -1,5 +1,9 @@
-"""Sharded serving fabric (scale-out past the single-engine PacketServer)."""
+"""Sharded serving fabric (scale-out past the single-engine PacketServer)
+plus its fault layer (deterministic fault injection, shard failover,
+graceful degradation)."""
 
 from .fabric import ShardedPacketServer, rss_shard
+from .faults import FaultPlan, FaultSpec, InjectedFault, chaos_plan_from_env
 
-__all__ = ["ShardedPacketServer", "rss_shard"]
+__all__ = ["ShardedPacketServer", "rss_shard",
+           "FaultPlan", "FaultSpec", "InjectedFault", "chaos_plan_from_env"]

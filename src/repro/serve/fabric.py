@@ -43,6 +43,28 @@ traffic the way receive-side scaling does on real NICs:
 
 N=1 degenerates to the single-engine behavior (same values, same order),
 which is what lets the whole tier-1 suite double as the fabric's oracle.
+
+**Fault tolerance** (the supervision layer on top of the RSS dispatcher):
+
+* **watchdog + strikes** — every per-shard submit is timed; a submit that
+  exceeds ``watchdog_timeout`` or raises counts a *strike*, and a shard
+  whose own pipeline reports ``max_consecutive_failures`` whole-batch
+  dispatch losses (or that accumulates that many strikes) is **killed**.
+* **failover with live flow-state migration** — killing a shard
+  checkpoints its :class:`~repro.flow.table.FlowTable`
+  (``snapshot()`` under the generation fence) and re-homes every flow
+  onto the survivors by **rendezvous (HRW) hashing**, register rows
+  bit-exact (flow registers update host-side at submit, so even a shard
+  whose device is wedged has correct state to hand over).  Routing uses
+  the same rendezvous function over the same alive set, so the migration
+  destination always equals the future routing destination — and HRW's
+  minimal-disruption property keeps that true across further deaths.
+* **graceful degradation** — a dead shard's unresolved tickets surface as
+  per-packet :class:`~repro.core.ingress.PacketError`\\ s (``drain_packets``
+  never hangs and never loses global order), malformed raw rows are
+  rejected per-packet at admission (:func:`repro.data.packets.
+  validate_raw_rows`), and the last alive shard refuses to die — the
+  fabric degrades to N=1 rather than to zero.
 """
 
 from __future__ import annotations
@@ -56,9 +78,9 @@ import numpy as np
 
 from ..core.control_plane import ControlPlane
 from ..core.inference import DataPlaneEngine
-from ..core.ingress import IngressPipeline, PacketError
+from ..core.ingress import IngressPipeline, PacketError, hash_words
 from ..data.packets import (RAW_KEY_BYTES, RawHeaderBatch,
-                            parse_raw_headers)
+                            parse_raw_headers, validate_raw_rows)
 from ..flow import FlowFrontend, FlowParams
 from ..flow.table import FlowTable
 from ..kernels.flow_update import cms_estimate_update
@@ -83,6 +105,18 @@ def rss_shard(key_hashes: np.ndarray, n_shards: int) -> np.ndarray:
             % np.uint64(n_shards)).astype(np.int64)
 
 
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer — the rendezvous score mixer (vectorized;
+    uint64 wraparound is the point)."""
+    x = np.asarray(x, np.uint64).copy()
+    x ^= x >> np.uint64(33)
+    x *= np.uint64(0xFF51AFD7ED558CCD)
+    x ^= x >> np.uint64(33)
+    x *= np.uint64(0xC4CEB9FE1A85EC53)
+    x ^= x >> np.uint64(33)
+    return x
+
+
 class _Shard:
     """One complete serving stack: engine + pipeline + (lazy) flow frontend,
     pinned to one device."""
@@ -94,7 +128,7 @@ class _Shard:
                  cache_capacity_pow2: int,
                  flush_after: Optional[float], adaptive_batch: bool,
                  flow_capacity_pow2: int, flow_idle_timeout: Optional[int],
-                 clock):
+                 max_retries: int, retry_backoff: float, clock):
         self.shard_id = shard_id
         self.device = device
         self.engine = DataPlaneEngine(
@@ -106,6 +140,7 @@ class _Shard:
             max_inflight=max_inflight, use_cache=use_cache,
             cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
+            max_retries=max_retries, retry_backoff=retry_backoff,
             clock=clock, shard_id=shard_id)
         self._flow_capacity_pow2 = flow_capacity_pow2
         self._flow_idle_timeout = flow_idle_timeout
@@ -121,12 +156,16 @@ class _Shard:
 
 
 class _Submit:
-    """Global-order record of one submit: which shard(s) got its packets."""
+    """Global-order record of one submit: which shard(s) got its packets.
+    ``shard_ids[i] == -1`` marks a packet that never reached a shard
+    (malformed at admission, or its shard's submit failed); ``reasons``
+    then carries its per-packet error string."""
 
-    __slots__ = ("shard_ids",)
+    __slots__ = ("shard_ids", "reasons")
 
-    def __init__(self, shard_ids: np.ndarray):
+    def __init__(self, shard_ids: np.ndarray, reasons=None):
         self.shard_ids = shard_ids  # (n,) int64 — per-packet shard
+        self.reasons = reasons      # None | (n,) object of strings
 
 
 class ShardedPacketServer:
@@ -152,9 +191,16 @@ class ShardedPacketServer:
                  adaptive_batch: bool = False,
                  flow_capacity_pow2: int = 14,
                  flow_idle_timeout: Optional[int] = None,
+                 watchdog_timeout: Optional[float] = None,
+                 max_consecutive_failures: int = 3,
+                 max_retries: int = 2, retry_backoff: float = 0.0,
                  clock=None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if watchdog_timeout is not None and watchdog_timeout <= 0:
+            raise ValueError("watchdog_timeout must be positive (or None)")
+        if max_consecutive_failures < 1:
+            raise ValueError("max_consecutive_failures must be >= 1")
         self.n_shards = n_shards
         self.control_plane = ControlPlane(
             max_models=max_models, max_layers=max_layers,
@@ -174,7 +220,9 @@ class ShardedPacketServer:
                    flush_after=flush_after,
                    adaptive_batch=adaptive_batch,
                    flow_capacity_pow2=flow_capacity_pow2,
-                   flow_idle_timeout=flow_idle_timeout, clock=clock)
+                   flow_idle_timeout=flow_idle_timeout,
+                   max_retries=max_retries, retry_backoff=retry_backoff,
+                   clock=clock)
             for s in range(n_shards)]
         # global count-min sketch (see the module docstring: the one piece
         # of flow state that is a whole-fabric property)
@@ -192,6 +240,22 @@ class ShardedPacketServer:
         self._n_slots = 0              # global tickets this drain window
         self._rr = 0                   # round-robin cursor (stateless path)
         self._window_t0: Optional[float] = None
+        # -- supervision state --------------------------------------------
+        self.watchdog_timeout = watchdog_timeout
+        self.max_consecutive_failures = max_consecutive_failures
+        self.fault_plan = None  # FaultPlan.install() target hook
+        self._alive = np.ones(n_shards, bool)
+        self._strikes = np.zeros(n_shards, np.int64)
+        self._window_degraded = False
+        # rendezvous seeds: deterministic per-shard, so dead-homed flows
+        # re-home identically across fabric instances and across restarts
+        self._hrw_seeds = _mix64(
+            (np.arange(1, n_shards + 1, dtype=np.uint64)
+             * np.uint64(0x9E3779B97F4A7C15)) ^ np.uint64(0xFA17FA17))
+        self.fault_stats: Dict[str, object] = {
+            "deaths": 0, "migrated_flows": 0, "watchdog_strikes": 0,
+            "submit_failures": 0, "rejected_rows": 0, "lost_results": 0,
+            "dead_shards": []}
 
     # -- control plane (broadcast by construction: one shared plane) -------
 
@@ -218,6 +282,84 @@ class ShardedPacketServer:
             for sh in self.shards:
                 sh.pipeline.on_model_removed(model_id)
 
+    # -- supervision: strikes, death, failover -----------------------------
+
+    @property
+    def alive_shards(self) -> List[int]:
+        """Shard ids still accepting traffic (observability + drills)."""
+        return np.nonzero(self._alive)[0].tolist()
+
+    def _rendezvous(self, hashes: np.ndarray) -> np.ndarray:
+        """Highest-random-weight re-homing over the *current* alive set.
+
+        Both the router (``_route``) and the failover migration call this
+        same function, so a migrated flow's destination always equals its
+        future routing destination; and because HRW removal only remaps
+        the flows that had chosen the removed member, the equality
+        survives further deaths without any remap table."""
+        alive = np.nonzero(self._alive)[0]
+        h = np.asarray(hashes, np.uint64)
+        scores = _mix64(h[:, None] ^ self._hrw_seeds[None, alive])
+        return alive[np.argmax(scores, axis=1)].astype(np.int64)
+
+    def _route(self, hashes: np.ndarray) -> np.ndarray:
+        """RSS first; flows homed on a dead shard fall through to
+        rendezvous over the survivors."""
+        sids = rss_shard(hashes, self.n_shards)
+        dead = ~self._alive[sids]
+        if dead.any():
+            sids[dead] = self._rendezvous(
+                np.asarray(hashes, np.uint64)[dead])
+        return sids
+
+    def _strike(self, s: int, reason: str) -> bool:
+        """One supervision strike against shard ``s``; kills it at
+        ``max_consecutive_failures`` (a healthy submit resets the count)."""
+        self._strikes[s] += 1
+        self.fault_stats["watchdog_strikes"] += 1
+        if self._strikes[s] >= self.max_consecutive_failures:
+            return self.kill_shard(s, reason)
+        return False
+
+    def kill_shard(self, s: int, reason: str = "operator kill") -> bool:
+        """Declare shard ``s`` dead and fail its flows over to the
+        survivors (public so chaos drills can kill by hand).
+
+        The dead shard's :class:`FlowTable` is checkpointed under the
+        generation fence and every live flow re-homed by rendezvous —
+        register rows bit-exact, because flow registers update host-side
+        at submit time (a wedged *device* never had the only copy).  The
+        pipeline object stays around so its already-ticketed work drains
+        (as results where the device still answers, as per-packet errors
+        where it does not).  Returns ``False`` — and kills nothing — when
+        ``s`` is the last alive shard: the fabric degrades, it does not
+        go dark."""
+        with self._lock:
+            if not self._alive[s]:
+                return True
+            if int(self._alive.sum()) <= 1:
+                return False
+            self._alive[s] = False
+            self._window_degraded = True
+            sh = self.shards[s]
+            migrated = 0
+            if sh._flow is not None and len(sh._flow.table):
+                snap = sh.flow.snapshot()["table"]
+                keys, regs = snap["keys"], snap["registers"]
+                hashes = hash_words(keys)
+                dest = self._rendezvous(hashes)
+                for t in self.alive_shards:
+                    sel = dest == t
+                    if sel.any():
+                        migrated += self.shards[t].flow.table.adopt(
+                            keys[sel], hashes[sel], regs[sel])
+            self.fault_stats["deaths"] += 1
+            self.fault_stats["migrated_flows"] += migrated
+            self.fault_stats["dead_shards"].append(
+                {"shard": int(s), "reason": reason,
+                 "migrated_flows": int(migrated)})
+            return True
+
     # -- dispatch ----------------------------------------------------------
 
     def dispatch_shards(self, raw) -> np.ndarray:
@@ -235,31 +377,65 @@ class ShardedPacketServer:
         with self._lock:
             if self._window_t0 is None:
                 self._window_t0 = time.perf_counter()
-            fields = parse_raw_headers(raw)
-            n = fields.model_id.shape[0]
+            raw_arr, bad, reasons = validate_raw_rows(raw)
+            n = raw_arr.shape[0]
             first = self._n_slots
             if n == 0:
                 return first, 0
-            _, hashes = FlowTable.pack_keys(fields.key_bytes,
-                                            self._key_words)
-            shard_ids = rss_shard(hashes, self.n_shards)
-            # global CMS: estimates for the WHOLE batch in arrival order
-            # against the fabric sketch — exactly the N=1 computation
-            cells = self.flow_params.cms_cells(hashes)
-            est = cms_estimate_update(self.cms, cells)
-            est_q = sat_shl_np(est, self.flow_params.frac)
-            raw_arr = np.ascontiguousarray(raw, np.uint8)
-            for s in range(self.n_shards):
-                sel = shard_ids == s
-                if not sel.any():
-                    continue
-                fields_s = RawHeaderBatch(
-                    key_bytes=fields.key_bytes[sel],
-                    model_id=fields.model_id[sel],
-                    ts=fields.ts[sel], length=fields.length[sel])
-                self.shards[s].flow.submit_raw(
-                    raw_arr[sel], fields=fields_s, cms_est_q=est_q[sel])
-            self._order.append(_Submit(shard_ids))
+            shard_ids = np.full(n, -1, np.int64)
+            if bad is None:
+                gidx = np.arange(n)
+            else:
+                self.fault_stats["rejected_rows"] += int(bad.sum())
+                gidx = np.nonzero(~bad)[0]
+            if gidx.size:
+                rows = raw_arr if bad is None else raw_arr[gidx]
+                fields = parse_raw_headers(rows)
+                _, hashes = FlowTable.pack_keys(fields.key_bytes,
+                                                self._key_words)
+                sids = self._route(hashes)
+                shard_ids[gidx] = sids
+                # global CMS over *admitted* rows, arrival order, against
+                # the fabric sketch — exactly the N=1 computation (the
+                # single-engine server rejects malformed rows before its
+                # sketch sees them too)
+                cells = self.flow_params.cms_cells(hashes)
+                est = cms_estimate_update(self.cms, cells)
+                est_q = sat_shl_np(est, self.flow_params.frac)
+                for s in np.unique(sids).tolist():
+                    sel = sids == s
+                    fields_s = RawHeaderBatch(
+                        key_bytes=fields.key_bytes[sel],
+                        model_id=fields.model_id[sel],
+                        ts=fields.ts[sel], length=fields.length[sel])
+                    t0 = time.perf_counter()
+                    try:
+                        self.shards[s].flow.submit_raw(
+                            rows[sel], fields=fields_s,
+                            cms_est_q=est_q[sel])
+                    except Exception as e:  # shard wedged at submit
+                        self.fault_stats["submit_failures"] += 1
+                        self._window_degraded = True
+                        if reasons is None:
+                            reasons = np.full(n, None, object)
+                        idx = gidx[sel]
+                        shard_ids[idx] = -1
+                        reasons[idx] = f"shard {s} submit failed: {e}"
+                        self._strike(s, f"submit raised: {e}")
+                        continue
+                    dt = time.perf_counter() - t0
+                    pl = self.shards[s].pipeline
+                    if (pl.consecutive_dispatch_failures
+                            >= self.max_consecutive_failures):
+                        self.kill_shard(
+                            s, "consecutive whole-batch dispatch failures")
+                    elif (self.watchdog_timeout is not None
+                            and dt > self.watchdog_timeout):
+                        self._strike(
+                            s, f"watchdog: submit took {dt * 1e3:.1f}ms")
+                    else:
+                        self._strikes[s] = 0
+            self._order.append(_Submit(shard_ids, reasons))
             self._n_slots += n
             return first, n
 
@@ -272,8 +448,11 @@ class ShardedPacketServer:
                 self._window_t0 = time.perf_counter()
             arr = np.asarray(packets)
             n = arr.shape[0] if arr.ndim == 2 else 0
-            s = self._rr
-            self._rr = (self._rr + 1) % self.n_shards
+            for _ in range(self.n_shards):  # next *alive* shard
+                s = self._rr
+                self._rr = (self._rr + 1) % self.n_shards
+                if self._alive[s]:
+                    break
             first = self._n_slots
             self.shards[s].pipeline.submit(arr)
             self._order.append(
@@ -287,17 +466,38 @@ class ShardedPacketServer:
         submission order; the recorded scatter says how to interleave).
         Per-packet error slots are re-ticketed to their global position."""
         with self._lock:
-            per: List[deque] = [deque(sh.pipeline.drain())
-                                for sh in self.shards]
+            per: List[deque] = []
+            for sh in self.shards:
+                try:
+                    per.append(deque(sh.pipeline.drain()))
+                except Exception as e:  # a wedged shard cannot hang drain
+                    self._window_degraded = True
+                    per.append(deque())
+                    self._strike(sh.shard_id, f"drain raised: {e}")
             out: List[Union[np.ndarray, PacketError]] = []
             for rec in self._order:
-                for sid in rec.shard_ids.tolist():
+                rl = rec.reasons
+                for i, sid in enumerate(rec.shard_ids.tolist()):
+                    if sid < 0:  # never reached a shard
+                        why = (rl[i] if rl is not None and rl[i]
+                               else "rejected at admission")
+                        out.append(PacketError(ticket=len(out), reason=why))
+                        continue
+                    if not per[sid]:  # shard died with this result pending
+                        self.fault_stats["lost_results"] += 1
+                        out.append(PacketError(
+                            ticket=len(out),
+                            reason=f"shard {sid} lost this result "
+                                   "(shard failure)"))
+                        continue
                     r = per[sid].popleft()
                     if isinstance(r, PacketError):
                         r = PacketError(ticket=len(out), reason=r.reason)
                     out.append(r)
-            assert all(not q for q in per), \
-                "shard drained more results than the fabric dispatched"
+            if not self._window_degraded:
+                assert all(not q for q in per), \
+                    "shard drained more results than the fabric dispatched"
+            self._window_degraded = False
             self._order.clear()
             self._n_slots = 0
             self._close_window()
@@ -314,12 +514,12 @@ class ShardedPacketServer:
             self._window_t0 = None
 
     def process(self, packets):
-        """Synchronous single-batch path (shard 0 — API parity with the
-        single-engine server; no flow state involved)."""
+        """Synchronous single-batch path (first alive shard — API parity
+        with the single-engine server; no flow state involved)."""
         with self._lock:
             if self._window_t0 is not None:
                 self.drain_packets()
-            return self.shards[0].engine.process(packets)
+            return self.shards[self.alive_shards[0]].engine.process(packets)
 
     # -- observability -----------------------------------------------------
 
@@ -329,6 +529,7 @@ class ShardedPacketServer:
             per_shard = []
             for sh in self.shards:
                 d = {"shard": sh.shard_id,
+                     "alive": bool(self._alive[sh.shard_id]),
                      "packets_per_s": sh.engine.packets_per_second(),
                      "throughput_gbps": sh.engine.throughput_gbps(),
                      "recompiles": sh.engine.trace_count,
@@ -345,5 +546,7 @@ class ShardedPacketServer:
                 "recompiles": sum(d["recompiles"] for d in per_shard),
                 "table_generation": self.control_plane.version,
                 "flows": sum(d.get("flows", 0) for d in per_shard),
+                "alive_shards": self.alive_shards,
+                "faults": dict(self.fault_stats),
                 "shards": per_shard,
             }

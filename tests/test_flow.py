@@ -305,12 +305,26 @@ class TestFlowTable:
             t.registers[slots, REG_PKT_COUNT] = 1
         assert t.stats["flushes"] > 0  # the churn path actually ran
 
-    def test_batch_beyond_load_limit_fails_loudly(self):
+    def test_batch_beyond_load_limit_degrades_per_flow(self):
+        """Hard overflow (one batch carrying more unique flows than the
+        table can physically hold) rejects the overflow flows with slot
+        -1 instead of raising — the served flows keep exact slots, and
+        the hostile burst costs itself, not the server."""
         rng = np.random.default_rng(6)
         t = FlowTable(2, capacity_pow2=4)  # 16 slots, load limit 11
         w, h = _packed(_keys(rng, 12))
-        with pytest.raises(ValueError, match="unique flows"):
-            t.lookup_or_insert(w, h, np.zeros(12))
+        slots, is_new = t.lookup_or_insert(w, h, np.zeros(12))
+        served = slots >= 0
+        assert int(served.sum()) == 11  # earliest-arriving flows win
+        assert int((~served).sum()) == 1
+        assert t.stats["rejects"] == 1
+        # served flows own distinct register rows and are all (re)opened
+        assert np.unique(slots[served]).size == 11
+        assert is_new[served].all() and not is_new[~served].any()
+        # the rejected flow serves normally once the burst passes
+        t2 = FlowTable(2, capacity_pow2=4)
+        s2, _ = t2.lookup_or_insert(w[~served], h[~served], np.zeros(1))
+        assert (s2 >= 0).all()
 
     @settings(max_examples=8, deadline=None)
     @given(seed=st.integers(min_value=0, max_value=10 ** 6),
@@ -592,13 +606,20 @@ class TestSubmitRawEndToEnd:
         assert srv.engine.trace_count == traces  # first batch pre-traced
 
     def test_empty_and_malformed_raw(self):
+        from repro.core.ingress import PacketError
         rng = np.random.default_rng(4)
         srv = _server(rng)
         first, n = srv.submit_raw(
             np.zeros((0, RAW_HEADER_BYTES), np.uint8))
         assert n == 0
-        with pytest.raises(ValueError, match="raw header"):
-            srv.submit_raw(np.zeros((4, 5), np.uint8))
+        # a wrong-width batch degrades to per-packet error slots (it used
+        # to raise away the whole submit) — the server keeps serving
+        first, n = srv.submit_raw(np.zeros((4, 5), np.uint8))
+        assert n == 4
+        res = srv.drain_packets()
+        assert len(res) == 4
+        assert all(isinstance(r, PacketError) for r in res)
+        assert "malformed raw header" in res[0].reason
 
     def test_converged_flows_short_circuit_through_result_cache(self):
         """Steady periodic traffic converges its EWMA registers; repeated
