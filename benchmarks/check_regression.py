@@ -45,6 +45,10 @@ import sys
 #                        speed must not gate them, but a full benchmark run
 #                        must
 #   "bool"             — must stay truthy if the baseline has it truthy
+#   "latency"          — baseline-relative UPPER bound (machine-dependent
+#                        wall-clock, so skipped by --ratios-only like
+#                        "throughput"): fails when the current value
+#                        exceeds baseline * (1 + tolerance)
 TRACKED = {
     ("mixed", "batched_pps"): "throughput",
     ("mixed", "speedup_mixed"): ("floor", 3.0),   # PR-1 acceptance: >= 3x
@@ -74,6 +78,14 @@ TRACKED = {
     ("faults", "all_tickets_resolved"): "bool",
     ("faults", "bitexact_after_migration"): "bool",
     ("faults", "zero_retraces_on_survivors"): "bool",
+    # PR-8: per-packet latency percentiles (histogram readout) gated as
+    # baseline-relative upper bounds, and the telemetry layer's overhead
+    # contract — instrumented steady throughput >= 0.95x uninstrumented,
+    # with tracing never retracing a jit program
+    ("pipeline", "latency", "steady_p99_us"): "latency",
+    ("pipeline", "latency", "cold_p99_us"): "latency",
+    ("observability", "instrumented_ratio"): ("floor", 0.95),
+    ("observability", "zero_retraces"): "bool",
     ("trend_validated",): "bool",
 }
 
@@ -165,7 +177,7 @@ def _compare_impl(current: dict, baseline: dict, tolerance: float,
                     f"{name}: {cur:.4g} below the full-mode cold-path "
                     f"floor {bound:.4g}")
     for path, kind in TRACKED.items():
-        if ratios_only and kind == "throughput":
+        if ratios_only and kind in ("throughput", "latency"):
             continue
         if not isinstance(kind, tuple) and len(path) > 1 \
                 and _get(baseline, (path[0],)) is None:
@@ -190,6 +202,12 @@ def _compare_impl(current: dict, baseline: dict, tolerance: float,
         if kind == "bool":
             if bool(base) and not bool(cur):
                 failures.append(f"{name}: was true in baseline, now false")
+        elif kind == "latency":
+            ceiling = 1.0 + tolerance
+            if cur > base * ceiling:
+                failures.append(
+                    f"{name}: {cur:.4g} > {ceiling:.0%} of baseline "
+                    f"{base:.4g} ({cur / base:.0%})")
         else:
             if cur < base * floor:
                 failures.append(

@@ -236,6 +236,10 @@ class ControlPlane:
         # fired between table preparation and the commit point of every
         # install so the all-or-nothing swap property is testable
         self.fault_plan = None
+        # obs EventLog hook (a serving wrapper attaches its shared log):
+        # every committed table swap — the generation bumps — is recorded
+        # so a failover/install history reconstructs from the log alone
+        self.events = None
         w_dtype = np.dtype(self.fmt.dtype)
         self._w = np.zeros((max_models, max_layers, max_width, max_width), w_dtype)
         self._b = np.zeros((max_models, max_layers, max_width), np.int32)
@@ -321,6 +325,15 @@ class ControlPlane:
         plan = self.fault_plan
         if plan is not None:
             plan.fire(site, shard=-1)
+
+    def _emit(self, kind: str, model_id: int, **detail) -> None:
+        """Record a committed table swap in the attached event log (no-op
+        without one).  Called *after* the version bump, so the event's
+        generation is the one the swap published."""
+        events = self.events
+        if events is not None:
+            events.emit(kind, shard=-1, generation=self._version,
+                        model_id=int(model_id), **detail)
 
     def _begin_write(self) -> None:
         """Copy-on-write: detach the MLP-family back buffers from any
@@ -421,6 +434,7 @@ class ControlPlane:
             self._next_slot = next_slot
             self._mlp_gen += 1
             self._version += 1
+            self._emit("install", model_id, family="mlp", slot=slot)
             return slot
 
     def installed_ids(self) -> frozenset:
@@ -442,6 +456,7 @@ class ControlPlane:
                 self._free_slots.append(slot)
                 self._mlp_gen += 1
                 self._version += 1
+                self._emit("remove", model_id, family="mlp")
                 return
             fslot = self._f_slots.pop(model_id, None)
             if fslot is None:
@@ -452,6 +467,7 @@ class ControlPlane:
             self._f_free_slots.append(fslot)
             self._forest_gen += 1
             self._version += 1
+            self._emit("remove", model_id, family="forest")
 
     # -- tree-ensemble family -------------------------------------------
 
@@ -584,6 +600,8 @@ class ControlPlane:
             self._forest_ever = True
             self._forest_gen += 1
             self._version += 1
+            self._emit("install_forest", model_id, family="forest",
+                       slot=slot)
             return slot
 
     def is_forest_id(self, model_ids: np.ndarray) -> np.ndarray:
@@ -645,6 +663,7 @@ class ControlPlane:
                 smap, rows, lens
             self._specs[model_id] = spec
             self._version += 1
+            self._emit("install_feature_spec", model_id, slot=slot)
             return slot
 
     def remove_feature_spec(self, model_id: int) -> None:
@@ -656,6 +675,7 @@ class ControlPlane:
             self._spec_map = self._spec_map.copy()
             self._spec_map[model_id] = -1  # row slot retired (specs are tiny)
             self._version += 1
+            self._emit("remove", model_id, family="spec")
 
     def feature_spec(self, model_id: int) -> Optional[FeatureSpec]:
         with self._lock:

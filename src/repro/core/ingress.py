@@ -83,6 +83,7 @@ import numpy as np
 
 from .packet import (FEATURE_BYTES, HEADER_BYTES, emit_results_np,
                      parse_packets_np)
+from ..obs import Observability, StatsAdapter
 
 __all__ = ["PacketError", "BatchError", "ResultCache", "IngressPipeline",
            "pack_rows", "STATUS_PENDING", "STATUS_READY", "STATUS_ERROR"]
@@ -629,7 +630,8 @@ class IngressPipeline:
                  flush_after: Optional[float] = None,
                  adaptive_batch: bool = False,
                  clock=None, shard_id: int = 0,
-                 max_retries: int = 2, retry_backoff: float = 0.0):
+                 max_retries: int = 2, retry_backoff: float = 0.0,
+                 obs: Optional[Observability] = None):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
         if max_inflight <= 0:
@@ -759,12 +761,97 @@ class IngressPipeline:
         from ..serve.faults import chaos_plan_from_env
         self.fault_plan = chaos_plan_from_env()
 
-        self.stats = {"packets": 0, "cache_hits": 0, "coalesced": 0,
-                      "dispatched_rows": 0, "padded_rows": 0, "batches": 0,
-                      "errors": 0, "dispatch_retries": 0,
-                      "dispatch_failures": 0, "quarantined_rows": 0,
-                      "probe_batches": 0, "corrupted_rows": 0,
-                      "lane_batches": {"mlp": 0, "forest": 0, "both": 0}}
+        # Observability (PR 8): counters live in the metrics registry under
+        # the canonical <subsystem>_<noun>_total names; ``self.stats`` is a
+        # thin adapter keeping the pre-PR-8 keys working (reads and the
+        # ``stats["k"] += n`` pattern) as aliases.  A server passes its
+        # shared ``obs`` so every shard's cells land in one registry under
+        # a shard label; a standalone pipeline gets a private one.
+        self.obs = obs if obs is not None else Observability(clock=clock)
+        self.tracer = self.obs.make_tracer(shard=self.shard_id, clock=clock)
+        if self.fault_plan is not None \
+                and getattr(self.fault_plan, "events", None) is None:
+            # chaos-mode self-installed plans log their firings here too
+            self.fault_plan.events = self.obs.events
+        reg = self.obs.registry
+        sid = self.shard_id
+        stats = StatsAdapter()
+
+        def _c(canonical: str, alias: str) -> None:
+            stats.bind(canonical, reg.counter(canonical, shard=sid), alias)
+
+        _c("ingress_packets_total", "packets")
+        _c("ingress_cache_hits_total", "cache_hits")
+        _c("ingress_coalesced_total", "coalesced")
+        _c("ingress_dispatched_rows_total", "dispatched_rows")
+        _c("ingress_padded_rows_total", "padded_rows")
+        _c("ingress_batches_total", "batches")
+        _c("ingress_errors_total", "errors")
+        _c("ingress_dispatch_retries_total", "dispatch_retries")
+        _c("ingress_dispatch_failures_total", "dispatch_failures")
+        _c("ingress_quarantined_rows_total", "quarantined_rows")
+        _c("ingress_probe_batches_total", "probe_batches")
+        _c("ingress_corrupted_rows_total", "corrupted_rows")
+        lanes_sub = StatsAdapter()
+        for lane in ("mlp", "forest", "both"):
+            lanes_sub.bind(lane, reg.counter("ingress_lane_batches_total",
+                                             shard=sid, lane=lane))
+        stats.bind_nested("lane_batches", lanes_sub)
+        self.stats = stats
+
+        # Pull-mirrored state (zero hot-path cost): cache/pending counters,
+        # occupancy gauges, admission-gate state, engine totals and the
+        # retrace count are sampled into the registry at export time.
+        cache_cells = {
+            "cache_hits_total": reg.counter("cache_hits_total", shard=sid),
+            "cache_misses_total": reg.counter("cache_misses_total",
+                                              shard=sid),
+            "cache_insertions_total": reg.counter("cache_insertions_total",
+                                                  shard=sid),
+            "cache_flushes_total": reg.counter("cache_flushes_total",
+                                               shard=sid),
+            "cache_compactions_total": reg.counter("cache_compactions_total",
+                                                   shard=sid),
+            "cache_stale_inserts_total": reg.counter(
+                "cache_stale_inserts_total", shard=sid),
+        }
+        g_entries = reg.gauge("cache_entries", shard=sid)
+        g_tomb = reg.gauge("cache_tombstones", shard=sid)
+        g_gate = reg.gauge("ingress_gate_open",
+                           "cold-traffic admission gate state", shard=sid)
+        g_inflight = reg.gauge("ingress_inflight_batches", shard=sid)
+        eng_cells = {
+            "engine_packets_total": reg.counter("engine_packets_total",
+                                                shard=sid),
+            "engine_bytes_in_total": reg.counter("engine_bytes_in_total",
+                                                 shard=sid),
+            "engine_bytes_out_total": reg.counter("engine_bytes_out_total",
+                                                  shard=sid),
+        }
+        c_retrace = reg.counter("engine_retraces_total",
+                                "jit traces per engine", shard=sid)
+
+        def _collect() -> None:
+            cache = self.cache
+            if cache is not None:
+                cache_cells["cache_hits_total"].set(cache.hits)
+                cache_cells["cache_misses_total"].set(cache.misses)
+                cache_cells["cache_insertions_total"].set(cache.insertions)
+                cache_cells["cache_flushes_total"].set(cache.flushes)
+                cache_cells["cache_compactions_total"].set(cache.compactions)
+                cache_cells["cache_stale_inserts_total"].set(
+                    cache.stale_inserts_dropped)
+                g_entries.set(len(cache))
+                g_tomb.set(cache.tombstones)
+            g_gate.set(1.0 if self._gate_open else 0.0)
+            g_inflight.set(len(self._inflight))
+            es = self.engine.stats
+            eng_cells["engine_packets_total"].set(int(es["packets"]))
+            eng_cells["engine_bytes_in_total"].set(int(es["bytes_in"]))
+            eng_cells["engine_bytes_out_total"].set(int(es["bytes_out"]))
+            c_retrace.set(int(self.engine.trace_count))
+
+        reg.register_collector(_collect)
 
     # -- ticket bookkeeping ------------------------------------------------
 
@@ -793,6 +880,8 @@ class IngressPipeline:
             for t, r in zip(tickets.tolist(), reason):
                 self._errors[t] = PacketError(ticket=t, reason=str(r))
         self.stats["errors"] += tickets.size
+        if self.tracer is not None:
+            self.tracer.on_retire(tickets)
 
     # -- ingress -----------------------------------------------------------
 
@@ -937,6 +1026,8 @@ class IngressPipeline:
         has the parsed fields (``parsed = (mid, flags, x0)``).
         """
         n = rows.shape[0]
+        if self.tracer is not None:
+            self.tracer.on_submit(tickets)
         words = pack_rows(rows, self.key_words)
         hashes = hash_words(words)
         generation = self.cp.version
@@ -951,6 +1042,8 @@ class IngressPipeline:
             n_hit = int(hit_mask.sum())
             self.stats["cache_hits"] += n_hit
             self.engine.credit_packets(n_hit)  # served without a dispatch
+            if self.tracer is not None:
+                self.tracer.on_retire(ht)  # short-circuit span closes here
             miss = ~hit_mask
             miss_sel = np.nonzero(miss)[0]
             miss_tickets = tickets[miss_sel]
@@ -1011,6 +1104,8 @@ class IngressPipeline:
             fresh_words = uniq_words[fresh]
             fresh_hashes = uniq_hashes[fresh]
             fresh_idx = uniq_global[fresh]
+            if self.tracer is not None:
+                self.tracer.on_stage(miss_tickets[uniq_idx[fresh]], fresh_idx)
             if self._pending is not None and self._admit():
                 idx_bytes = fresh_idx.reshape(-1, 1).view(np.uint8)
                 self._pending.insert(fresh_words, idx_bytes,
@@ -1055,11 +1150,17 @@ class IngressPipeline:
             obs = short_circuited / n
             self._dup_ewma = (self._ADMIT_ALPHA * self._dup_ewma
                               + (1.0 - self._ADMIT_ALPHA) * obs)
+            was_open = self._gate_open
             if self._gate_open:
                 self._gate_open = self._dup_ewma >= self._ADMIT_THRESHOLD
             else:
                 self._gate_open = (self._dup_ewma >= self._ADMIT_THRESHOLD
                                    / self._PROBE_STRIDE)
+            if self._gate_open != was_open:
+                self.obs.events.emit(
+                    "gate_open" if self._gate_open else "gate_closed",
+                    shard=self.shard_id, generation=self.cp.version,
+                    dup_ewma=round(self._dup_ewma, 4))
 
     def _admit(self) -> bool:
         """True when cache/pending insert sweeps are currently worth their
@@ -1191,6 +1292,8 @@ class IngressPipeline:
         self.stats["dispatched_rows"] += size
         self.stats["batches"] += 1
         self.stats["lane_batches"][lanes] += 1
+        if self.tracer is not None:
+            self.tracer.on_dispatch(o.miss_idx[:count])
 
     def _run_guarded(self, x0: np.ndarray, mid: np.ndarray, lanes: str):
         """One device dispatch under the fault plan and the bounded
@@ -1347,6 +1450,8 @@ class IngressPipeline:
             return
         # a whole batch came back: the device is alive
         self.consecutive_dispatch_failures = 0
+        if self.tracer is not None:
+            self.tracer.on_device_done(rec.miss_idx)
         # the one egress encode of the serving path (host twin of the
         # device deparser, byte-identical): int32 output codes → wire rows
         rows = emit_results_np(self._stg_mid[rec.buf_idx][: rec.count],
@@ -1406,6 +1511,8 @@ class IngressPipeline:
         retired as failures resolve their tickets to PacketError slots."""
         while self._chunks and self._chunks[0].hi <= self._miss_done:
             ch = self._chunks.popleft()
+            if self.tracer is not None:
+                self.tracer.on_retire(ch.tickets)
             fail = self._miss_failed[ch.miss_idx]
             if fail.any():
                 bad = fail > 0
@@ -1483,6 +1590,10 @@ class IngressPipeline:
         self._miss_failed[:] = 0
         if self._pending is not None:
             self._pending.clear()
+        if self.tracer is not None:
+            # tickets and miss indices restart at zero: open spans from the
+            # old namespace must not alias the new one (closed spans keep)
+            self.tracer.clear_open()
 
     # -- maintenance hooks -------------------------------------------------
 

@@ -76,9 +76,25 @@ class FlowTable:
         self._count = 0
         self._tombstones = 0
         self.generation = 0  # bumped whenever slots may have moved/reset
-        self.stats = {"lookups": 0, "flow_hits": 0, "flows_created": 0,
-                      "expiries": 0, "evictions": 0, "flushes": 0,
-                      "compactions": 0, "rejects": 0, "adopted": 0}
+        # Canonical metric names (``flow_<noun>_total`` — see README
+        # "Observability") with the pre-PR-8 keys as aliases for one
+        # release.  Cells are standalone counters; a serving wrapper grafts
+        # them into its shared registry (``MetricsRegistry.attach``) so a
+        # fabric exports per-shard flow stats without touching this class.
+        from ..obs import Counter, StatsAdapter
+        stats = StatsAdapter()
+        for canonical, legacy in (
+                ("flow_lookups_total", "lookups"),
+                ("flow_hits_total", "flow_hits"),
+                ("flow_created_total", "flows_created"),
+                ("flow_expiries_total", "expiries"),
+                ("flow_evictions_total", "evictions"),
+                ("flow_flushes_total", "flushes"),
+                ("flow_compactions_total", "compactions"),
+                ("flow_rejects_total", "rejects"),
+                ("flow_adopted_total", "adopted")):
+            stats.bind(canonical, Counter(), legacy)
+        self.stats = stats
 
     # -- introspection -----------------------------------------------------
 

@@ -85,9 +85,13 @@ class PacketServer:
                  flow_idle_timeout: Optional[int] = None,
                  strict_model_ids: bool = False,
                  max_retries: int = 2, retry_backoff: float = 0.0,
-                 clock=None):
+                 clock=None, obs=None, trace_every: int = 0):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if obs is None:
+            from ..obs import Observability
+            obs = Observability(clock=clock, trace_every=trace_every)
+        self.obs = obs
         self.control_plane = ControlPlane(
             max_models=max_models, max_layers=max_layers,
             max_width=max_width, weight_bits=weight_bits,
@@ -109,7 +113,8 @@ class PacketServer:
             cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
             max_retries=max_retries, retry_backoff=retry_backoff,
-            clock=clock)
+            clock=clock, obs=obs)
+        self.control_plane.events = obs.events
         self.max_inflight = max_inflight
         self.strict_model_ids = strict_model_ids
         self._inflight: deque = deque()
@@ -163,6 +168,16 @@ class PacketServer:
             self._flow = FlowFrontend(
                 self.ingress, capacity_pow2=self._flow_capacity_pow2,
                 idle_timeout=self._flow_idle_timeout)
+            # graft the flow engine's standalone counters into the shared
+            # registry, plus a live occupancy gauge
+            reg = self.obs.registry
+            flow = self._flow
+            for name, cell in flow.table.stats.cells():
+                reg.attach(name, cell)
+            for name, cell in flow.stats.cells():
+                reg.attach(name, cell)
+            g_occ = reg.gauge("flow_occupancy")
+            reg.register_collector(lambda: g_occ.set(len(flow.table)))
         return self._flow
 
     def install_feature_spec(self, model_id: int, columns) -> int:
@@ -407,3 +422,82 @@ class LMServer:
     def tokens_per_second(self) -> float:
         s = self.stats
         return s["tokens"] / s["seconds"] if s["seconds"] else 0.0
+
+
+def main(argv=None) -> int:
+    """``python -m repro.launch.serve`` — drive a synthetic raw-header trace
+    through a (possibly sharded) server and export the telemetry snapshot.
+
+    The point is operational: CI's smoke bench runs this with
+    ``--metrics-json`` to archive a metrics artifact per build, and
+    ``--prometheus`` prints the text-exposition form for eyeballing."""
+    import argparse
+    import json
+
+    p = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="serve a synthetic raw trace; export telemetry")
+    p.add_argument("--packets", type=int, default=4096,
+                   help="total raw packets to serve (default 4096)")
+    p.add_argument("--shards", type=int, default=1,
+                   help="1 = PacketServer, >1 = ShardedPacketServer")
+    p.add_argument("--flows", type=int, default=64,
+                   help="synthetic flow count (default 64)")
+    p.add_argument("--chunk", type=int, default=512,
+                   help="submit chunk size (default 512)")
+    p.add_argument("--trace-every", type=int, default=0,
+                   help="sample 1-in-N packet lifecycles (0 = off)")
+    p.add_argument("--metrics-json", metavar="PATH", default=None,
+                   help="write the observability snapshot as JSON")
+    p.add_argument("--prometheus", action="store_true",
+                   help="print the Prometheus text exposition to stdout")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    from ..data.packets import raw_trace
+
+    width = 16
+    kw: Dict[str, Any] = dict(
+        max_models=4, max_width=width, ingress_batch=256, max_inflight=2,
+        flow_capacity_pow2=12, trace_every=args.trace_every)
+    if args.shards > 1:
+        srv: Any = ShardedPacketServer(n_shards=args.shards, **kw)
+    else:
+        srv = PacketServer(**kw)
+    rng = np.random.default_rng(args.seed)
+    r = np.random.default_rng(args.seed + 1)
+    w1 = r.normal(size=(width, width)).astype(np.float32) * 0.3
+    w2 = r.normal(size=(width, 4)).astype(np.float32) * 0.3
+    srv.install(1, [(w1, np.zeros(width, np.float32)),
+                    (w2, np.zeros(4, np.float32))],
+                ["relu"], final_activation="sigmoid")
+    srv.install_feature_spec(1, (2, 3, 4, 5) * (width // 4))
+
+    raw = raw_trace(rng, args.packets, n_flows=args.flows,
+                    model_ids=(1,), pattern="mixed")
+    t0 = time.perf_counter()
+    for i in range(0, raw.shape[0], args.chunk):
+        srv.submit_raw(raw[i: i + args.chunk])
+    out = srv.drain_packets()
+    dt = time.perf_counter() - t0
+    n_err = sum(1 for o in out if not isinstance(o, np.ndarray))
+
+    snap = srv.obs.snapshot()
+    snap["run"] = {"packets": int(raw.shape[0]), "errors": int(n_err),
+                   "seconds": dt, "packets_per_s": raw.shape[0] / dt,
+                   "shards": args.shards}
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True, default=str)
+    if args.prometheus:
+        print(srv.obs.to_prometheus_text(), end="")
+    print(f"served {raw.shape[0]} packets on {args.shards} shard(s) in "
+          f"{dt * 1e3:.1f} ms ({raw.shape[0] / dt:,.0f} pkt/s), "
+          f"{n_err} error slots"
+          + (f"; metrics -> {args.metrics_json}"
+             if args.metrics_json else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

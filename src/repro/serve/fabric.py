@@ -86,6 +86,7 @@ from ..flow.table import FlowTable
 from ..kernels.flow_update import cms_estimate_update
 from ..kernels.ref import sat_shl_np
 from ..launch.mesh import shard_devices
+from ..obs import Observability, StatsAdapter
 
 __all__ = ["ShardedPacketServer", "rss_shard"]
 
@@ -128,7 +129,8 @@ class _Shard:
                  cache_capacity_pow2: int,
                  flush_after: Optional[float], adaptive_batch: bool,
                  flow_capacity_pow2: int, flow_idle_timeout: Optional[int],
-                 max_retries: int, retry_backoff: float, clock):
+                 max_retries: int, retry_backoff: float, clock,
+                 obs: Optional[Observability] = None):
         self.shard_id = shard_id
         self.device = device
         self.engine = DataPlaneEngine(
@@ -141,7 +143,7 @@ class _Shard:
             cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
             max_retries=max_retries, retry_backoff=retry_backoff,
-            clock=clock, shard_id=shard_id)
+            clock=clock, shard_id=shard_id, obs=obs)
         self._flow_capacity_pow2 = flow_capacity_pow2
         self._flow_idle_timeout = flow_idle_timeout
         self._flow: Optional[FlowFrontend] = None
@@ -152,6 +154,16 @@ class _Shard:
             self._flow = FlowFrontend(
                 self.pipeline, capacity_pow2=self._flow_capacity_pow2,
                 idle_timeout=self._flow_idle_timeout)
+            # graft the (standalone) flow counters into the shared
+            # registry under this shard's label, plus an occupancy gauge
+            reg = self.pipeline.obs.registry
+            flow = self._flow
+            for name, cell in flow.table.stats.cells():
+                reg.attach(name, cell, shard=self.shard_id)
+            for name, cell in flow.stats.cells():
+                reg.attach(name, cell, shard=self.shard_id)
+            g_occ = reg.gauge("flow_occupancy", shard=self.shard_id)
+            reg.register_collector(lambda: g_occ.set(len(flow.table)))
         return self._flow
 
 
@@ -194,7 +206,8 @@ class ShardedPacketServer:
                  watchdog_timeout: Optional[float] = None,
                  max_consecutive_failures: int = 3,
                  max_retries: int = 2, retry_backoff: float = 0.0,
-                 clock=None):
+                 clock=None, obs: Optional[Observability] = None,
+                 trace_every: int = 0):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         if watchdog_timeout is not None and watchdog_timeout <= 0:
@@ -202,12 +215,17 @@ class ShardedPacketServer:
         if max_consecutive_failures < 1:
             raise ValueError("max_consecutive_failures must be >= 1")
         self.n_shards = n_shards
+        # one telemetry bundle for the whole fabric: shards share the
+        # registry (distinguished by the ``shard`` label) and the event log
+        self.obs = obs if obs is not None else Observability(
+            clock=clock, trace_every=trace_every)
         self.control_plane = ControlPlane(
             max_models=max_models, max_layers=max_layers,
             max_width=max_width, weight_bits=weight_bits,
             frac_bits=frac_bits, max_forests=max_forests,
             max_trees=max_trees, max_nodes=max_nodes,
             max_tree_depth=max_tree_depth)
+        self.control_plane.events = self.obs.events
         devices = shard_devices(n_shards)
         self.shards = [
             _Shard(s, self.control_plane, devices[s],
@@ -222,7 +240,7 @@ class ShardedPacketServer:
                    flow_capacity_pow2=flow_capacity_pow2,
                    flow_idle_timeout=flow_idle_timeout,
                    max_retries=max_retries, retry_backoff=retry_backoff,
-                   clock=clock)
+                   clock=clock, obs=self.obs)
             for s in range(n_shards)]
         # global count-min sketch (see the module docstring: the one piece
         # of flow state that is a whole-fabric property)
@@ -252,10 +270,30 @@ class ShardedPacketServer:
         self._hrw_seeds = _mix64(
             (np.arange(1, n_shards + 1, dtype=np.uint64)
              * np.uint64(0x9E3779B97F4A7C15)) ^ np.uint64(0xFA17FA17))
-        self.fault_stats: Dict[str, object] = {
-            "deaths": 0, "migrated_flows": 0, "watchdog_strikes": 0,
-            "submit_failures": 0, "rejected_rows": 0, "lost_results": 0,
-            "dead_shards": []}
+        # fault_stats rides on the shared registry: canonical
+        # ``fabric_*_total`` counters with the historical short keys kept
+        # as read/write aliases for one release
+        reg = self.obs.registry
+        fs = StatsAdapter()
+        for canon, alias in (
+                ("fabric_deaths_total", "deaths"),
+                ("fabric_migrated_flows_total", "migrated_flows"),
+                ("fabric_watchdog_strikes_total", "watchdog_strikes"),
+                ("fabric_submit_failures_total", "submit_failures"),
+                ("fabric_rejected_rows_total", "rejected_rows"),
+                ("fabric_lost_results_total", "lost_results"),
+                ("fabric_degraded_windows_total", "degraded_windows")):
+            fs.bind(canon, reg.counter(canon), alias)
+        fs.bind_value("dead_shards", [])
+        self.fault_stats = fs
+        g_alive = reg.gauge("fabric_alive_shards")
+        reg.register_collector(
+            lambda: g_alive.set(int(self._alive.sum())))
+        # per-shard submit latency (wall time of one shard's slice of a
+        # raw submit — the watchdog's own measurement, exported)
+        self._submit_hist = [
+            reg.histogram("fabric_submit_seconds", shard=s)
+            for s in range(n_shards)]
 
     # -- control plane (broadcast by construction: one shared plane) -------
 
@@ -317,6 +355,10 @@ class ShardedPacketServer:
         ``max_consecutive_failures`` (a healthy submit resets the count)."""
         self._strikes[s] += 1
         self.fault_stats["watchdog_strikes"] += 1
+        self.obs.events.emit(
+            "watchdog_strike", shard=int(s),
+            generation=self.control_plane.version,
+            reason=reason, strikes=int(self._strikes[s]))
         if self._strikes[s] >= self.max_consecutive_failures:
             return self.kill_shard(s, reason)
         return False
@@ -342,6 +384,12 @@ class ShardedPacketServer:
             self._alive[s] = False
             self._window_degraded = True
             sh = self.shards[s]
+            flows_at_death = (len(sh._flow.table)
+                              if sh._flow is not None else 0)
+            self.obs.events.emit(
+                "shard_killed", shard=int(s),
+                generation=self.control_plane.version,
+                reason=reason, flows=int(flows_at_death))
             migrated = 0
             if sh._flow is not None and len(sh._flow.table):
                 snap = sh.flow.snapshot()["table"]
@@ -351,8 +399,13 @@ class ShardedPacketServer:
                 for t in self.alive_shards:
                     sel = dest == t
                     if sel.any():
-                        migrated += self.shards[t].flow.table.adopt(
+                        adopted = self.shards[t].flow.table.adopt(
                             keys[sel], hashes[sel], regs[sel])
+                        migrated += adopted
+                        self.obs.events.emit(
+                            "flow_migration", shard=int(t),
+                            generation=self.control_plane.version,
+                            source=int(s), flows=int(adopted))
             self.fault_stats["deaths"] += 1
             self.fault_stats["migrated_flows"] += migrated
             self.fault_stats["dead_shards"].append(
@@ -424,6 +477,7 @@ class ShardedPacketServer:
                         self._strike(s, f"submit raised: {e}")
                         continue
                     dt = time.perf_counter() - t0
+                    self._submit_hist[s].observe(dt)
                     pl = self.shards[s].pipeline
                     if (pl.consecutive_dispatch_failures
                             >= self.max_consecutive_failures):
@@ -497,6 +551,12 @@ class ShardedPacketServer:
             if not self._window_degraded:
                 assert all(not q for q in per), \
                     "shard drained more results than the fabric dispatched"
+            else:
+                self.fault_stats["degraded_windows"] += 1
+                self.obs.events.emit(
+                    "window_degraded", shard=-1,
+                    generation=self.control_plane.version,
+                    packets=len(out))
             self._window_degraded = False
             self._order.clear()
             self._n_slots = 0
@@ -524,29 +584,33 @@ class ShardedPacketServer:
     # -- observability -----------------------------------------------------
 
     def stats(self) -> Dict[str, object]:
-        """Fabric-level aggregates plus the per-shard breakdown."""
-        with self._lock:
-            per_shard = []
-            for sh in self.shards:
-                d = {"shard": sh.shard_id,
-                     "alive": bool(self._alive[sh.shard_id]),
-                     "packets_per_s": sh.engine.packets_per_second(),
-                     "throughput_gbps": sh.engine.throughput_gbps(),
-                     "recompiles": sh.engine.trace_count,
-                     "cache_hit_rate": sh.pipeline.cache_hit_rate(),
-                     "packets": sh.pipeline.stats["packets"]}
-                if sh._flow is not None:
-                    d["flows"] = len(sh._flow.table)
-                per_shard.append(d)
-            return {
-                "n_shards": self.n_shards,
-                "packets_per_s": sum(d["packets_per_s"] for d in per_shard),
-                "throughput_gbps": sum(d["throughput_gbps"]
-                                       for d in per_shard),
-                "recompiles": sum(d["recompiles"] for d in per_shard),
-                "table_generation": self.control_plane.version,
-                "flows": sum(d.get("flows", 0) for d in per_shard),
-                "alive_shards": self.alive_shards,
-                "faults": dict(self.fault_stats),
-                "shards": per_shard,
-            }
+        """Fabric-level aggregates plus the per-shard breakdown.
+
+        Deliberately **lock-free**: every value is a snapshot read of a
+        registry cell or a plain attribute (GIL-atomic), so an operator
+        polling ``stats()`` can never stall a concurrent ``submit_raw``
+        holding the fabric lock — pinned by a regression test."""
+        per_shard = []
+        for sh in self.shards:
+            d = {"shard": sh.shard_id,
+                 "alive": bool(self._alive[sh.shard_id]),
+                 "packets_per_s": sh.engine.packets_per_second(),
+                 "throughput_gbps": sh.engine.throughput_gbps(),
+                 "recompiles": sh.engine.trace_count,
+                 "cache_hit_rate": sh.pipeline.cache_hit_rate(),
+                 "packets": sh.pipeline.stats["packets"]}
+            if sh._flow is not None:
+                d["flows"] = len(sh._flow.table)
+            per_shard.append(d)
+        return {
+            "n_shards": self.n_shards,
+            "packets_per_s": sum(d["packets_per_s"] for d in per_shard),
+            "throughput_gbps": sum(d["throughput_gbps"]
+                                   for d in per_shard),
+            "recompiles": sum(d["recompiles"] for d in per_shard),
+            "table_generation": self.control_plane.version,
+            "flows": sum(d.get("flows", 0) for d in per_shard),
+            "alive_shards": self.alive_shards,
+            "faults": self.fault_stats.as_dict(),
+            "shards": per_shard,
+        }

@@ -122,6 +122,10 @@ class FaultPlan:
         self._events: Dict[Tuple[str, int, int], int] = {}
         self._fired_per_spec: Dict[int, int] = {}
         self.fired: List[Tuple[str, int, int]] = []
+        # Optional obs EventLog: every firing is mirrored as a
+        # ``fault_injected`` event (wired by install(); the chaos-mode
+        # self-install wires it to the pipeline's own log).
+        self.events = None
 
     # -- firing ------------------------------------------------------------
 
@@ -146,6 +150,9 @@ class FaultPlan:
                 continue
             self._fired_per_spec[i] = self._fired_per_spec.get(i, 0) + 1
             self.fired.append((site, shard, e))
+            if self.events is not None:
+                self.events.emit("fault_injected", shard=shard,
+                                 site=site, event_index=e, spec=i)
             hit = spec if hit is None else hit
         return hit
 
@@ -187,8 +194,14 @@ class FaultPlan:
         whole sharded fabric (anything exposing the ``fault_plan``
         attribute contract).  A fabric install fans out to every shard
         pipeline *and* the shared control plane."""
+        def _adopt_events(obj) -> None:
+            obs = getattr(obj, "obs", None)
+            if self.events is None and obs is not None:
+                self.events = obs.events
+
         shards = getattr(target, "shards", None)
         if shards is not None:  # a ShardedPacketServer-shaped fabric
+            _adopt_events(target)
             for sh in shards:
                 sh.pipeline.fault_plan = self
             target.control_plane.fault_plan = self
@@ -196,10 +209,13 @@ class FaultPlan:
             return
         ingress = getattr(target, "ingress", None)
         if ingress is not None:  # a PacketServer-shaped wrapper
+            _adopt_events(target)
+            _adopt_events(ingress)
             ingress.fault_plan = self
             target.control_plane.fault_plan = self
             return
         if hasattr(target, "fault_plan"):
+            _adopt_events(target)
             target.fault_plan = self
             return
         raise TypeError(
