@@ -86,6 +86,9 @@ TRACKED = {
     ("pipeline", "latency", "cold_p99_us"): "latency",
     ("observability", "instrumented_ratio"): ("floor", 0.95),
     ("observability", "zero_retraces"): "bool",
+    # PR 9: drift/shadow taps must stay (near-)free on the hot path
+    ("model_quality", "tap_ratio"): ("floor", 0.95),
+    ("model_quality", "zero_retraces"): "bool",
     ("trend_validated",): "bool",
 }
 

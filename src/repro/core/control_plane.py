@@ -240,6 +240,10 @@ class ControlPlane:
         # every committed table swap — the generation bumps — is recorded
         # so a failover/install history reconstructs from the log alone
         self.events = None
+        # install listeners (PR 9): ``fn(kind, model_id)`` callbacks run
+        # after every committed swap — the drift monitor hooks here to
+        # freeze its reference window at install time
+        self.install_listeners: List = []
         w_dtype = np.dtype(self.fmt.dtype)
         self._w = np.zeros((max_models, max_layers, max_width, max_width), w_dtype)
         self._b = np.zeros((max_models, max_layers, max_width), np.int32)
@@ -328,12 +332,15 @@ class ControlPlane:
 
     def _emit(self, kind: str, model_id: int, **detail) -> None:
         """Record a committed table swap in the attached event log (no-op
-        without one).  Called *after* the version bump, so the event's
-        generation is the one the swap published."""
+        without one) and notify install listeners.  Called *after* the
+        version bump, so the event's generation is the one the swap
+        published."""
         events = self.events
         if events is not None:
             events.emit(kind, shard=-1, generation=self._version,
                         model_id=int(model_id), **detail)
+        for fn in list(self.install_listeners):
+            fn(kind, int(model_id))
 
     def _begin_write(self) -> None:
         """Copy-on-write: detach the MLP-family back buffers from any

@@ -769,6 +769,10 @@ class IngressPipeline:
         # a shard label; a standalone pipeline gets a private one.
         self.obs = obs if obs is not None else Observability(clock=clock)
         self.tracer = self.obs.make_tracer(shard=self.shard_id, clock=clock)
+        # model-quality plane (PR 9): the feature/prediction taps read
+        # ``self.obs.drift`` per batch (one attribute check when off); an
+        # attached ShadowScorer samples staged rows into its replay lane
+        self.shadow = None
         if self.fault_plan is not None \
                 and getattr(self.fault_plan, "events", None) is None:
             # chaos-mode self-installed plans log their firings here too
@@ -879,7 +883,7 @@ class IngressPipeline:
         else:
             for t, r in zip(tickets.tolist(), reason):
                 self._errors[t] = PacketError(ticket=t, reason=str(r))
-        self.stats["errors"] += tickets.size
+        self.stats["ingress_errors_total"] += tickets.size
         if self.tracer is not None:
             self.tracer.on_retire(tickets)
 
@@ -928,7 +932,7 @@ class IngressPipeline:
         tickets = self._alloc_tickets(n)
         if n == 0:
             return first, 0
-        self.stats["packets"] += n
+        self.stats["ingress_packets_total"] += n
         if length < HEADER_BYTES or length > self.wire_bytes:
             self._mark_errors(
                 tickets, f"wire length {length} outside "
@@ -984,7 +988,7 @@ class IngressPipeline:
             tickets = self._alloc_tickets(n)
             if n == 0:
                 return first, 0
-            self.stats["packets"] += n
+            self.stats["ingress_packets_total"] += n
             mid = np.ascontiguousarray(model_id, np.int32).reshape(n)
             fl = (np.zeros(n, np.int32) if flags is None
                   else np.ascontiguousarray(flags, np.int32).reshape(n))
@@ -1040,7 +1044,7 @@ class IngressPipeline:
             self._results.a[ht] = hit_vals
             self._status[ht] = STATUS_READY
             n_hit = int(hit_mask.sum())
-            self.stats["cache_hits"] += n_hit
+            self.stats["ingress_cache_hits_total"] += n_hit
             self.engine.credit_packets(n_hit)  # served without a dispatch
             if self.tracer is not None:
                 self.tracer.on_retire(ht)  # short-circuit span closes here
@@ -1081,7 +1085,7 @@ class IngressPipeline:
         uniq_global[fresh] = base + np.arange(n_fresh)
         self._n_miss += n_fresh
         n_coalesced = miss_sel.size - n_fresh
-        self.stats["coalesced"] += n_coalesced
+        self.stats["ingress_coalesced_total"] += n_coalesced
         self.engine.credit_packets(n_coalesced)  # ride an existing dispatch
         self._observe_duplication(n, n_hit + n_coalesced)
 
@@ -1104,6 +1108,21 @@ class IngressPipeline:
             fresh_words = uniq_words[fresh]
             fresh_hashes = uniq_hashes[fresh]
             fresh_idx = uniq_global[fresh]
+            # drift-injection chaos site: shift a feature lane's codes on
+            # the fresh rows so the injected distribution shift rides
+            # through real serving and the drift tap alike
+            plan = self.fault_plan
+            if plan is not None and plan.has_site("drift"):
+                fresh_x0 = plan.shift_features(fresh_x0, self.shard_id)
+            # model-quality feature tap: fresh staged rows only — the rows
+            # that actually dispatch; byte-identical repeats short-circuit
+            # above and carry no new distribution information
+            drift = self.obs.drift
+            if drift is not None:
+                drift.observe_features(fresh_mid, fresh_x0)
+            if self.shadow is not None:
+                self.shadow.observe(miss_tickets[uniq_idx[fresh]],
+                                    fresh_x0, fresh_mid)
             if self.tracer is not None:
                 self.tracer.on_stage(miss_tickets[uniq_idx[fresh]], fresh_idx)
             if self._pending is not None and self._admit():
@@ -1252,7 +1271,7 @@ class IngressPipeline:
             x0[count:] = 0
             mid[count:] = 0
             self._stg_flags[o.buf][count:size] = 0
-            self.stats["padded_rows"] += size - count
+            self.stats["ingress_padded_rows_total"] += size - count
             # engine.run_features counts the whole batch — padding is not
             # traffic
             self.engine.credit_packets(count - size)
@@ -1281,7 +1300,7 @@ class IngressPipeline:
             # accepted this batch.  Salvage row-by-row with same-shape
             # probes; unservable rows resolve as PacketError (drain never
             # hangs, the server never dies).
-            self.stats["dispatch_failures"] += 1
+            self.stats["ingress_dispatch_failures_total"] += 1
             self._salvage_failed_batch(o.buf, o.miss_idx[:count].copy(),
                                        count, size, lanes, err)
             return
@@ -1289,8 +1308,8 @@ class IngressPipeline:
         self._inflight.append(_InFlight(
             future=future, miss_idx=o.miss_idx[:count].copy(), count=count,
             size=size, buf_idx=o.buf, generation=generation, lanes=lanes))
-        self.stats["dispatched_rows"] += size
-        self.stats["batches"] += 1
+        self.stats["ingress_dispatched_rows_total"] += size
+        self.stats["ingress_batches_total"] += 1
         self.stats["lane_batches"][lanes] += 1
         if self.tracer is not None:
             self.tracer.on_dispatch(o.miss_idx[:count])
@@ -1304,7 +1323,7 @@ class IngressPipeline:
         last = None
         for attempt in range(self.max_retries + 1):
             if attempt:
-                self.stats["dispatch_retries"] += 1
+                self.stats["ingress_dispatch_retries_total"] += 1
                 if self.retry_backoff:
                     time.sleep(self.retry_backoff * (1 << (attempt - 1)))
             try:
@@ -1337,7 +1356,7 @@ class IngressPipeline:
             # some rows served — the device is alive, the failure was the
             # batch's content (or transient): not a shard-death signal
             self.consecutive_dispatch_failures = 0
-            self.stats["quarantined_rows"] += count - n_ok
+            self.stats["ingress_quarantined_rows_total"] += count - n_ok
         else:
             self.consecutive_dispatch_failures += 1
         hi = int(miss_idx.max()) + 1 if miss_idx.size else 0
@@ -1384,7 +1403,7 @@ class IngressPipeline:
         plan = self.fault_plan
 
         def probe(sel: np.ndarray) -> np.ndarray:
-            self.stats["probe_batches"] += 1
+            self.stats["ingress_probe_batches_total"] += 1
             xp = np.zeros((size, self.width), np.int32)
             mp = np.zeros(size, np.int32)
             xp[sel] = x0[sel]
@@ -1444,7 +1463,7 @@ class IngressPipeline:
             self.engine.credit_packets(-rec.size)
             self.engine.credit_bytes(-rec.size * in_row,
                                      -rec.size * self.out_bytes)
-            self.stats["dispatch_failures"] += 1
+            self.stats["ingress_dispatch_failures_total"] += 1
             self._salvage_failed_batch(rec.buf_idx, rec.miss_idx, rec.count,
                                        rec.size, rec.lanes, err)
             return
@@ -1452,6 +1471,13 @@ class IngressPipeline:
         self.consecutive_dispatch_failures = 0
         if self.tracer is not None:
             self.tracer.on_device_done(rec.miss_idx)
+        # model-quality prediction tap: per-model egress-code distribution
+        # over the batch's real rows (int32 output codes, pre-encode)
+        drift = self.obs.drift
+        if drift is not None:
+            drift.observe_predictions(
+                self._stg_mid[rec.buf_idx][: rec.count],
+                out[: rec.count, : self.out_feats])
         # the one egress encode of the serving path (host twin of the
         # device deparser, byte-identical): int32 output codes → wire rows
         rows = emit_results_np(self._stg_mid[rec.buf_idx][: rec.count],
@@ -1476,7 +1502,7 @@ class IngressPipeline:
         self._miss_retired[idx] = True
         if bad.any():
             self._miss_failed[idx[bad]] = 2
-            self.stats["corrupted_rows"] += int(bad.sum())
+            self.stats["ingress_corrupted_rows_total"] += int(bad.sum())
         # family batches retire out of global-index order; chunks resolve
         # against the fully-retired prefix
         rem = self._miss_retired[self._miss_done: self._n_miss]
@@ -1535,6 +1561,8 @@ class IngressPipeline:
         self._dispatch()
         while self._inflight:
             self._retire_oldest()
+        if self.shadow is not None:
+            self.shadow.flush()
         self._resolve_ready_chunks()
         assert not self._chunks, "unresolved chunks after full retire"
 

@@ -174,8 +174,8 @@ class FlowFrontend:
         if n == 0:
             return (np.zeros((0, N_FLOW_FEATURES), np.int32), fields,
                     np.zeros(0, bool), np.zeros(0, bool))
-        self.stats["raw_packets"] += n
-        self.stats["raw_batches"] += 1
+        self.stats["flow_raw_packets_total"] += n
+        self.stats["flow_raw_batches_total"] += 1
         words, hashes = FlowTable.pack_keys(fields.key_bytes, self.key_words)
         slots, is_new, rank = self.table.lookup_or_insert(
             words, hashes, fields.ts, want_rank=True)
@@ -359,8 +359,8 @@ class FlowFrontend:
         n = fields.model_id.shape[0]
         if n == 0:
             return np.zeros((0, HEADER_BYTES + 4 * self.width), np.uint8)
-        self.stats["raw_packets"] += n
-        self.stats["raw_batches"] += 1
+        self.stats["flow_raw_packets_total"] += n
+        self.stats["flow_raw_batches_total"] += 1
         words, hashes = FlowTable.pack_keys(fields.key_bytes, self.key_words)
         # no rank wanted: the in-kernel walk is batch-ordered, unlike the
         # host rank-round lowering extract() feeds

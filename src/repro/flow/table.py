@@ -106,8 +106,8 @@ class FlowTable:
         return self._cap
 
     def hit_rate(self) -> float:
-        n = self.stats["lookups"]
-        return self.stats["flow_hits"] / n if n else 0.0
+        n = self.stats["flow_lookups_total"]
+        return self.stats["flow_hits_total"] / n if n else 0.0
 
     # -- internals ---------------------------------------------------------
 
@@ -146,8 +146,8 @@ class FlowTable:
         """Wholesale eviction — the register-file reset.  Every live flow's
         state is discarded (counted as evictions); the next packet of any
         flow starts it fresh."""
-        self.stats["evictions"] += self._count
-        self.stats["flushes"] += 1
+        self.stats["flow_evictions_total"] += self._count
+        self.stats["flow_flushes_total"] += 1
         self._slot_state[:] = 0
         self.registers[:] = 0
         self._count = 0
@@ -207,7 +207,7 @@ class FlowTable:
         self.registers[:] = 0
         self._count = 0
         self._tombstones = 0
-        self.stats["compactions"] += 1
+        self.stats["flow_compactions_total"] += 1
         self.generation += 1
         if keys.shape[0]:
             self._insert_new(keys, hash_words(keys), regs)
@@ -227,7 +227,7 @@ class FlowTable:
             self.registers[idle] = 0
             self._count -= n
             self._tombstones += n
-            self.stats["expiries"] += n
+            self.stats["flow_expiries_total"] += n
             if self._tombstones > self._cap * self._tombstone_limit:
                 self._compact()
         return n
@@ -263,7 +263,7 @@ class FlowTable:
         case the caller falls back to ranking by slot.
         """
         n = words.shape[0]
-        self.stats["lookups"] += n
+        self.stats["flow_lookups_total"] += n
         if n == 0:
             empty = np.zeros(0, np.int64), np.zeros(0, bool)
             return empty + (np.zeros(0, np.int64),) if want_rank else empty
@@ -320,13 +320,13 @@ class FlowTable:
                        < unow[hit] - self.idle_timeout)
                 if idle.any():
                     self.registers[hs[idle]] = 0  # same key, state restarts
-                    self.stats["expiries"] += int(idle.sum())
+                    self.stats["flow_expiries_total"] += int(idle.sum())
                     reopened[np.nonzero(hit)[0][idle]] = True
             if n_new:
                 match[miss] = self._insert_new(uwords[miss], uhash[miss])
                 claimed |= miss
             if self.generation == gen0:
-                self.stats["flows_created"] += int(claimed.sum())
+                self.stats["flow_created_total"] += int(claimed.sum())
                 break
         else:
             # pathological churn: the table never settled.  Serve whatever
@@ -334,7 +334,7 @@ class FlowTable:
             # old behavior here was a server-killing RuntimeError
             match, _ = self._probe(uwords, uhash)
             unres = match < 0
-            self.stats["flows_created"] += int((claimed & ~unres).sum())
+            self.stats["flow_created_total"] += int((claimed & ~unres).sum())
 
         # assemble over ALL unique flows: overflow/unsettled flows carry
         # slot -1 (their packets are rejected; everything else is exact)
@@ -348,8 +348,8 @@ class FlowTable:
         is_new[uidx[new_u]] = True
         n_rej = int((slots < 0).sum())
         if n_rej:
-            self.stats["rejects"] += n_rej
-        self.stats["flow_hits"] += n - int(is_new.sum()) - n_rej
+            self.stats["flow_rejects_total"] += n_rej
+        self.stats["flow_hits_total"] += n - int(is_new.sum()) - n_rej
         if not want_rank:
             return slots, is_new
         served = match[match >= 0]
@@ -438,7 +438,7 @@ class FlowTable:
                 hit = ~miss
                 if hit.any():
                     self.registers[match[hit]] = regs[hit]
-                self.stats["adopted"] += n
+                self.stats["flow_adopted_total"] += n
                 return n
         # unreachable with the capacity check above; degrade rather than
         # raise mid-failover — unsettled flows restart on their next packet

@@ -85,7 +85,11 @@ class PacketServer:
                  flow_idle_timeout: Optional[int] = None,
                  strict_model_ids: bool = False,
                  max_retries: int = 2, retry_backoff: float = 0.0,
-                 clock=None, obs=None, trace_every: int = 0):
+                 clock=None, obs=None, trace_every: int = 0,
+                 drift_window: int = 0, drift_lanes: int = 8,
+                 psi_threshold: float = 0.25,
+                 shadow_model: Optional[int] = None, shadow_every: int = 8,
+                 slo_budget: Optional[float] = None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         if obs is None:
@@ -115,6 +119,29 @@ class PacketServer:
             max_retries=max_retries, retry_backoff=retry_backoff,
             clock=clock, obs=obs)
         self.control_plane.events = obs.events
+        # -- model-quality plane (PR 9): drift taps + shadow lane + SLO ----
+        self._submit_h = None
+        if drift_window or shadow_model is not None or slo_budget is not None:
+            mon = obs.enable_drift(
+                window=drift_window or 4096, n_lanes=drift_lanes,
+                psi_threshold=psi_threshold)
+            # freeze the drift reference window at every committed install
+            self.control_plane.install_listeners.append(mon.on_install)
+            if shadow_model is not None:
+                mon.attach_shadow(self.ingress, shadow_model,
+                                  every=shadow_every)
+            if slo_budget is not None:
+                if slo_budget <= 0:
+                    raise ValueError("slo_budget must be positive (or None)")
+                h = obs.registry.histogram("server_submit_seconds")
+                self._submit_h = h
+
+                def _burn() -> float:
+                    return (h.percentile(99.0) / slo_budget
+                            if h.count else float("nan"))
+
+                obs.health.add_rule("slo:submit_p99", "slo_burn", _burn,
+                                    1.0, budget_s=slo_budget)
         self.max_inflight = max_inflight
         self.strict_model_ids = strict_model_ids
         self._inflight: deque = deque()
@@ -208,10 +235,15 @@ class PacketServer:
         known = (self.control_plane.installed_ids()
                  if self.strict_model_ids else None)
         rows, bad, reasons = validate_raw_rows(raw, known_model_ids=known)
-        if bad is None:
-            return self.flow.submit_raw(rows)
-        return self.flow.submit_raw(rows, drop_mask=bad,
-                                    drop_reason=reasons)
+        t0 = time.perf_counter() if self._submit_h is not None else 0.0
+        try:
+            if bad is None:
+                return self.flow.submit_raw(rows)
+            return self.flow.submit_raw(rows, drop_mask=bad,
+                                        drop_reason=reasons)
+        finally:
+            if self._submit_h is not None:
+                self._submit_h.observe(time.perf_counter() - t0)
 
     # -- streaming ingress (coalescing queue + duplicate cache) ------------
 
@@ -221,7 +253,13 @@ class PacketServer:
         order via :meth:`drain_packets`."""
         if self._window_t0 is None:
             self._window_t0 = time.perf_counter()
-        return self.ingress.submit(packets)
+        if self._submit_h is None:
+            return self.ingress.submit(packets)
+        t0 = time.perf_counter()
+        try:
+            return self.ingress.submit(packets)
+        finally:
+            self._submit_h.observe(time.perf_counter() - t0)
 
     def drain_packets(self) -> list:
         """Flush the pipeline and return one entry per submitted packet in
@@ -229,6 +267,10 @@ class PacketServer:
         :class:`~repro.core.ingress.PacketError` slot."""
         out = self.ingress.drain()
         self._close_window()
+        if self.obs.health is not None:
+            # step alert rules once per drain window (drift rules also
+            # step on the monitor's own window cadence)
+            self.obs.health.evaluate()
         return out
 
     def _close_window(self) -> None:
@@ -447,6 +489,13 @@ def main(argv=None) -> int:
                    help="submit chunk size (default 512)")
     p.add_argument("--trace-every", type=int, default=0,
                    help="sample 1-in-N packet lifecycles (0 = off)")
+    p.add_argument("--drift-window", type=int, default=0,
+                   help="enable the drift monitor with this window size "
+                        "(feature rows per model; 0 = off)")
+    p.add_argument("--shadow-model", type=int, default=None,
+                   help="shadow-score a deterministic packet sample "
+                        "against this Model ID (installs a copy of the "
+                        "primary under that id)")
     p.add_argument("--metrics-json", metavar="PATH", default=None,
                    help="write the observability snapshot as JSON")
     p.add_argument("--prometheus", action="store_true",
@@ -459,7 +508,8 @@ def main(argv=None) -> int:
     width = 16
     kw: Dict[str, Any] = dict(
         max_models=4, max_width=width, ingress_batch=256, max_inflight=2,
-        flow_capacity_pow2=12, trace_every=args.trace_every)
+        flow_capacity_pow2=12, trace_every=args.trace_every,
+        drift_window=args.drift_window, shadow_model=args.shadow_model)
     if args.shards > 1:
         srv: Any = ShardedPacketServer(n_shards=args.shards, **kw)
     else:
@@ -468,10 +518,14 @@ def main(argv=None) -> int:
     r = np.random.default_rng(args.seed + 1)
     w1 = r.normal(size=(width, width)).astype(np.float32) * 0.3
     w2 = r.normal(size=(width, 4)).astype(np.float32) * 0.3
-    srv.install(1, [(w1, np.zeros(width, np.float32)),
-                    (w2, np.zeros(4, np.float32))],
-                ["relu"], final_activation="sigmoid")
+    layers = [(w1, np.zeros(width, np.float32)),
+              (w2, np.zeros(4, np.float32))]
+    srv.install(1, layers, ["relu"], final_activation="sigmoid")
     srv.install_feature_spec(1, (2, 3, 4, 5) * (width // 4))
+    if args.shadow_model is not None:
+        # identical copy — the shadow lane should report full agreement
+        srv.install(args.shadow_model, layers, ["relu"],
+                    final_activation="sigmoid")
 
     raw = raw_trace(rng, args.packets, n_flows=args.flows,
                     model_ids=(1,), pattern="mixed")

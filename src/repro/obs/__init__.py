@@ -24,7 +24,9 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+from .drift import DriftMonitor, ShadowScorer, drift_scores
 from .events import EVENT_KINDS, Event, EventLog
+from .health import AlertRule, HealthMonitor
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       StatsAdapter)
 from .trace import TRACE_STAGES, PacketTracer
@@ -41,6 +43,11 @@ __all__ = [
     "EVENT_KINDS",
     "PacketTracer",
     "TRACE_STAGES",
+    "DriftMonitor",
+    "ShadowScorer",
+    "drift_scores",
+    "AlertRule",
+    "HealthMonitor",
 ]
 
 
@@ -54,6 +61,27 @@ class Observability:
         self.registry = MetricsRegistry()
         self.events = EventLog(capacity=event_capacity, clock=clock)
         self.tracers: List[PacketTracer] = []
+        # model-quality plane (PR 9): off until enable_drift() — the
+        # pipeline taps guard on ``obs.drift is not None``
+        self.drift: Optional[DriftMonitor] = None
+        self.health: Optional[HealthMonitor] = None
+
+    def enable_drift(self, *, window: int = 4096, n_lanes: int = 8,
+                     pred_lanes: int = 4, psi_threshold: float = 0.25,
+                     categorical_lanes=(), cat_cap: int = 64) -> DriftMonitor:
+        """Turn on the model-quality plane: a :class:`HealthMonitor` for
+        alert rules plus a :class:`DriftMonitor` whose taps the pipelines
+        pick up on their next batch.  Idempotent (returns the existing
+        monitor on repeat calls)."""
+        if self.health is None:
+            self.health = HealthMonitor(self.registry, self.events)
+        if self.drift is None:
+            self.drift = DriftMonitor(
+                self.registry, self.events, window=window, n_lanes=n_lanes,
+                pred_lanes=pred_lanes, psi_threshold=psi_threshold,
+                categorical_lanes=categorical_lanes, cat_cap=cat_cap,
+                health=self.health)
+        return self.drift
 
     def make_tracer(self, shard: int = 0, clock=None) -> Optional[PacketTracer]:
         """Per-pipeline tracer (or ``None`` when tracing is off)."""
@@ -74,7 +102,7 @@ class Observability:
         return out
 
     def snapshot(self, event_limit: Optional[int] = 256) -> dict:
-        return {
+        out = {
             "metrics": self.registry.snapshot(),
             "events": self.events.snapshot(limit=event_limit),
             "trace": {
@@ -83,6 +111,14 @@ class Observability:
                 "spans": len(self.spans()),
             },
         }
+        if self.drift is not None:
+            out["model_quality"] = {
+                "drift": self.drift.snapshot(),
+                "health": (self.health.state()
+                           if self.health is not None else {}),
+                "shadow": [s.snapshot() for s in self.drift.shadows],
+            }
+        return out
 
     def to_prometheus_text(self) -> str:
         return self.registry.to_prometheus_text()

@@ -17,6 +17,10 @@ Event kinds emitted by the serving fabric:
     ``flow_migration``    snapshot re-homed onto a survivor shard
     ``gate_open`` / ``gate_closed``   cold-traffic admission gate flips
     ``window_degraded``   a drain window returned partial results
+    ``drift_alert``       a model's windowed drift score crossed threshold
+    ``slo_burn``          p99 latency exceeded a model/fabric SLO budget
+    ``shadow_divergence`` shadow-model disagreement crossed threshold
+    ``alert_cleared``     an open health alert re-armed (hysteresis close)
 
 The log is thread-safe (fabric watchdog and caller threads both emit) and
 bounded: the ring keeps the most recent ``capacity`` records; ``dropped``
@@ -45,6 +49,10 @@ EVENT_KINDS = (
     "gate_open",
     "gate_closed",
     "window_degraded",
+    "drift_alert",
+    "slo_burn",
+    "shadow_divergence",
+    "alert_cleared",
 )
 
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import math
 import threading
+import warnings
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
@@ -50,8 +51,18 @@ def _label_key(labels: dict) -> Tuple[Tuple[str, str], ...]:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label(v: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote, newline."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(v: str) -> str:
+    """Prometheus HELP-text escaping: backslash and newline only."""
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _label_text(key: Tuple[Tuple[str, str], ...]) -> str:
-    return ",".join(f'{k}="{v}"' for k, v in key)
+    return ",".join(f'{k}="{_escape_label(v)}"' for k, v in key)
 
 
 class Counter:
@@ -319,8 +330,11 @@ class MetricsRegistry:
         for fam in families:
             if not fam.cells:
                 continue
-            if fam.help:
-                lines.append(f"# HELP {fam.name} {fam.help}")
+            # HELP is always present (scrapers treat a missing HELP as an
+            # untyped family); families registered without help text fall
+            # back to a name-derived description
+            help_text = fam.help or fam.name.replace("_", " ")
+            lines.append(f"# HELP {fam.name} {_escape_help(help_text)}")
             lines.append(f"# TYPE {fam.name} {fam.kind}")
             for key, cell in sorted(fam.cells.items()):
                 lt = _label_text(key)
@@ -356,16 +370,28 @@ class StatsAdapter:
     keeps those surfaces — reads *and* the ``stats["k"] += n`` write pattern
     — working unchanged, while the underlying store is registry cells under
     the canonical ``<subsystem>_<noun>_total`` names.  Old keys are aliases
-    for one release (see README "Observability").
+    for one release (see README "Observability"): accessing one now emits a
+    ``DeprecationWarning`` (once per key per adapter) naming the canonical
+    replacement; ``as_dict()`` still exports both spellings so scraped
+    snapshots stay stable for the same release.
     """
 
-    __slots__ = ("_cells", "_aliases", "_nested", "_extras")
+    __slots__ = ("_cells", "_aliases", "_nested", "_extras", "_warned")
 
     def __init__(self) -> None:
         self._cells: Dict[str, Counter] = {}
         self._aliases: Dict[str, str] = {}
         self._nested: Dict[str, "StatsAdapter"] = {}
         self._extras: Dict[str, object] = {}
+        self._warned: set = set()
+
+    def _warn_alias(self, key: str) -> None:
+        if key not in self._warned:
+            self._warned.add(key)
+            warnings.warn(
+                f"stats key {key!r} is a deprecated alias of "
+                f"{self._aliases[key]!r} and will be removed next release",
+                DeprecationWarning, stacklevel=3)
 
     def bind(self, canonical: str, cell: Counter,
              *aliases: str) -> Counter:
@@ -397,13 +423,20 @@ class StatsAdapter:
             return self._nested[key]
         if key in self._extras:
             return self._extras[key]
-        return self._cells[self._aliases.get(key, key)].value
+        if key in self._aliases:
+            self._warn_alias(key)
+            return self._cells[self._aliases[key]].value
+        return self._cells[key].value
 
     def __setitem__(self, key: str, value) -> None:
         if key in self._extras:
             self._extras[key] = value
             return
-        self._cells[self._aliases.get(key, key)].set(value)
+        if key in self._aliases:
+            self._warn_alias(key)
+            self._cells[self._aliases[key]].set(value)
+            return
+        self._cells[key].set(value)
 
     def __contains__(self, key: str) -> bool:
         return (key in self._nested or key in self._cells

@@ -207,7 +207,11 @@ class ShardedPacketServer:
                  max_consecutive_failures: int = 3,
                  max_retries: int = 2, retry_backoff: float = 0.0,
                  clock=None, obs: Optional[Observability] = None,
-                 trace_every: int = 0):
+                 trace_every: int = 0,
+                 drift_window: int = 0, drift_lanes: int = 8,
+                 psi_threshold: float = 0.25,
+                 shadow_model: Optional[int] = None, shadow_every: int = 8,
+                 slo_budget: Optional[float] = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         if watchdog_timeout is not None and watchdog_timeout <= 0:
@@ -294,6 +298,29 @@ class ShardedPacketServer:
         self._submit_hist = [
             reg.histogram("fabric_submit_seconds", shard=s)
             for s in range(n_shards)]
+        # -- model-quality plane (PR 9): drift taps + shadow lane + SLO ----
+        if drift_window or shadow_model is not None or slo_budget is not None:
+            mon = self.obs.enable_drift(
+                window=drift_window or 4096, n_lanes=drift_lanes,
+                psi_threshold=psi_threshold)
+            # freeze the drift reference window at every committed install
+            self.control_plane.install_listeners.append(mon.on_install)
+            if shadow_model is not None:
+                for sh in self.shards:
+                    mon.attach_shadow(sh.pipeline, shadow_model,
+                                      every=shadow_every)
+            if slo_budget is not None:
+                if slo_budget <= 0:
+                    raise ValueError("slo_budget must be positive (or None)")
+
+                def _burn() -> float:
+                    ps = [h.percentile(99.0) for h in self._submit_hist
+                          if h.count]
+                    return (max(ps) / slo_budget) if ps else float("nan")
+
+                self.obs.health.add_rule(
+                    "slo:fabric_submit_p99", "slo_burn", _burn, 1.0,
+                    budget_s=slo_budget)
 
     # -- control plane (broadcast by construction: one shared plane) -------
 
@@ -354,7 +381,7 @@ class ShardedPacketServer:
         """One supervision strike against shard ``s``; kills it at
         ``max_consecutive_failures`` (a healthy submit resets the count)."""
         self._strikes[s] += 1
-        self.fault_stats["watchdog_strikes"] += 1
+        self.fault_stats["fabric_watchdog_strikes_total"] += 1
         self.obs.events.emit(
             "watchdog_strike", shard=int(s),
             generation=self.control_plane.version,
@@ -406,8 +433,8 @@ class ShardedPacketServer:
                             "flow_migration", shard=int(t),
                             generation=self.control_plane.version,
                             source=int(s), flows=int(adopted))
-            self.fault_stats["deaths"] += 1
-            self.fault_stats["migrated_flows"] += migrated
+            self.fault_stats["fabric_deaths_total"] += 1
+            self.fault_stats["fabric_migrated_flows_total"] += migrated
             self.fault_stats["dead_shards"].append(
                 {"shard": int(s), "reason": reason,
                  "migrated_flows": int(migrated)})
@@ -439,7 +466,7 @@ class ShardedPacketServer:
             if bad is None:
                 gidx = np.arange(n)
             else:
-                self.fault_stats["rejected_rows"] += int(bad.sum())
+                self.fault_stats["fabric_rejected_rows_total"] += int(bad.sum())
                 gidx = np.nonzero(~bad)[0]
             if gidx.size:
                 rows = raw_arr if bad is None else raw_arr[gidx]
@@ -467,7 +494,7 @@ class ShardedPacketServer:
                             rows[sel], fields=fields_s,
                             cms_est_q=est_q[sel])
                     except Exception as e:  # shard wedged at submit
-                        self.fault_stats["submit_failures"] += 1
+                        self.fault_stats["fabric_submit_failures_total"] += 1
                         self._window_degraded = True
                         if reasons is None:
                             reasons = np.full(n, None, object)
@@ -538,7 +565,7 @@ class ShardedPacketServer:
                         out.append(PacketError(ticket=len(out), reason=why))
                         continue
                     if not per[sid]:  # shard died with this result pending
-                        self.fault_stats["lost_results"] += 1
+                        self.fault_stats["fabric_lost_results_total"] += 1
                         out.append(PacketError(
                             ticket=len(out),
                             reason=f"shard {sid} lost this result "
@@ -552,7 +579,7 @@ class ShardedPacketServer:
                 assert all(not q for q in per), \
                     "shard drained more results than the fabric dispatched"
             else:
-                self.fault_stats["degraded_windows"] += 1
+                self.fault_stats["fabric_degraded_windows_total"] += 1
                 self.obs.events.emit(
                     "window_degraded", shard=-1,
                     generation=self.control_plane.version,
@@ -561,6 +588,10 @@ class ShardedPacketServer:
             self._order.clear()
             self._n_slots = 0
             self._close_window()
+            if self.obs.health is not None:
+                # step alert rules once per drain window (drift rules also
+                # step on the monitor's own window cadence)
+                self.obs.health.evaluate()
             return out
 
     def _close_window(self) -> None:
@@ -598,7 +629,7 @@ class ShardedPacketServer:
                  "throughput_gbps": sh.engine.throughput_gbps(),
                  "recompiles": sh.engine.trace_count,
                  "cache_hit_rate": sh.pipeline.cache_hit_rate(),
-                 "packets": sh.pipeline.stats["packets"]}
+                 "packets": sh.pipeline.stats["ingress_packets_total"]}
             if sh._flow is not None:
                 d["flows"] = len(sh._flow.table)
             per_shard.append(d)

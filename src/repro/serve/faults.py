@@ -26,6 +26,11 @@ points; an uninstalled plan costs one attribute check):
   ``ControlPlane.install()/install_forest()/install_feature_spec()``
   between table preparation and the commit point, proving the swap is
   all-or-nothing (no torn tables, version unchanged, zero retraces).
+* ``"drift"`` — shifts one feature lane's distribution on fresh staged
+  rows (saturating left-shift by ``shift`` octaves of lane ``lane``),
+  the traffic-went-weird analogue: the shifted codes flow through real
+  serving *and* the drift tap, so the chaos lane can assert the
+  model-quality plane raises exactly one ``drift_alert``.
 
 Chaos mode: ``REPRO_CHAOS=1`` in the environment arms a low-rate
 transient dispatch fault on every pipeline (one hiccup every
@@ -46,7 +51,7 @@ import numpy as np
 __all__ = ["InjectedFault", "FaultSpec", "FaultPlan", "chaos_plan_from_env",
            "FAULT_SITES"]
 
-FAULT_SITES = ("dispatch", "stall", "egress", "install")
+FAULT_SITES = ("dispatch", "stall", "egress", "install", "drift")
 
 _FOREVER = 1 << 62
 
@@ -80,6 +85,10 @@ class FaultSpec:
                         poison-row knob for bisection tests.
     ``corrupt_frac``    fraction of rows corrupted per firing
                         (``"egress"`` site), at least one.
+    ``lane`` / ``shift``  feature lane to shift and by how many octaves
+                        (``"drift"`` site): codes become
+                        ``clip(x << shift)`` — a pure distribution shift
+                        the drift sketches must detect.
     """
 
     site: str
@@ -90,6 +99,8 @@ class FaultSpec:
     latency: float = 0.0
     match_model_id: Optional[int] = None
     corrupt_frac: float = 0.25
+    lane: int = 0
+    shift: int = 4
 
     def __post_init__(self):
         if self.site not in FAULT_SITES:
@@ -99,6 +110,8 @@ class FaultSpec:
             raise ValueError("every must be >= 1")
         if self.count < 0 or self.start < 0:
             raise ValueError("count/start must be >= 0")
+        if self.lane < 0 or not 0 <= self.shift <= 31:
+            raise ValueError("lane must be >= 0 and shift in [0, 31]")
 
 
 class FaultPlan:
@@ -122,6 +135,7 @@ class FaultPlan:
         self._events: Dict[Tuple[str, int, int], int] = {}
         self._fired_per_spec: Dict[int, int] = {}
         self.fired: List[Tuple[str, int, int]] = []
+        self._sites = frozenset(s.site for s in specs)
         # Optional obs EventLog: every firing is mirrored as a
         # ``fault_injected`` event (wired by install(); the chaos-mode
         # self-install wires it to the pipeline's own log).
@@ -186,6 +200,26 @@ class FaultPlan:
         rows[sel, 0] ^= 0xA5  # Model-ID high byte — echo check trips
         rows[sel, 1] ^= 0x5A
         return rows
+
+    def has_site(self, site: str) -> bool:
+        """Cheap pre-check so hot paths skip sites no spec targets."""
+        return site in self._sites
+
+    def shift_features(self, x0: np.ndarray, shard: int = 0) -> np.ndarray:
+        """Drift-injection site: when armed, return a copy of the fresh
+        staged feature block with one lane's codes saturating-left-shifted
+        by ``shift`` octaves — a pure, deterministic distribution shift
+        that rides through real serving and the drift tap alike.  Returns
+        ``x0`` untouched when not armed."""
+        spec = self._armed("drift", shard, None)
+        if spec is None or x0.shape[0] == 0 or spec.lane >= x0.shape[1]:
+            return x0
+        x0 = x0.copy()
+        col = x0[:, spec.lane].astype(np.int64) << spec.shift
+        np.clip(col, np.iinfo(np.int32).min, np.iinfo(np.int32).max,
+                out=col)
+        x0[:, spec.lane] = col.astype(np.int32)
+        return x0
 
     # -- installation ------------------------------------------------------
 

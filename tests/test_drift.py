@@ -1,0 +1,486 @@
+"""Model-quality observability tests (PR 9: drift detection, shadow
+scoring, health/alert rules).
+
+  * :func:`repro.obs.drift.drift_scores` agrees with an independently
+    derived numpy oracle (hypothesis), is exactly zero on identical
+    windows, and PSI grows monotonically with the magnitude of an
+    octave shift (hypothesis)
+  * the shadow lane's 1-in-N ticket sampling uses the PacketTracer's
+    contiguous-run arithmetic — bit-equal to the modulo brute force
+    (hypothesis) and deterministic across identical runs
+  * end-to-end: install → reference freeze → stable traffic scores ≈ 0 →
+    an injected distribution shift crosses the PSI threshold → exactly
+    one ``drift_alert`` (hysteresis, no flapping), reconstructable
+    post-hoc from the event log alone
+  * the ``"drift"`` chaos fault site shifts a feature lane mid-run and
+    the alert still fires exactly once
+  * health rules step open/close hysteresis correctly, skip NaN signals,
+    and re-arm after ``reset_rule``
+  * SLO burn-rate rules fire ``slo_burn`` from the PR-8 latency
+    histograms on both server shapes
+  * shadow scoring: identical weights under two Model IDs agree 100%,
+    engine throughput accounting is untouched by shadow traffic, and the
+    whole plane adds zero retraces
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.launch.serve import PacketServer
+from repro.obs import EVENT_KINDS, HealthMonitor, MetricsRegistry, EventLog
+from repro.obs.drift import N_BINS, ShadowScorer, _bin_codes, drift_scores
+from repro.serve import FaultPlan, FaultSpec, ShardedPacketServer
+
+FRAC = 8
+WIDTH = 8
+WINDOW = 256
+FOREVER = 1 << 60
+
+
+def _weights(seed):
+    rng = np.random.default_rng(seed)
+    w1 = rng.normal(size=(WIDTH, WIDTH)).astype(np.float32) * 0.3
+    w2 = rng.normal(size=(WIDTH, 2)).astype(np.float32) * 0.3
+    return [(w1, np.zeros(WIDTH, np.float32)),
+            (w2, np.zeros(2, np.float32))]
+
+
+def _server(**kw):
+    kw.setdefault("max_models", 4)
+    kw.setdefault("max_width", WIDTH)
+    kw.setdefault("frac_bits", FRAC)
+    kw.setdefault("ingress_batch", 64)
+    kw.setdefault("max_inflight", 2)
+    kw.setdefault("use_cache", False)   # every row fresh → taps see all
+    kw.setdefault("drift_window", WINDOW)
+    srv = PacketServer(**kw)
+    srv.install(1, _weights(7), ["relu"], final_activation="sigmoid")
+    return srv
+
+
+def _round(shift=0):
+    """One drift window of feature rows: a fixed per-lane distribution
+    (identical every call → window PSI is exactly 0), rows unique within
+    the round so nothing coalesces.  ``shift`` left-shifts lane 0."""
+    i = np.arange(WINDOW)
+    x = np.zeros((WINDOW, WIDTH), np.int32)
+    x[:, 0] = (1 + (i % 64)) << shift
+    x[:, 1] = -(5 + (i % 32))
+    x[:, 2] = 300 + (i % 16)
+    x[:, 3] = (i % 3) - 1
+    x[:, 7] = 1000 + i                  # distinct rows
+    return x
+
+
+def _feed(srv, rounds, shift=0, mid=1):
+    out = []
+    for _ in range(rounds):
+        # drain per round so prediction windows align to whole rounds
+        # (retires of round k would otherwise interleave with round k+1's
+        # ingest and split a round across two windows)
+        srv.ingress.submit_features(_round(shift),
+                                    np.full(WINDOW, mid, np.int32))
+        out = srv.drain_packets()
+    return out
+
+
+def _alerts(srv, kind="drift_alert"):
+    return [e for e in srv.obs.events.snapshot(limit=None)
+            if e["kind"] == kind]
+
+
+class TestDriftScores:
+    @settings(max_examples=60, deadline=None)
+    @given(cur=st.lists(st.integers(0, 10000), min_size=2, max_size=65),
+           ref=st.lists(st.integers(0, 10000), min_size=2, max_size=65))
+    def test_matches_independent_numpy_oracle(self, cur, ref):
+        n = min(len(cur), len(ref))
+        c = np.asarray(cur[:n], np.float64)
+        r = np.asarray(ref[:n], np.float64)
+        got = drift_scores(c, r)
+        eps = 1e-6
+        p = (c + eps) / (c + eps).sum()
+        q = (r + eps) / (r + eps).sum()
+        assert got["psi"] == pytest.approx(
+            float(np.sum((p - q) * np.log(p / q))), rel=1e-12, abs=1e-15)
+        assert got["kl"] == pytest.approx(
+            float(np.sum(p * np.log(p / q))), rel=1e-12, abs=1e-15)
+        assert got["max_dev"] == pytest.approx(
+            float(np.max(np.abs(p - q))), rel=1e-12, abs=1e-15)
+
+    @settings(max_examples=40, deadline=None)
+    @given(counts=st.lists(st.integers(0, 500), min_size=2, max_size=65))
+    def test_identical_windows_score_exactly_zero(self, counts):
+        v = np.asarray(counts, np.int64)
+        got = drift_scores(v, v)
+        assert got == {"psi": 0.0, "kl": 0.0, "max_dev": 0.0}
+
+    @settings(max_examples=40, deadline=None)
+    @given(m=st.integers(2, 8), c=st.integers(1, 50))
+    def test_psi_monotone_in_shift_magnitude(self, m, c):
+        """A block of ``m`` equally-occupied octaves shifted by ``k``
+        octaves: the overlapping mass cancels exactly, so PSI strictly
+        grows with ``k`` until the supports are disjoint."""
+        ref = np.zeros(N_BINS, np.int64)
+        ref[1: 1 + m] = c
+        psis = []
+        for k in range(m + 1):
+            curk = np.zeros(N_BINS, np.int64)
+            curk[1 + k: 1 + m + k] = c
+            psis.append(drift_scores(curk, ref)["psi"])
+        assert psis[0] == 0.0
+        for a, b in zip(psis, psis[1:]):
+            assert b > a
+
+    def test_bin_codes_layout(self):
+        x = np.asarray([0, 1, -1, 2, 3, -4, 255, -256,
+                        2 ** 30, -(2 ** 31), 2 ** 31 - 1], np.int64)
+        got = _bin_codes(x.astype(np.int32))
+        assert got.tolist() == [0, 1, 33, 2, 2, 35, 8, 41, 31, 64, 32]
+
+
+class TestDriftEndToEnd:
+    def test_stable_traffic_scores_near_zero(self):
+        srv = _server()
+        _feed(srv, 4)
+        mon = srv.obs.drift
+        # round 1 froze the reference; rounds 2-4 scored against it
+        assert mon.last_scores[1]["window_rows"] == WINDOW
+        assert mon.max_psi(1) == pytest.approx(0.0, abs=1e-9)
+        assert _alerts(srv) == []
+
+    def test_shift_fires_exactly_one_alert(self):
+        srv = _server()
+        _feed(srv, 3)
+        _feed(srv, 3, shift=6)            # sustained excursion
+        alerts = _alerts(srv)
+        assert len(alerts) == 1           # hysteresis: no flapping
+        a = alerts[0]
+        assert a["rule"] == "drift:1" and a["model_id"] == 1
+        assert a["value"] >= a["threshold"] == 0.25
+        assert srv.obs.health.rules["drift:1"].open
+        # more shifted traffic while open: still exactly one
+        _feed(srv, 3, shift=6)
+        assert len(_alerts(srv)) == 1
+
+    def test_alert_clears_and_rearms(self):
+        srv = _server()
+        _feed(srv, 2)
+        _feed(srv, 2, shift=6)
+        assert len(_alerts(srv)) == 1
+        _feed(srv, 3)                     # back to the reference shape
+        cleared = _alerts(srv, "alert_cleared")
+        assert any(e["rule"] == "drift:1" for e in cleared)
+        assert not srv.obs.health.rules["drift:1"].open
+        _feed(srv, 2, shift=6)            # second excursion re-fires
+        assert len(_alerts(srv)) == 2
+
+    def test_reconstructable_from_log_alone(self):
+        """The drill the ISSUE pins: install → baseline → shift → alert,
+        recovered post-hoc from the event log with no live object."""
+        srv = _server()
+        _feed(srv, 3)
+        _feed(srv, 2, shift=6)
+        log = srv.obs.events.snapshot(limit=None)
+        installs = [e for e in log if e["kind"] == "install"]
+        alerts = [e for e in log if e["kind"] == "drift_alert"]
+        assert len(installs) == 1 and len(alerts) == 1
+        assert installs[0]["seq"] < alerts[0]["seq"]
+        assert alerts[0]["model_id"] == 1
+        assert alerts[0]["value"] >= alerts[0]["threshold"]
+
+    def test_reinstall_refreezes_and_rearms(self):
+        srv = _server()
+        _feed(srv, 2)
+        _feed(srv, 2, shift=6)
+        assert len(_alerts(srv)) == 1
+        # reinstalling the model declares the new traffic shape expected:
+        # the reference refreezes and the rule re-arms
+        srv.install(1, _weights(7), ["relu"], final_activation="sigmoid")
+        mon = srv.obs.drift
+        assert mon.last_scores.get(1) is None
+        assert not srv.obs.health.rules["drift:1"].open
+        _feed(srv, 3, shift=6)            # shifted is the new normal
+        assert len(_alerts(srv)) == 1     # no new alert
+        assert mon.max_psi(1) == pytest.approx(0.0, abs=1e-9)
+
+    def test_prediction_drift_without_feature_drift(self):
+        """Swapping weights under stable inputs moves ``pred_psi`` while
+        feature PSI stays pinned at zero — the two signals separate."""
+        srv = _server()
+        _feed(srv, 4)
+        mon = srv.obs.drift
+        sc = mon.last_scores[1]
+        assert sc["pred_psi"] == pytest.approx(0.0, abs=1e-9)
+        srv.install(1, _weights(99), ["relu"], final_activation="sigmoid")
+        _feed(srv, 3)
+        sc = mon.last_scores[1]
+        assert sc["psi"] == pytest.approx(0.0, abs=1e-9)
+        assert sc["pred_psi"] > 0.01
+
+    def test_snapshot_and_prometheus_surface(self):
+        srv = _server()
+        _feed(srv, 3)
+        snap = srv.obs.snapshot()
+        mq = snap["model_quality"]
+        assert mq["drift"]["models"][1]["has_reference"]
+        assert mq["drift"]["windows_scored"] >= 2
+        assert "drift:1" in mq["health"]
+        text = srv.obs.to_prometheus_text()
+        assert '# TYPE drift_psi gauge' in text
+        assert 'drift_psi{model="1"}' in text
+        assert 'health_alert_open{rule="drift:1"} 0' in text
+
+    def test_new_event_kinds_registered(self):
+        for kind in ("drift_alert", "slo_burn", "shadow_divergence",
+                     "alert_cleared"):
+            assert kind in EVENT_KINDS
+
+
+class TestCategoricalSketch:
+    def test_exact_counts_replace_octaves(self):
+        from repro.obs import Observability
+        obs = Observability()
+        mon = obs.enable_drift(window=64, n_lanes=2,
+                               categorical_lanes=(0,), cat_cap=8)
+        x = np.zeros((64, 2), np.int32)
+        x[:, 0] = np.where(np.arange(64) % 2 == 0, 5, 6)  # octave-3 both
+        mon.observe_features(1, x)        # → reference
+        mon.observe_features(1, x)        # identical window → 0
+        assert mon.max_psi(1) == 0.0
+        # 5↔6 share an octave: the binned sketch cannot see this swap,
+        # the exact categorical sketch must
+        y = x.copy()
+        y[:, 0] = np.where(np.arange(64) % 4 == 0, 5, 6)
+        mon.observe_features(1, y)
+        assert mon.max_psi(1) > 0.01
+
+    def test_overflowed_lane_falls_back_to_octaves(self):
+        from repro.obs import Observability
+        obs = Observability()
+        mon = obs.enable_drift(window=64, n_lanes=2,
+                               categorical_lanes=(0,), cat_cap=4)
+        x = np.zeros((64, 2), np.int32)
+        x[:, 0] = np.arange(64)           # 64 distinct values > cat_cap
+        mon.observe_features(1, x)        # → frozen as the reference
+        # the overflow marker rides into the frozen reference ...
+        assert mon._ref_cat[0].get(0, "absent") is None
+        mon.observe_features(1, x)
+        # ... so scoring falls back to the octave bins and still works
+        assert mon.max_psi(1) == pytest.approx(0.0, abs=1e-9)
+
+
+class TestChaosDriftSite:
+    def test_injected_shift_fires_exactly_once(self):
+        """The CI chaos lane's drill: a ``"drift"``-site FaultSpec shifts
+        lane 0 on every fresh ingest from event 4 on; the model-quality
+        plane raises exactly one ``drift_alert`` (hysteresis holds under
+        a sustained injected shift)."""
+        srv = _server()
+        plan = FaultPlan([FaultSpec(site="drift", lane=0, shift=6,
+                                    start=4, count=FOREVER, every=1)])
+        plan.install(srv)
+        _feed(srv, 4)                     # events 0-3: clean (ref + base)
+        _feed(srv, 4)                     # events 4-7: shifted by the plan
+        assert len(plan.fired) == 4
+        assert all(site == "drift" for site, _, _ in plan.fired)
+        assert len(_alerts(srv)) == 1
+        assert srv.obs.health.rules["drift:1"].open
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec(site="drift", shift=32)
+        with pytest.raises(ValueError):
+            FaultSpec(site="drift", lane=-1)
+
+    def test_unarmed_plan_leaves_features_untouched(self):
+        plan = FaultPlan([FaultSpec(site="dispatch")])
+        x = np.arange(12, dtype=np.int32).reshape(3, 4)
+        assert plan.shift_features(x) is x
+        assert not plan.has_site("drift")
+
+
+class TestHealthRules:
+    def _mon(self):
+        reg = MetricsRegistry()
+        log = EventLog(capacity=64)
+        return HealthMonitor(reg, log), log
+
+    def test_hysteresis_open_close_cycle(self):
+        mon, log = self._mon()
+        sig = {"v": 0.0}
+        mon.add_rule("r", "drift_alert", lambda: sig["v"], 1.0,
+                     close_ratio=0.5)
+        mon.evaluate()
+        assert not mon.rules["r"].open
+        sig["v"] = 1.5
+        mon.evaluate()
+        mon.evaluate()                    # still above: no second event
+        assert mon.rules["r"].fired == 1
+        sig["v"] = 0.8                    # below open, above close: holds
+        mon.evaluate()
+        assert mon.rules["r"].open
+        sig["v"] = 0.4                    # below threshold*close_ratio
+        mon.evaluate()
+        assert not mon.rules["r"].open
+        kinds = [e.kind for e in log.records()]
+        assert kinds == ["drift_alert", "alert_cleared"]
+        sig["v"] = 2.0                    # re-armed: fires again
+        mon.evaluate()
+        assert mon.rules["r"].fired == 2
+
+    def test_nan_signal_is_skipped(self):
+        mon, log = self._mon()
+        mon.add_rule("r", "slo_burn", lambda: float("nan"), 1.0)
+        mon.evaluate()
+        assert mon.rules["r"].last_value is None
+        assert not mon.rules["r"].open and len(log.records()) == 0
+
+    def test_dead_signal_never_poisons_the_table(self):
+        mon, _ = self._mon()
+        mon.add_rule("dead", "slo_burn", lambda: 1 / 0, 1.0)
+        live = {"v": 5.0}
+        mon.add_rule("live", "drift_alert", lambda: live["v"], 1.0)
+        mon.evaluate()
+        assert mon.rules["live"].open
+
+    def test_reset_rearms(self):
+        mon, _ = self._mon()
+        mon.add_rule("r", "drift_alert", lambda: 2.0, 1.0)
+        mon.evaluate()
+        assert mon.rules["r"].open
+        mon.reset_rule("r")
+        assert not mon.rules["r"].open
+        assert mon.rules["r"].last_value is None
+
+
+class TestSLOBurn:
+    def test_server_slo_burn_fires_once(self):
+        srv = _server(slo_budget=1e-12)   # any submit blows the budget
+        from repro.data.packets import raw_trace
+        srv.install_feature_spec(1, list(range(WIDTH)))
+        raw = raw_trace(np.random.default_rng(3), 128, n_flows=8,
+                        model_ids=(1,))
+        srv.submit_raw(raw)
+        srv.drain_packets()
+        srv.submit_raw(raw[:64])
+        srv.drain_packets()
+        burns = _alerts(srv, "slo_burn")
+        assert len(burns) == 1
+        assert burns[0]["rule"] == "slo:submit_p99"
+        assert srv.obs.health.rules["slo:submit_p99"].open
+
+    def test_fabric_slo_burn(self):
+        fab = ShardedPacketServer(
+            n_shards=2, max_width=WIDTH, frac_bits=FRAC, ingress_batch=64,
+            max_inflight=2, slo_budget=1e-12)
+        fab.install(1, _weights(7), ["relu"], final_activation="sigmoid")
+        fab.install_feature_spec(1, list(range(WIDTH)))
+        from repro.data.packets import raw_trace
+        raw = raw_trace(np.random.default_rng(5), 256, n_flows=16,
+                        model_ids=(1,))
+        fab.submit_raw(raw)
+        fab.drain_packets()
+        burns = [e for e in fab.obs.events.snapshot(limit=None)
+                 if e["kind"] == "slo_burn"]
+        assert len(burns) == 1
+        assert burns[0]["rule"] == "slo:fabric_submit_p99"
+
+    def test_generous_budget_stays_quiet(self):
+        srv = _server(slo_budget=1e6)
+        _feed(srv, 2)
+        assert _alerts(srv, "slo_burn") == []
+
+
+class TestShadowSampling:
+    @settings(max_examples=80, deadline=None)
+    @given(lo=st.integers(0, 10_000), n=st.integers(1, 400),
+           e=st.integers(1, 13))
+    def test_contiguous_run_matches_modulo_brute_force(self, lo, n, e):
+        sc = ShadowScorer.__new__(ShadowScorer)
+        sc.every = e
+        tickets = np.arange(lo, lo + n, dtype=np.int64)
+        got = sc._sampled_idx(tickets)
+        want = np.nonzero(tickets % e == 0)[0]
+        assert np.array_equal(got, want)
+
+    def test_gapped_tickets_fall_back_to_modulo(self):
+        sc = ShadowScorer.__new__(ShadowScorer)
+        sc.every = 4
+        tickets = np.asarray([3, 4, 8, 9, 13, 20], np.int64)
+        got = sc._sampled_idx(tickets)
+        assert np.array_equal(got, [1, 2, 5])
+
+    def test_selection_is_deterministic_across_runs(self):
+        def run():
+            srv = _server(shadow_model=2, shadow_every=8)
+            srv.install(2, _weights(7), ["relu"],
+                        final_activation="sigmoid")
+            _feed(srv, 3)
+            return list(srv.obs.drift.shadows[0].sampled_tickets)
+
+        a, b = run(), run()
+        assert a == b
+        assert a and all(t % 8 == 0 for t in a)
+
+
+class TestShadowScoring:
+    def _shadow_server(self, shadow_seed=7, **kw):
+        srv = _server(shadow_model=2, shadow_every=4, **kw)
+        srv.install(2, _weights(shadow_seed), ["relu"],
+                    final_activation="sigmoid")
+        return srv
+
+    def test_identical_weights_agree_fully(self):
+        srv = self._shadow_server(shadow_seed=7)   # same weights as mid 1
+        _feed(srv, 4)
+        sc = srv.obs.drift.shadows[0]
+        snap = sc.snapshot()
+        assert snap["pairs"] >= WINDOW               # 1-in-4 of 4 rounds
+        assert snap["agreement"] == 1.0
+        assert sc.disagreement() == 0.0
+        assert snap["by_model"][1]["pairs"] == snap["pairs"]
+        conf = np.asarray(snap["confusion"])
+        assert conf.sum() == snap["pairs"]
+        assert np.trace(conf) == conf.sum()          # all on the diagonal
+        assert _alerts(srv, "shadow_divergence") == []
+
+    def test_shadow_traffic_never_inflates_throughput(self):
+        plain = _server()
+        _feed(plain, 4)
+        shadowed = self._shadow_server()
+        _feed(shadowed, 4)
+        # identical served traffic → identical engine accounting, even
+        # though the shadow lane dispatched extra device batches
+        assert (shadowed.engine.stats["packets"]
+                == plain.engine.stats["packets"] == 4 * WINDOW)
+        assert (shadowed.engine.stats["bytes_in"]
+                == plain.engine.stats["bytes_in"])
+
+    def test_whole_plane_adds_zero_retraces(self):
+        srv = self._shadow_server()
+        _feed(srv, 2)                    # warmup traces the kernel shapes
+        before = srv.engine.trace_count
+        _feed(srv, 4)
+        _feed(srv, 2, shift=6)           # alert path included
+        assert srv.engine.trace_count == before
+
+    def test_divergent_shadow_raises_shadow_divergence(self):
+        srv = self._shadow_server(shadow_seed=1234)  # different weights
+        _feed(srv, 4)
+        sc = srv.obs.drift.shadows[0]
+        assert sc.pairs >= 64
+        if sc.disagreement() >= 0.25:    # weights differ → labels differ
+            div = _alerts(srv, "shadow_divergence")
+            assert len(div) == 1
+            assert div[0]["shadow_model"] == 2
+
+    def test_partial_flush_pads_with_model_zero(self):
+        srv = self._shadow_server()
+        x = _round()[:40]                # fewer than one shadow batch
+        srv.ingress.submit_features(x, np.full(40, 1, np.int32))
+        srv.drain_packets()              # flush() pads and still scores
+        sc = srv.obs.drift.shadows[0]
+        assert sc.pairs == 10            # 1-in-4 of 40

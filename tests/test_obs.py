@@ -21,6 +21,7 @@ packet-lifecycle tracing, structured event log).
 """
 
 import threading
+import warnings
 
 import numpy as np
 import pytest
@@ -262,11 +263,12 @@ class TestFailoverDrillEventLog:
         assert all(e.shard in (0, 2, 3) for e in migr)
         assert all(e.detail["source"] == 1 for e in migr)
         assert (sum(e.detail["flows"] for e in migr)
-                == fab.fault_stats["migrated_flows"]
+                == fab.fault_stats["fabric_migrated_flows_total"]
                 == kill.detail["flows"])
         # the counters agree with the log
-        assert fab.fault_stats["deaths"] == len(kills) == 1
-        assert (fab.fault_stats["watchdog_strikes"] == len(strikes))
+        assert fab.fault_stats["fabric_deaths_total"] == len(kills) == 1
+        assert (fab.fault_stats["fabric_watchdog_strikes_total"]
+                == len(strikes))
 
 
 class TestChaosEvents:
@@ -287,7 +289,7 @@ class TestChaosEvents:
         # chaos firings are transient (swallowed by retries): the log
         # records them even though no caller ever saw an error
         assert not any(isinstance(r, PacketError) for r in out)
-        assert srv.ingress.stats["dispatch_retries"] > 0
+        assert srv.ingress.stats["ingress_dispatch_retries_total"] > 0
 
 
 class TestExport:
@@ -324,6 +326,35 @@ class TestExport:
         assert parsed['ingress_packets_total{shard="0"}'] == 300
         assert parsed['engine_retraces_total{shard="0"}'] >= 0
 
+    def test_prometheus_help_and_type_per_family(self):
+        srv = _plain()
+        srv.submit_raw(_trace(120, 6))
+        srv.drain_packets()
+        text = srv.obs.to_prometheus_text()
+        helped, typed = set(), set()
+        for line in text.splitlines():
+            if line.startswith("# HELP "):
+                helped.add(line.split(" ", 3)[2])
+            elif line.startswith("# TYPE "):
+                typed.add(line.split(" ", 3)[2])
+        snap = srv.obs.registry.snapshot()
+        fams = {n.removesuffix("_count").removesuffix("_sum")
+                for n in snap}
+        # every exported family leads with both comment lines
+        assert helped == typed
+        assert {f for f in fams if not f.endswith(("_count", "_sum"))} \
+            <= helped
+
+    def test_prometheus_label_values_escaped(self):
+        reg = MetricsRegistry()
+        reg.counter("odd_total", "spot", rule='q"\\x\nend').inc(3)
+        text = reg.to_prometheus_text()
+        line = [ln for ln in text.splitlines()
+                if ln.startswith("odd_total{")][0]
+        assert line == 'odd_total{rule="q\\"\\\\x\\nend"} 3'
+        # the raw control characters never leak into the exposition
+        assert "\n".join(text.splitlines()) == text.rstrip("\n")
+
     def test_snapshot_shape(self):
         srv = _plain(trace_every=32)
         srv.submit_raw(_trace(200, 9))
@@ -343,9 +374,14 @@ class TestStatsNaming:
         srv.submit_raw(_trace(100, 3))
         srv.drain_packets()
         stats = srv.ingress.stats
-        assert stats["packets"] == stats["ingress_packets_total"] == 100
-        before = stats["cache_hits"]
-        stats["cache_hits"] += 5  # the legacy write pattern
+        # legacy spellings still read/write the canonical cell, but now
+        # carry a DeprecationWarning (once per key per adapter)
+        with pytest.warns(DeprecationWarning, match="deprecated alias"):
+            legacy = stats["packets"]
+        assert legacy == stats["ingress_packets_total"] == 100
+        with pytest.warns(DeprecationWarning, match="deprecated alias"):
+            before = stats["cache_hits"]
+            stats["cache_hits"] += 5  # the legacy write pattern
         assert stats["ingress_cache_hits_total"] == before + 5
         # the registry cell is the same store
         reg = srv.obs.registry.snapshot()
@@ -354,14 +390,39 @@ class TestStatsNaming:
         assert set(stats["lane_batches"].keys()) >= {"mlp", "forest",
                                                      "both"}
 
+    def test_canonical_keys_never_warn(self):
+        srv = _plain()
+        srv.submit_raw(_trace(100, 3))
+        srv.drain_packets()
+        stats = srv.ingress.stats
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            assert stats["ingress_packets_total"] == 100
+            stats["ingress_cache_hits_total"] += 0
+            # the dual-spelling dict export reads cells directly
+            both = stats.as_dict()
+        assert both["packets"] == both["ingress_packets_total"] == 100
+
+    def test_alias_warns_once_per_key_per_adapter(self):
+        srv = _plain()
+        srv.submit_raw(_trace(100, 3))
+        srv.drain_packets()
+        stats = srv.ingress.stats
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            stats["packets"], stats["packets"], stats["cache_hits"]
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 2  # one per distinct alias key, not per access
+
     def test_flow_aliases(self):
         srv = _plain()
         srv.submit_raw(_trace(100, 3))
         srv.drain_packets()
         t = srv.flow.table
-        assert t.stats["lookups"] == t.stats["flow_lookups_total"] > 0
-        assert (srv.flow.stats["raw_packets"]
-                == srv.flow.stats["flow_raw_packets_total"] == 100)
+        with pytest.warns(DeprecationWarning, match="deprecated alias"):
+            assert t.stats["lookups"] == t.stats["flow_lookups_total"] > 0
+            assert (srv.flow.stats["raw_packets"]
+                    == srv.flow.stats["flow_raw_packets_total"] == 100)
 
     def test_fabric_fault_stats_aliases(self):
         fab = _fabric(2)
@@ -369,10 +430,13 @@ class TestStatsNaming:
         fab.drain_packets()
         assert fab.kill_shard(0, "drill") is True
         fs = fab.fault_stats
-        assert fs["deaths"] == fs["fabric_deaths_total"] == 1
+        with pytest.warns(DeprecationWarning, match="deprecated alias"):
+            assert fs["deaths"] == fs["fabric_deaths_total"] == 1
         assert fs["dead_shards"][0]["shard"] == 0
-        # stats() exports both spellings for one release
-        faults = fab.stats()["faults"]
+        # stats() exports both spellings for one release, warning-free
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            faults = fab.stats()["faults"]
         assert faults["deaths"] == faults["fabric_deaths_total"] == 1
 
 
@@ -440,7 +504,7 @@ class TestObservabilityBundle:
         adapter = StatsAdapter()
         from repro.obs import Counter
         c = adapter.bind("demo_things_total", Counter(), "things")
-        adapter["things"] += 3
+        adapter["demo_things_total"] += 3
         reg.attach("demo_things_total", c, shard=7)
         seen = []
         reg.register_collector(lambda: seen.append(True))
