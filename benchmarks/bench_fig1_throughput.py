@@ -88,13 +88,37 @@ TRACE_TOTAL = 16384   # duplicate-trace length (packets)
 TRACE_CHUNK = 2048    # per-connection arrival chunk = ingress batch size
 DUP_FRACTION = 0.5    # fraction of trace packets that repeat an earlier one
 
+# Burst-overload drill (PR-10 hard-latency serving).  One pipeline with a
+# per-model SLO budget installed, a reflex program covering the dominant
+# model, and the "overload" chaos site inflating device cost SLO_SLOWDOWN×.
+# Constants are tuned so the drill's two-lane outcome is unambiguous on a
+# single-core CI runner: the watermark crosses early (most traffic reflex-
+# serves), the un-covered model sheds only past hard capacity, and the
+# un-shed p99 clears the budget with ~3× margin.
+SLO_TRACE = 16384           # drill trace length (packets)
+SLO_CHUNK = 64              # arrival chunk — small so admission reacts mid-burst
+SLO_BUDGET_US = 100_000.0   # per-model deadline installed via the control plane
+SLO_SLOWDOWN = 10.0         # overload chaos factor (device cost inflation)
+SLO_PINNED_COST = 1.2e-3    # pinned dispatch-cost EWMA (s): the overload hold
+                            # is derived from the EWMA, and the EWMA measures
+                            # retire wall time *including* the hold — left
+                            # unpinned the two feed back until every hold
+                            # saturates at the cap, which benchmarks the cap,
+                            # not the scheduler.  Pinning gives every run the
+                            # same known device cost (the tests do the same).
+SLO_WATERMARK = 192         # reflex past this staged+inflight depth
+SLO_CAPACITY = 320          # shed past this
+
 # Reduced-K smoke mode for CI: same code paths, ~5× less timed work.
 # RETRY_SWEEPS stays closer to the full budget: the Fig-1 monotone-trend
 # bool is gated by CI, and on noisy shared runners the adjacent-row
 # separation is exactly what the retries exist to establish.
+# SLO_TRACE halves rather than quarters: the drill's throughput-ratio
+# floor (0.7) needs enough packets that the fixed jit/warm overhead
+# amortizes out of both sides of the ratio.
 _REDUCED_OVERRIDES = dict(BATCH=4096, REPS=2, SWEEPS=1, RETRY_SWEEPS=5,
                           LOOPS=2, TRACE_TOTAL=8192, SHARD_TRACE=16384,
-                          FAULT_TRACE=8192)
+                          FAULT_TRACE=8192, SLO_TRACE=8192)
 
 
 def _min_time(fn, reps: int | None = None) -> float:
@@ -393,13 +417,13 @@ def _pipeline_comparison(rng, verbose: bool):
     # cold single pass: how much device work does coalescing alone remove?
     pipe.reset_tickets()
     pipe.cache.clear()
-    h0, c0 = pipe.cache.hits, pipe.stats["coalesced"]
-    d0 = pipe.stats["dispatched_rows"]
+    h0, c0 = pipe.cache.hits, pipe.stats["ingress_coalesced_total"]
+    d0 = pipe.stats["ingress_dispatched_rows_total"]
     t0 = time.perf_counter()
     pipeline_loop()
     t_cold = time.perf_counter() - t0
-    short_circuited = (pipe.cache.hits - h0) + (pipe.stats["coalesced"] - c0)
-    dispatched = pipe.stats["dispatched_rows"] - d0
+    short_circuited = (pipe.cache.hits - h0) + (pipe.stats["ingress_coalesced_total"] - c0)
+    dispatched = pipe.stats["ingress_dispatched_rows_total"] - d0
 
     # per-packet latency percentiles (one instrumented pass each): steady
     # rides the warm result cache, cold pays the full staged dispatch path
@@ -413,11 +437,11 @@ def _pipeline_comparison(rng, verbose: bool):
     # fixed-shape dispatch path instead of resolving from the warm cache
     pipe.reset_tickets()  # also clears the pending-window index
     pipe.cache.clear()
-    d_before = pipe.stats["batches"]
+    d_before = pipe.stats["ingress_batches_total"]
     for ragged in (1, 17, 301, chunk - 1):
         pipe.submit(wire[:ragged])
         pipe.flush()
-    assert pipe.stats["batches"] > d_before, "ragged check dispatched nothing"
+    assert pipe.stats["ingress_batches_total"] > d_before, "ragged check dispatched nothing"
     pipe.reset_tickets()
     zero_retraces = srv.engine.trace_count == traces_before
 
@@ -760,14 +784,14 @@ def _flow_raw_comparison(rng, verbose: bool):
 
     raw_loop()  # converge every flow + populate the result cache
     h0, m0 = pipe.cache.hits, pipe.cache.misses
-    c0 = pipe.stats["coalesced"]
+    c0 = pipe.stats["ingress_coalesced_total"]
     traces_before = srv.engine.trace_count
     t_steady = float("inf")
     for _ in range(flow_reps):
         t_steady = min(t_steady, _min_time(raw_loop, reps=1))
     dh = pipe.cache.hits - h0
     dmiss = pipe.cache.misses - m0
-    dco = pipe.stats["coalesced"] - c0
+    dco = pipe.stats["ingress_coalesced_total"] - c0
     steady_hit_rate = dh / (dh + dmiss) if dh + dmiss else 0.0
     steady_short = (dh + dco) / (dh + dmiss) if dh + dmiss else 0.0
 
@@ -1038,7 +1062,7 @@ def _faults_section(rng, verbose: bool):
     zero_retraces = all(
         fab.shards[s].engine.trace_count == traces0[s]
         for s in fab.alive_shards)
-    migrated = int(fab.fault_stats["migrated_flows"])
+    migrated = int(fab.fault_stats["fabric_migrated_flows_total"])
 
     # -- degraded throughput: critical path over 3 survivors vs 4 alive --
     def critical_path(srv):
@@ -1356,6 +1380,176 @@ def _model_quality_section(rng, verbose: bool):
     return res
 
 
+def _latency_slo_section(rng, verbose: bool):
+    """PR-10 acceptance: the burst-overload drill.
+
+    One pipeline, two models sharing an SLO budget; model 1 (15/16 of the
+    traffic) carries a reflex program, model 2 has none.  The "overload"
+    chaos site inflates the device's effective cost ``SLO_SLOWDOWN``× by
+    holding retires, so the watermark controller sees a real backlog:
+    model-1 packets past the high watermark reflex-serve, model-2 packets
+    past hard capacity shed as typed ``DEADLINE_SHED`` errors, and the
+    deadline-aware closer ships short batches before any queued packet's
+    budget expires.  Gated invariants (``check_regression.py``):
+
+    - ``unshed_p99_within_budget`` — every packet the fabric chose to
+      answer met the installed deadline (p99 of submit→ready).
+    - ``throughput_ratio`` ≥ 0.7 — answered pkt/s under overload vs the
+      unconstrained no-fault baseline: the criterion's "aggregate
+      throughput degrades ≤ 30%" (the reflex lane is host-fast, so with
+      most traffic covered the ratio typically exceeds 1).
+    - ``ticket_accounting_exact`` — every slot resolves in submission
+      order to exactly one of: the bit-exact model-lane row (vs an
+      unconstrained oracle pass over the same wire), the bit-exact reflex
+      row (vs ``reflex_evaluate`` + ``emit_results_np``), or a typed shed.
+    - ``zero_retraces`` — deadline-closed short batches land on warmed
+      ladder rungs, never a fresh jit trace.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.control_plane import ControlPlane
+    from repro.core.inference import DataPlaneEngine
+    from repro.core.ingress import DEADLINE_SHED, IngressPipeline, PacketError
+    from repro.core.packet import FLAG_REFLEX, emit_results_np, encode_packets
+    from repro.obs import Histogram
+    from repro.serve import FaultPlan, FaultSpec, ReflexProgram
+
+    width, total, chunk = 16, SLO_TRACE, SLO_CHUNK
+    reps = max(3, REPS)   # the ratio floor is gated; best-of-2 is too noisy
+    cp = ControlPlane(max_models=4, max_layers=2, max_width=width,
+                      frac_bits=8)
+    for mid in (1, 2):
+        w1 = rng.normal(size=(width, width)).astype(np.float32) * 0.3
+        w2 = rng.normal(size=(width, 4)).astype(np.float32) * 0.3
+        cp.install(mid,
+                   [(w1, np.zeros(width, np.float32)),
+                    (w2, np.zeros(4, np.float32))],
+                   ["relu"], final_activation="sigmoid",
+                   slo_budget_us=SLO_BUDGET_US)
+    eng = DataPlaneEngine(cp, max_features=width)
+
+    # 15:1 traffic skew toward the reflex-covered model: the drill models
+    # a deployment where the hard-latency tier has reflex coverage and a
+    # minority tail does not (the tail is what exercises the shed path)
+    mids = np.where(np.arange(total) % 16 == 15, 2, 1).astype(np.int32)
+    codes = rng.integers(-2000, 2000, (total, width)).astype(np.int32)
+    wire = np.asarray(encode_packets(jnp.asarray(mids), jnp.int32(8),
+                                     jnp.asarray(codes)))
+    chunks = [wire[i:i + chunk] for i in range(0, total, chunk)]
+
+    # unconstrained no-fault baseline — also the model-lane oracle rows
+    base_pipe = IngressPipeline(eng, batch_size=256, max_inflight=4,
+                                use_cache=False)
+
+    def base_loop():
+        base_pipe.reset_tickets()
+        for ch in chunks:
+            base_pipe.submit(ch)
+        return base_pipe.drain()
+
+    oracle = base_loop()
+    base_t = _min_time(base_loop, reps)
+
+    prog = ReflexProgram.threshold(0, 0, on_true=(256, 0, 0, 0),
+                                   on_false=(0, 256, 0, 0))
+    cp.install_reflex(1, prog)
+    pipe = IngressPipeline(eng, batch_size=256, max_inflight=4,
+                           use_cache=False, queue_capacity=SLO_CAPACITY,
+                           queue_high_watermark=SLO_WATERMARK)
+
+    def drill_loop():
+        pipe.reset_tickets()
+        for ch in chunks:
+            pipe.submit(ch)
+            pipe.poll()
+        return pipe.drain()
+
+    drill_loop()                          # no-fault warm: jit every rung
+    pipe.dispatch_cost_ewma = SLO_PINNED_COST
+    pipe._COST_ALPHA = 0.0                # see SLO_PINNED_COST note above
+    pipe.fault_plan = FaultPlan(
+        [FaultSpec(site="overload", slowdown=SLO_SLOWDOWN, count=1 << 60)],
+        seed=3)
+    traces_before = eng.trace_count
+    drill_t = _min_time(drill_loop, reps)
+
+    # instrumented pass: per-packet submit→ready stamps (same design as
+    # ``_latency_pass``), plus the final slot-by-slot accounting audit
+    pipe.reset_tickets()
+    sub = np.empty(total)
+    rdy = np.full(total, np.nan)
+
+    def stamp():
+        now = time.perf_counter()
+        k = pipe._n_tickets
+        st = pipe._status[:k]
+        fresh = np.isnan(rdy[:k]) & (st == 1)
+        rdy[:k][fresh] = now
+
+    for ch in chunks:
+        t0 = time.perf_counter()
+        pipe.submit(ch)
+        sub[pipe._n_tickets - len(ch):pipe._n_tickets] = t0
+        pipe.poll()
+        pipe._resolve_ready_chunks()
+        stamp()
+    out = pipe.drain()
+    rdy[np.isnan(rdy)] = time.perf_counter()   # resolved during drain
+    zero_retraces = bool(eng.trace_count == traces_before)
+
+    shed = [i for i, r in enumerate(out) if isinstance(r, PacketError)]
+    served = [i for i, r in enumerate(out) if not isinstance(r, PacketError)]
+    reflex = [i for i in served if int(out[i][6]) & FLAG_REFLEX]
+    model = [i for i in served if not (int(out[i][6]) & FLAG_REFLEX)]
+
+    exact = (len(out) == total
+             and all(out[i].reason == DEADLINE_SHED for i in shed)
+             and all(np.array_equal(out[i], oracle[i]) for i in model))
+    if reflex:
+        rs = np.asarray(reflex)
+        _, outw = cp.reflex_evaluate(mids[rs], codes[rs])
+        flags = np.array([int(out[i][6]) for i in reflex])
+        want = emit_results_np(mids[rs], flags, outw[:, :pipe.out_feats],
+                               eng.frac)
+        exact = exact and all(np.array_equal(out[i], want[j])
+                              for j, i in enumerate(reflex))
+
+    h = Histogram(lo=1e-7, hi=10.0, buckets_per_decade=240)
+    lat = rdy - sub
+    h.observe_many(lat[np.asarray(served)])
+    p99_us = h.percentile(99.0) * 1e6
+
+    # reflex lane cost, isolated: the vectorized program on a warm batch
+    xb, mb = codes[:4096], np.full(4096, 1, np.int32)
+    cp.reflex_evaluate(mb, xb)
+    reflex_t = _min_time(lambda: cp.reflex_evaluate(mb, xb), reps)
+
+    answered = total - len(shed)
+    res = {
+        "budget_us": SLO_BUDGET_US,
+        "slowdown": SLO_SLOWDOWN,
+        "shed_fraction": len(shed) / total,
+        "reflex_fraction": len(reflex) / total,
+        "unshed_p99_us": p99_us,
+        "unshed_p99_within_budget": bool(p99_us <= SLO_BUDGET_US),
+        "throughput_ratio": (answered / drill_t) / (total / base_t),
+        "ticket_accounting_exact": bool(exact),
+        "zero_retraces": zero_retraces,
+        "reflex_ns_per_packet": reflex_t / 4096 * 1e9,
+        "trace_rows": total,
+    }
+    if verbose:
+        print(f"  burst-overload drill      : p99 {res['unshed_p99_us']:,.0f}"
+              f" us vs budget {SLO_BUDGET_US:,.0f} us "
+              f"({'WITHIN' if res['unshed_p99_within_budget'] else 'OVER'}), "
+              f"shed {res['shed_fraction']:.1%}, reflex "
+              f"{res['reflex_fraction']:.1%}, throughput ratio "
+              f"{res['throughput_ratio']:.2f} (floor 0.7), accounting "
+              f"{'exact' if res['ticket_accounting_exact'] else 'BROKEN'}, "
+              f"reflex {res['reflex_ns_per_packet']:.0f} ns/pkt")
+    return res
+
+
 def _json_path() -> str:
     default = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_fig1.json")
@@ -1396,6 +1590,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
         faults = _faults_section(rng, verbose)
         obs_sec = _observability_section(rng, verbose)
         model_quality = _model_quality_section(rng, verbose)
+        latency_slo = _latency_slo_section(rng, verbose)
         act_note = _activation_lowering_note(rng, verbose)
     finally:
         if saved:
@@ -1406,6 +1601,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
               "sharded": sharded, "faults": faults,
               "observability": obs_sec,
               "model_quality": model_quality,
+              "latency_slo": latency_slo,
               "activation_lowering": act_note}
     payload = {
         "schema": 1,
@@ -1425,6 +1621,7 @@ def run(verbose: bool = True, reduced: bool | None = None,
         "faults": faults,
         "observability": obs_sec,
         "model_quality": model_quality,
+        "latency_slo": latency_slo,
         "activation_lowering": act_note,
     }
     if write_json:

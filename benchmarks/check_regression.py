@@ -89,6 +89,15 @@ TRACKED = {
     # PR 9: drift/shadow taps must stay (near-)free on the hot path
     ("model_quality", "tap_ratio"): ("floor", 0.95),
     ("model_quality", "zero_retraces"): "bool",
+    # PR 10: the burst-overload drill — un-shed packets meet the installed
+    # deadline, answered throughput degrades <= 30% vs the unconstrained
+    # baseline (a within-run ratio, so machine-independent), every slot
+    # resolves bit-exactly in submission order, and deadline-closed short
+    # batches never retrace
+    ("latency_slo", "unshed_p99_within_budget"): "bool",
+    ("latency_slo", "throughput_ratio"): ("floor", 0.7),
+    ("latency_slo", "ticket_accounting_exact"): "bool",
+    ("latency_slo", "zero_retraces"): "bool",
     ("trend_validated",): "bool",
 }
 

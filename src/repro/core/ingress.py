@@ -81,16 +81,23 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from .packet import (FEATURE_BYTES, HEADER_BYTES, emit_results_np,
-                     parse_packets_np)
+from .packet import (FEATURE_BYTES, FLAG_REFLEX, HEADER_BYTES,
+                     emit_results_np, parse_packets_np)
 from ..obs import Observability, StatsAdapter
 
 __all__ = ["PacketError", "BatchError", "ResultCache", "IngressPipeline",
-           "pack_rows", "STATUS_PENDING", "STATUS_READY", "STATUS_ERROR"]
+           "pack_rows", "STATUS_PENDING", "STATUS_READY", "STATUS_ERROR",
+           "DEADLINE_SHED", "DRAIN_TIMEOUT"]
 
 STATUS_PENDING = 0
 STATUS_READY = 1
 STATUS_ERROR = 2
+
+# Typed PacketError reasons of the hard-latency layer: callers match on
+# these exact strings (the fabric re-tickets them across the merge, the
+# bench's ticket-accounting oracle counts them).
+DEADLINE_SHED = "deadline shed: ingress queue past hard capacity"
+DRAIN_TIMEOUT = "drain timeout: unresolved at window deadline"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -529,6 +536,8 @@ class _InFlight:
     generation: Optional[int]  # table generation at dispatch (None = ambiguous)
     lanes: str = "both"     # lane program dispatched (salvage probes reuse
                             # it — same jit shape, zero retraces)
+    t_dispatch: float = 0.0  # dispatch timestamp (cost-EWMA sample start)
+    hold_until: float = 0.0  # overload chaos: earliest retire time (0 = now)
 
 
 @dataclasses.dataclass
@@ -542,6 +551,8 @@ class _OpenBatch:
     t0: float               # age clock (flush_after knob)
     gen0: int               # generation the rows were family-classified at
     miss_idx: np.ndarray    # (batch_size,) global miss index scratch
+    deadline: float = float("inf")  # earliest staged-row SLO deadline
+                                    # (absolute clock seconds)
 
 
 @dataclasses.dataclass
@@ -623,6 +634,12 @@ class IngressPipeline:
     _ADMIT_THRESHOLD = 0.05
     _ADMIT_ALPHA = 0.5
     _PROBE_STRIDE = 8
+    # dispatch-cost EWMA smoothing (deadline scheduler): biased toward
+    # history so one slow batch widens the safety margin gradually
+    _COST_ALPHA = 0.25
+    # hard wall-clock ceiling on one overload-chaos hold (seconds): a
+    # chaos spec may inflate latency, never wedge a retire unboundedly
+    _OVERLOAD_HOLD_CAP = 0.5
 
     def __init__(self, engine, *, batch_size: int = 2048,
                  max_inflight: int = 2, use_cache: bool = True,
@@ -631,6 +648,8 @@ class IngressPipeline:
                  adaptive_batch: bool = False,
                  clock=None, shard_id: int = 0,
                  max_retries: int = 2, retry_backoff: float = 0.0,
+                 queue_capacity: Optional[int] = None,
+                 queue_high_watermark: Optional[int] = None,
                  obs: Optional[Observability] = None):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
@@ -640,6 +659,13 @@ class IngressPipeline:
             raise ValueError("flush_after must be >= 0 seconds (or None)")
         if max_retries < 0 or retry_backoff < 0:
             raise ValueError("max_retries/retry_backoff must be >= 0")
+        if queue_capacity is not None and queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1 rows (or None)")
+        if queue_high_watermark is not None and queue_high_watermark < 0:
+            raise ValueError("queue_high_watermark must be >= 0 (or None)")
+        if queue_capacity is not None and queue_high_watermark is not None \
+                and queue_high_watermark > queue_capacity:
+            raise ValueError("queue_high_watermark must be <= queue_capacity")
         self.engine = engine
         self.cp = engine.cp
         # shard-local identity: tickets, miss indices, the result cache and
@@ -725,6 +751,18 @@ class IngressPipeline:
         self._dup_ewma = 1.0  # optimistic start: admit until proven unique
         self._gate_open = True  # hysteresis state (see the class comment)
 
+        # Hard-latency layer (PR 10): the watermark controller's bounds on
+        # model-lane queue depth (staged + in-flight rows) and the measured
+        # dispatch→retire cost the deadline scheduler subtracts from the
+        # oldest staged row's remaining budget.  The EWMA seeds itself from
+        # the first retired batch; tests inject a fixed cost directly.
+        self.queue_capacity = queue_capacity
+        self.queue_high_watermark = queue_high_watermark
+        self.dispatch_cost_ewma = 0.0
+        # async model-lane confirmation of reflex answers — attached
+        # externally (serve.reflex.ReflexConfirmer), like ``shadow``
+        self.reflex_confirm = None
+
         self._inflight: Deque[_InFlight] = deque()
         self._chunks: Deque[_ChunkRecord] = deque()
 
@@ -763,10 +801,10 @@ class IngressPipeline:
 
         # Observability (PR 8): counters live in the metrics registry under
         # the canonical <subsystem>_<noun>_total names; ``self.stats`` is a
-        # thin adapter keeping the pre-PR-8 keys working (reads and the
-        # ``stats["k"] += n`` pattern) as aliases.  A server passes its
-        # shared ``obs`` so every shard's cells land in one registry under
-        # a shard label; a standalone pipeline gets a private one.
+        # thin adapter over the same cells (reads and the ``stats["k"] += n``
+        # write pattern).  A server passes its shared ``obs`` so every
+        # shard's cells land in one registry under a shard label; a
+        # standalone pipeline gets a private one.
         self.obs = obs if obs is not None else Observability(clock=clock)
         self.tracer = self.obs.make_tracer(shard=self.shard_id, clock=clock)
         # model-quality plane (PR 9): the feature/prediction taps read
@@ -781,21 +819,29 @@ class IngressPipeline:
         sid = self.shard_id
         stats = StatsAdapter()
 
-        def _c(canonical: str, alias: str) -> None:
-            stats.bind(canonical, reg.counter(canonical, shard=sid), alias)
+        def _c(canonical: str) -> None:
+            stats.bind(canonical, reg.counter(canonical, shard=sid))
 
-        _c("ingress_packets_total", "packets")
-        _c("ingress_cache_hits_total", "cache_hits")
-        _c("ingress_coalesced_total", "coalesced")
-        _c("ingress_dispatched_rows_total", "dispatched_rows")
-        _c("ingress_padded_rows_total", "padded_rows")
-        _c("ingress_batches_total", "batches")
-        _c("ingress_errors_total", "errors")
-        _c("ingress_dispatch_retries_total", "dispatch_retries")
-        _c("ingress_dispatch_failures_total", "dispatch_failures")
-        _c("ingress_quarantined_rows_total", "quarantined_rows")
-        _c("ingress_probe_batches_total", "probe_batches")
-        _c("ingress_corrupted_rows_total", "corrupted_rows")
+        _c("ingress_packets_total")
+        _c("ingress_cache_hits_total")
+        _c("ingress_coalesced_total")
+        _c("ingress_dispatched_rows_total")
+        _c("ingress_padded_rows_total")
+        _c("ingress_batches_total")
+        _c("ingress_errors_total")
+        _c("ingress_dispatch_retries_total")
+        _c("ingress_dispatch_failures_total")
+        _c("ingress_quarantined_rows_total")
+        _c("ingress_probe_batches_total")
+        _c("ingress_corrupted_rows_total")
+        _c("ingress_reflex_served_total")
+        _c("ingress_shed_total")
+        _c("ingress_drain_timeouts_total")
+        # dispatch→retire wall cost per device batch — the deadline
+        # scheduler's safety margin is the EWMA of these samples
+        self._h_dispatch = reg.histogram(
+            "ingress_dispatch_seconds",
+            "device batch dispatch→retire wall seconds", shard=sid)
         lanes_sub = StatsAdapter()
         for lane in ("mlp", "forest", "both"):
             lanes_sub.bind(lane, reg.counter("ingress_lane_batches_total",
@@ -904,12 +950,16 @@ class IngressPipeline:
             return first, n
         finally:
             self._maybe_flush_aged()
+            self._maybe_close_deadline()
 
     def poll(self) -> bool:
         """Latency-SLO tick for callers with idle arrival gaps: dispatch
-        the partial staging batch if it has exceeded ``flush_after``.
-        Returns True when a dispatch happened.  No-op without the knob."""
-        return self._maybe_flush_aged()
+        the partial staging batch if it has exceeded ``flush_after`` or if
+        the oldest staged packet's remaining deadline budget has dropped
+        to the measured dispatch cost.  Returns True when a dispatch
+        happened.  No-op without either knob."""
+        aged = self._maybe_flush_aged()
+        return self._maybe_close_deadline() or aged
 
     def _maybe_flush_aged(self) -> bool:
         if self.flush_after is None or not self._open:
@@ -918,6 +968,24 @@ class IngressPipeline:
         fired = False
         for fam, o in list(self._open.items()):
             if o.fill and now - o.t0 >= self.flush_after:
+                self._dispatch(fam)
+                fired = True
+        return fired
+
+    def _maybe_close_deadline(self) -> bool:
+        """Deadline-aware batch closing: ship an open batch short (padded
+        to its rung size — the same jit shape, zero retraces) rather than
+        let its earliest staged deadline minus the measured dispatch cost
+        pass.  The comparison is exact on the injectable clock: a batch
+        ships when ``remaining <= dispatch_cost_ewma`` and waits at
+        ``remaining`` one epsilon above it."""
+        if not self._open or not self.cp.slo_active:
+            return False
+        now = self._clock()
+        cost = self.dispatch_cost_ewma
+        fired = False
+        for fam, o in list(self._open.items()):
+            if o.fill and o.deadline - now <= cost:
                 self._dispatch(fam)
                 fired = True
         return fired
@@ -1016,6 +1084,7 @@ class IngressPipeline:
             return first, n
         finally:
             self._maybe_flush_aged()
+            self._maybe_close_deadline()
 
     def _ingest(self, rows: np.ndarray, tickets: np.ndarray,
                 parsed=None) -> None:
@@ -1081,23 +1150,12 @@ class IngressPipeline:
         else:
             fresh = np.ones(n_uniq, bool)
         n_fresh = int(fresh.sum())
-        base = self._n_miss
-        uniq_global[fresh] = base + np.arange(n_fresh)
-        self._n_miss += n_fresh
-        n_coalesced = miss_sel.size - n_fresh
-        self.stats["ingress_coalesced_total"] += n_coalesced
-        self.engine.credit_packets(n_coalesced)  # ride an existing dispatch
-        self._observe_duplication(n, n_hit + n_coalesced)
 
-        miss_idx = uniq_global[inverse]
-        self._chunks.append(_ChunkRecord(
-            tickets=miss_tickets,
-            miss_idx=miss_idx,
-            hi=int(miss_idx.max()) + 1))
+        # the one byte-parse of the serving path — fresh unique rows only
+        # (or a slice of the caller's already-parsed fields)
         if n_fresh:
             fsel = miss_sel[uniq_idx[fresh]]
             if parsed is None:
-                # the one byte-parse of the serving path — fresh rows only
                 fresh_mid, _, fresh_flags, fresh_x0 = parse_packets_np(
                     rows[fsel], self.width)
             else:
@@ -1105,55 +1163,244 @@ class IngressPipeline:
                 fresh_x0 = x0[fsel]
                 fresh_mid = mid[fsel]
                 fresh_flags = flags[fsel]
-            fresh_words = uniq_words[fresh]
-            fresh_hashes = uniq_hashes[fresh]
-            fresh_idx = uniq_global[fresh]
+        else:
+            fresh_mid = fresh_flags = fresh_x0 = None
+
+        # watermark controller (overload backpressure): fresh unique rows
+        # past the high watermark answer on the reflex lane instead of
+        # queueing; past hard capacity they shed as typed error slots —
+        # first-occurrence order is submission order, so the split is
+        # exact.  Cache hits, coalesced duplicates and pending-window
+        # attaches consume no queue and always admit.
+        act = (self._admission_actions(fresh_mid, uniq_idx[fresh])
+               if n_fresh else None)
+        if act is not None:
+            keep = act == 0
+            uact = np.zeros(n_uniq, np.int8)
+            uact[fresh] = act
+            pact = uact[inverse]
+            n_stage = int(keep.sum())
+            gidx = np.full(n_fresh, -1, np.int64)
+            gidx[keep] = self._n_miss + np.arange(n_stage)
+            uniq_global[fresh] = gidx
+        else:
+            keep = pact = None
+            n_stage = n_fresh
+            uniq_global[fresh] = self._n_miss + np.arange(n_fresh)
+        self._n_miss += n_stage
+
+        if pact is None:
+            n_coalesced = miss_sel.size - n_fresh
+        else:
+            n_coalesced = int((pact == 0).sum()) - n_stage
+        self.stats["ingress_coalesced_total"] += n_coalesced
+        self.engine.credit_packets(n_coalesced)  # ride an existing dispatch
+        self._observe_duplication(n, n_hit + n_coalesced)
+
+        if pact is None:
+            miss_idx = uniq_global[inverse]
+            self._chunks.append(_ChunkRecord(
+                tickets=miss_tickets,
+                miss_idx=miss_idx,
+                hi=int(miss_idx.max()) + 1))
+        else:
+            sel0 = pact == 0
+            if sel0.any():
+                miss_idx = uniq_global[inverse[sel0]]
+                self._chunks.append(_ChunkRecord(
+                    tickets=miss_tickets[sel0],
+                    miss_idx=miss_idx,
+                    hi=int(miss_idx.max()) + 1))
+            if (pact == 1).any():
+                self._serve_reflex(miss_tickets, inverse, pact, fresh, act,
+                                   fresh_mid, fresh_flags, fresh_x0,
+                                   generation)
+            sel2 = pact == 2
+            if sel2.any():
+                shed = miss_tickets[sel2]
+                self._mark_errors(shed, DEADLINE_SHED)
+                self.stats["ingress_shed_total"] += shed.size
+                self.obs.events.emit(
+                    "deadline_shed", shard=self.shard_id,
+                    generation=generation, count=int(shed.size),
+                    depth=self.queue_depth())
+
+        if n_stage:
+            if keep is not None:
+                s_x0, s_mid = fresh_x0[keep], fresh_mid[keep]
+                s_flags = fresh_flags[keep]
+                s_words = uniq_words[fresh][keep]
+                s_hashes = uniq_hashes[fresh][keep]
+                s_idx = uniq_global[fresh][keep]
+                s_tickets = miss_tickets[uniq_idx[fresh]][keep]
+            else:
+                s_x0, s_mid, s_flags = fresh_x0, fresh_mid, fresh_flags
+                s_words = uniq_words[fresh]
+                s_hashes = uniq_hashes[fresh]
+                s_idx = uniq_global[fresh]
+                s_tickets = miss_tickets[uniq_idx[fresh]]
             # drift-injection chaos site: shift a feature lane's codes on
             # the fresh rows so the injected distribution shift rides
             # through real serving and the drift tap alike
             plan = self.fault_plan
             if plan is not None and plan.has_site("drift"):
-                fresh_x0 = plan.shift_features(fresh_x0, self.shard_id)
+                s_x0 = plan.shift_features(s_x0, self.shard_id)
             # model-quality feature tap: fresh staged rows only — the rows
             # that actually dispatch; byte-identical repeats short-circuit
             # above and carry no new distribution information
             drift = self.obs.drift
             if drift is not None:
-                drift.observe_features(fresh_mid, fresh_x0)
+                drift.observe_features(s_mid, s_x0)
             if self.shadow is not None:
-                self.shadow.observe(miss_tickets[uniq_idx[fresh]],
-                                    fresh_x0, fresh_mid)
+                self.shadow.observe(s_tickets, s_x0, s_mid)
             if self.tracer is not None:
-                self.tracer.on_stage(miss_tickets[uniq_idx[fresh]], fresh_idx)
+                self.tracer.on_stage(s_tickets, s_idx)
             if self._pending is not None and self._admit():
-                idx_bytes = fresh_idx.reshape(-1, 1).view(np.uint8)
-                self._pending.insert(fresh_words, idx_bytes,
-                                     fresh_mid.astype(np.int64),
-                                     generation, fresh_hashes,
+                idx_bytes = s_idx.reshape(-1, 1).view(np.uint8)
+                self._pending.insert(s_words, idx_bytes,
+                                     s_mid.astype(np.int64),
+                                     generation, s_hashes,
                                      assume_unique=True)
+            # per-row SLO deadlines (absolute clock seconds) ride into the
+            # staging batch; each open batch tracks its earliest one
+            deadlines = None
+            if self.cp.slo_active:
+                budget = self.cp.slo_budget_rows(s_mid)
+                if np.isfinite(budget).any():
+                    deadlines = self._clock() + budget * 1e-6
             # lane-pure staging: forest-family rows and MLP-family rows ride
             # separate fixed-shape batches, so each dispatch runs only its
             # own lane's compute (unknown ids stage as MLP — both lanes
             # egress zeros for them)
             if self.cp.forest_active:
-                isf = self.cp.is_forest_id(fresh_mid)
+                isf = self.cp.is_forest_id(s_mid)
             else:
                 isf = None
             if isf is None or not isf.any():
-                self._stage("mlp", fresh_x0, fresh_mid, fresh_flags,
-                            fresh_words, fresh_hashes, fresh_idx, generation)
+                self._stage("mlp", s_x0, s_mid, s_flags,
+                            s_words, s_hashes, s_idx, generation, deadlines)
             elif isf.all():
-                self._stage("forest", fresh_x0, fresh_mid, fresh_flags,
-                            fresh_words, fresh_hashes, fresh_idx, generation)
+                self._stage("forest", s_x0, s_mid, s_flags,
+                            s_words, s_hashes, s_idx, generation, deadlines)
             else:
                 m = ~isf
-                self._stage("mlp", fresh_x0[m], fresh_mid[m], fresh_flags[m],
-                            fresh_words[m], fresh_hashes[m], fresh_idx[m],
-                            generation)
-                self._stage("forest", fresh_x0[isf], fresh_mid[isf],
-                            fresh_flags[isf], fresh_words[isf],
-                            fresh_hashes[isf], fresh_idx[isf], generation)
+                dm = deadlines[m] if deadlines is not None else None
+                df = deadlines[isf] if deadlines is not None else None
+                self._stage("mlp", s_x0[m], s_mid[m], s_flags[m],
+                            s_words[m], s_hashes[m], s_idx[m],
+                            generation, dm)
+                self._stage("forest", s_x0[isf], s_mid[isf],
+                            s_flags[isf], s_words[isf],
+                            s_hashes[isf], s_idx[isf], generation, df)
         self._resolve_ready_chunks()
+
+    # -- hard-latency layer (PR 10) ----------------------------------------
+
+    def queue_depth(self) -> int:
+        """Model-lane backlog: staged-but-undispatched rows plus real rows
+        in flight on the device — the watermark controller's signal.
+        Completed device futures are reaped opportunistically first, so
+        depth reflects the device's *actual* service rate: a fast shard's
+        backlog drains between bursts while a saturated one's lingers."""
+        self._reap_ready()
+        d = 0
+        for o in self._open.values():
+            d += o.fill
+        for rec in self._inflight:
+            d += rec.count
+        return d
+
+    def _reap_ready(self) -> None:
+        """Retire in-flight batches whose device future has already
+        completed (non-blocking, oldest-first; stops at the first batch
+        still cooking or held by the overload chaos site)."""
+        while self._inflight:
+            rec = self._inflight[0]
+            if rec.hold_until and self._clock() < rec.hold_until:
+                break
+            ready = getattr(rec.future, "is_ready", None)
+            if ready is None:
+                break
+            try:
+                if not ready():
+                    break
+            except Exception:  # noqa: BLE001 — a dying future is retired
+                pass           # via _retire_oldest's salvage path below
+            self._retire_oldest()
+
+    def _admission_actions(self, mid: np.ndarray,
+                           pos: np.ndarray) -> Optional[np.ndarray]:
+        """Watermark controller: per-fresh-unique-row admission actions —
+        0 = stage for the model lane, 1 = answer on the reflex lane,
+        2 = shed.  Returns None when unconstrained (no bounds configured,
+        or everything fits below the high watermark), so steady-state
+        traffic pays one comparison.
+
+        ``pos`` carries each unique row's submission position (the dedup
+        hands uniques over in hash order), and admission is allocated in
+        submission order: the earliest rows get the queue space — exactly
+        what an in-order N=1 oracle would do.  Rows landing below the
+        high watermark stage.  Past it, a row whose model has a reflex
+        program answers there instead of queueing; a row without one
+        keeps queueing up to hard capacity and sheds past it.  Depth
+        counts model-lane rows only: cache hits, coalesced duplicates and
+        reflex answers consume no queue."""
+        cap = self.queue_capacity
+        high = self.queue_high_watermark
+        if cap is None and high is None:
+            return None
+        n = mid.shape[0]
+        depth = self.queue_depth()
+        high_eff = high if high is not None else cap
+        free_high = max(0, high_eff - depth)
+        if free_high >= n:
+            return None
+        order = np.argsort(pos, kind="stable")
+        act_s = np.zeros(n, np.int8)            # submission-ordered view
+        rem = np.arange(n) >= free_high
+        if self.cp.reflex_active:
+            rx = rem & self.cp.reflex_mask(mid[order])
+        else:
+            rx = np.zeros(n, bool)
+        act_s[rx] = 1
+        hard = rem & ~rx
+        if hard.any() and cap is not None:
+            free_cap = max(0, cap - depth - free_high)
+            hidx = np.nonzero(hard)[0]
+            act_s[hidx[free_cap:]] = 2
+        act = np.empty(n, np.int8)
+        act[order] = act_s
+        return act
+
+    def _serve_reflex(self, miss_tickets, inverse, pact, fresh, act,
+                      fresh_mid, fresh_flags, fresh_x0, generation) -> None:
+        """Answer overload rows on the reflex lane: evaluate each unique
+        row's installed program (host numpy — no device round trip), emit
+        ``FLAG_REFLEX``-tagged egress rows, resolve every ticket riding
+        those rows, and hand the pairs to the async confirmer."""
+        rxu = np.nonzero(act == 1)[0]              # fresh-row positions
+        rx_mid = fresh_mid[rxu]
+        rx_x0 = fresh_x0[rxu]
+        rx_flags = fresh_flags[rxu]
+        _, outw = self.cp.reflex_evaluate(rx_mid, rx_x0)
+        out_codes = outw[:, : self.out_feats]
+        rx_rows = emit_results_np(rx_mid, rx_flags | FLAG_REFLEX,
+                                  out_codes, self.engine.frac)
+        u_row = np.full(fresh.shape[0], -1, np.int64)
+        u_row[np.nonzero(fresh)[0][rxu]] = np.arange(rxu.size)
+        sel1 = pact == 1
+        t1 = miss_tickets[sel1]
+        self._results.a[t1] = rx_rows[u_row[inverse[sel1]]]
+        self._status[t1] = STATUS_READY
+        self.engine.credit_packets(t1.size)   # served without a dispatch
+        self.stats["ingress_reflex_served_total"] += t1.size
+        if self.tracer is not None:
+            self.tracer.on_retire(t1)
+        self.obs.events.emit("reflex_served", shard=self.shard_id,
+                             generation=generation, count=int(t1.size),
+                             depth=self.queue_depth())
+        if self.reflex_confirm is not None:
+            self.reflex_confirm.observe(rx_x0, rx_mid, out_codes)
 
     # -- cold-traffic admission gate --------------------------------------
 
@@ -1224,11 +1471,14 @@ class IngressPipeline:
 
     def _stage(self, family: str, x0: np.ndarray, mid: np.ndarray,
                flags: np.ndarray, words: np.ndarray, hashes: np.ndarray,
-               miss_idx: np.ndarray, generation: int) -> None:
+               miss_idx: np.ndarray, generation: int,
+               deadlines: Optional[np.ndarray] = None) -> None:
         """Append unique miss rows (parsed feature codes + header fields,
         plus their packed key words/hashes and global miss indices) to the
         family's staging batch, dispatching every time it reaches its
-        device size."""
+        device size.  ``deadlines`` (absolute clock seconds per row, inf
+        when the row's model has no SLO) folds into the open batch's
+        earliest deadline, which the deadline-aware closer watches."""
         pos = 0
         total = x0.shape[0]
         while pos < total:
@@ -1244,6 +1494,10 @@ class IngressPipeline:
             self._staging_words[o.buf][lo:hi] = words[pos: pos + take]
             self._staging_hashes[o.buf][lo:hi] = hashes[pos: pos + take]
             o.miss_idx[lo:hi] = miss_idx[pos: pos + take]
+            if deadlines is not None:
+                dmin = float(deadlines[pos: pos + take].min())
+                if dmin < o.deadline:
+                    o.deadline = dmin
             o.fill += take
             pos += take
             if o.fill == o.size:
@@ -1305,9 +1559,24 @@ class IngressPipeline:
                                        count, size, lanes, err)
             return
         generation = gen_before if gen_after == gen_before else None
+        # overload chaos (slow-device): an armed factor holds this batch's
+        # retire until factor× the measured cost has elapsed — rows linger
+        # in flight exactly as they would behind a saturated device, so
+        # the watermark controller sees the backlog and sheds shard-local
+        hold = 0.0
+        plan = self.fault_plan
+        if plan is not None and plan.has_site("overload"):
+            factor = plan.overload_factor(self.shard_id, mid[:count])
+            if factor > 1.0:
+                # capped so a chaos spec can never wedge a retire for more
+                # than one bounded-drain window's worth of wall time
+                hold = self._clock() + min(
+                    (factor - 1.0) * max(self.dispatch_cost_ewma, 1e-4),
+                    self._OVERLOAD_HOLD_CAP)
         self._inflight.append(_InFlight(
             future=future, miss_idx=o.miss_idx[:count].copy(), count=count,
-            size=size, buf_idx=o.buf, generation=generation, lanes=lanes))
+            size=size, buf_idx=o.buf, generation=generation, lanes=lanes,
+            t_dispatch=self._clock(), hold_until=hold))
         self.stats["ingress_dispatched_rows_total"] += size
         self.stats["ingress_batches_total"] += 1
         self.stats["lane_batches"][lanes] += 1
@@ -1454,6 +1723,10 @@ class IngressPipeline:
 
     def _retire_oldest(self) -> None:
         rec = self._inflight.popleft()
+        if rec.hold_until:
+            rem = rec.hold_until - self._clock()
+            if rem > 0:       # injected slow device: the batch is not done
+                time.sleep(rem)
         try:
             out = np.asarray(rec.future)  # blocks until the batch is done
         except Exception as err:  # noqa: BLE001 — device died mid-batch
@@ -1469,6 +1742,15 @@ class IngressPipeline:
             return
         # a whole batch came back: the device is alive
         self.consecutive_dispatch_failures = 0
+        # measured dispatch→retire cost feeds the deadline-aware closer:
+        # an EWMA seeded from the first retired batch, so the scheduler's
+        # notion of "how long a trip costs" tracks the device it has
+        dt = self._clock() - rec.t_dispatch
+        self._h_dispatch.observe(dt)
+        self.dispatch_cost_ewma = (
+            dt if self.dispatch_cost_ewma == 0.0
+            else (1.0 - self._COST_ALPHA) * self.dispatch_cost_ewma
+            + self._COST_ALPHA * dt)
         if self.tracer is not None:
             self.tracer.on_device_done(rec.miss_idx)
         # model-quality prediction tap: per-model egress-code distribution
@@ -1554,17 +1836,50 @@ class IngressPipeline:
                 self._results.a[ch.tickets] = self._miss_out.a[ch.miss_idx]
                 self._status[ch.tickets] = STATUS_READY
 
-    def flush(self) -> None:
+    def flush(self, timeout_us: Optional[float] = None) -> None:
         """Dispatch the partial staging batch (padded to the fixed shape) and
         retire every in-flight batch; afterwards every submitted ticket is
-        READY or ERROR."""
+        READY or ERROR.
+
+        With ``timeout_us`` the retire loop is bounded: once the window
+        expires, every still-PENDING ticket backfills as
+        ``PacketError(DRAIN_TIMEOUT)`` instead of blocking on a wedged
+        device.  The bound is best-effort by one step — a single retire
+        that wedges *inside* the window can overshoot it by its own
+        duration (retires block; there is no preemption)."""
+        deadline = (None if timeout_us is None
+                    else self._clock() + float(timeout_us) * 1e-6)
+        expired = False
         self._dispatch()
         while self._inflight:
+            if deadline is not None and self._clock() >= deadline:
+                expired = True
+                break
             self._retire_oldest()
-        if self.shadow is not None:
-            self.shadow.flush()
+        if not expired:
+            if self.shadow is not None:
+                self.shadow.flush()
+            if self.reflex_confirm is not None:
+                self.reflex_confirm.flush()
         self._resolve_ready_chunks()
+        if expired:
+            self._abandon_pending()
         assert not self._chunks, "unresolved chunks after full retire"
+
+    def _abandon_pending(self) -> None:
+        """A bounded drain expired: resolve every still-PENDING ticket as
+        ``PacketError(DRAIN_TIMEOUT)`` and drop the work that would have
+        produced it (chunk records and in-flight bookkeeping — the futures
+        themselves are joined by :meth:`reset_tickets`)."""
+        n = self._n_tickets
+        pending = np.nonzero(self._status[:n] == STATUS_PENDING)[0]
+        self._mark_errors(pending.astype(np.int64), DRAIN_TIMEOUT)
+        self.stats["ingress_drain_timeouts_total"] += 1
+        self.obs.events.emit(
+            "drain_timeout", shard=self.shard_id,
+            generation=int(self.cp.version),
+            backfilled=int(pending.size), inflight=len(self._inflight))
+        self._chunks.clear()
 
     # -- egress ------------------------------------------------------------
 
@@ -1575,11 +1890,15 @@ class IngressPipeline:
         n = self._n_tickets
         return self._status[:n].copy(), self._results.a[:n].copy()
 
-    def drain(self) -> List[Union[np.ndarray, PacketError]]:
+    def drain(self, timeout_us: Optional[float] = None
+              ) -> List[Union[np.ndarray, PacketError]]:
         """Flush, then return one entry per submitted packet in submission
         order — an egress row, or a :class:`PacketError` slot — and reset
-        ticket state (the cache persists across drains)."""
-        self.flush()
+        ticket state (the cache persists across drains).  ``timeout_us``
+        bounds the flush (see :meth:`flush`); expired tickets come back as
+        ``PacketError(DRAIN_TIMEOUT)`` slots in their submission
+        positions."""
+        self.flush(timeout_us)
         status, rows = self.results_array()
         if not self._errors:  # common case: one vectorized unpack
             out: List[Union[np.ndarray, PacketError]] = list(rows)

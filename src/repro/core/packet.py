@@ -42,6 +42,7 @@ __all__ = [
     "emit_results_np",
     "FLAG_PADDED",
     "FLAG_RESULT",
+    "FLAG_REFLEX",
 ]
 
 HEADER_BYTES = 7  # 16+8+8+16+8 bits
@@ -49,6 +50,7 @@ FEATURE_BYTES = 4  # 32-bit features
 
 FLAG_PADDED = 0x01  # feature block padded to max_features
 FLAG_RESULT = 0x02  # payload carries outputs (egress), not inputs (ingress)
+FLAG_REFLEX = 0x04  # result produced by the host reflex lane, not the model
 
 
 def packet_nbytes(n_features: int) -> int:

@@ -130,13 +130,13 @@ class FlowFrontend:
         self.cms = np.zeros(
             (self.params.cms_depth, 1 << self.params.cms_width_pow2),
             np.int32)
-        # canonical names + legacy aliases (see FlowTable.stats); the
-        # frontend's cells graft into the owning server's registry along
-        # with the table's, plus a flow_occupancy gauge collector
+        # canonical names (see FlowTable.stats); the frontend's cells
+        # graft into the owning server's registry along with the table's,
+        # plus a flow_occupancy gauge collector
         from ..obs import Counter, StatsAdapter
         stats = StatsAdapter()
-        stats.bind("flow_raw_packets_total", Counter(), "raw_packets")
-        stats.bind("flow_raw_batches_total", Counter(), "raw_batches")
+        stats.bind("flow_raw_packets_total", Counter())
+        stats.bind("flow_raw_batches_total", Counter())
         self.stats = stats
         self._arange = np.arange(0).reshape(0, 1)  # grown on demand
         self._ones = np.ones(0, np.int32)

@@ -77,23 +77,22 @@ class FlowTable:
         self._tombstones = 0
         self.generation = 0  # bumped whenever slots may have moved/reset
         # Canonical metric names (``flow_<noun>_total`` — see README
-        # "Observability") with the pre-PR-8 keys as aliases for one
-        # release.  Cells are standalone counters; a serving wrapper grafts
-        # them into its shared registry (``MetricsRegistry.attach``) so a
-        # fabric exports per-shard flow stats without touching this class.
+        # "Observability").  Cells are standalone counters; a serving
+        # wrapper grafts them into its shared registry
+        # (``MetricsRegistry.attach``) so a fabric exports per-shard flow
+        # stats without touching this class.
         from ..obs import Counter, StatsAdapter
         stats = StatsAdapter()
-        for canonical, legacy in (
-                ("flow_lookups_total", "lookups"),
-                ("flow_hits_total", "flow_hits"),
-                ("flow_created_total", "flows_created"),
-                ("flow_expiries_total", "expiries"),
-                ("flow_evictions_total", "evictions"),
-                ("flow_flushes_total", "flushes"),
-                ("flow_compactions_total", "compactions"),
-                ("flow_rejects_total", "rejects"),
-                ("flow_adopted_total", "adopted")):
-            stats.bind(canonical, Counter(), legacy)
+        for canonical in ("flow_lookups_total",
+                          "flow_hits_total",
+                          "flow_created_total",
+                          "flow_expiries_total",
+                          "flow_evictions_total",
+                          "flow_flushes_total",
+                          "flow_compactions_total",
+                          "flow_rejects_total",
+                          "flow_adopted_total"):
+            stats.bind(canonical, Counter())
         self.stats = stats
 
     # -- introspection -----------------------------------------------------
@@ -252,7 +251,8 @@ class FlowTable:
         slot ``-1`` — whole flows are rejected, so the surviving packets'
         slots (and within-flow ranks) stay valid — and the caller turns
         them into per-packet errors.  One hostile burst degrades the
-        burst; it cannot kill the server (counted in ``stats["rejects"]``).
+        burst; it cannot kill the server (counted in
+        ``stats["flow_rejects_total"]``).
 
         ``want_rank=True`` appends each packet's within-flow occurrence
         rank (batch order) to the return — the flow-update lowering needs

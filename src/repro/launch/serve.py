@@ -84,6 +84,8 @@ class PacketServer:
                  flow_capacity_pow2: int = 14,
                  flow_idle_timeout: Optional[int] = None,
                  strict_model_ids: bool = False,
+                 queue_capacity: Optional[int] = None,
+                 queue_high_watermark: Optional[int] = None,
                  max_retries: int = 2, retry_backoff: float = 0.0,
                  clock=None, obs=None, trace_every: int = 0,
                  drift_window: int = 0, drift_lanes: int = 8,
@@ -117,7 +119,8 @@ class PacketServer:
             cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
             max_retries=max_retries, retry_backoff=retry_backoff,
-            clock=clock, obs=obs)
+            clock=clock, queue_capacity=queue_capacity,
+            queue_high_watermark=queue_high_watermark, obs=obs)
         self.control_plane.events = obs.events
         # -- model-quality plane (PR 9): drift taps + shadow lane + SLO ----
         self._submit_h = None
@@ -213,6 +216,26 @@ class PacketServer:
         from the next ``submit_raw()`` batch; zero data-plane retraces."""
         return self.control_plane.install_feature_spec(model_id, columns)
 
+    def install_slo_budget(self, model_id: int, budget_us: float) -> int:
+        """Install (hot-swap) a model's per-packet hard-latency budget —
+        the deadline-aware batch closer ships a short batch rather than
+        let a staged packet's remaining budget drop below the measured
+        dispatch cost."""
+        return self.control_plane.install_slo_budget(model_id, budget_us)
+
+    def install_reflex(self, model_id: int, program) -> int:
+        """Install (hot-swap) a model's reflex fallback program
+        (:class:`~repro.serve.reflex.ReflexProgram`) and attach the async
+        model-lane confirmer, so ``reflex_agreement`` is measured."""
+        gen = self.control_plane.install_reflex(model_id, program)
+        if self.ingress.reflex_confirm is None:
+            from ..serve.reflex import ReflexConfirmer
+            self.ingress.reflex_confirm = ReflexConfirmer(self.ingress)
+        return gen
+
+    def remove_reflex(self, model_id: int) -> None:
+        self.control_plane.remove_reflex(model_id)
+
     def submit_raw(self, raw) -> tuple:
         """Feed one batch of **raw 5-tuple headers**
         (``repro.data.packets.RAW_HEADER_BYTES``-byte rows — no feature
@@ -261,11 +284,14 @@ class PacketServer:
         finally:
             self._submit_h.observe(time.perf_counter() - t0)
 
-    def drain_packets(self) -> list:
+    def drain_packets(self, timeout_us: Optional[float] = None) -> list:
         """Flush the pipeline and return one entry per submitted packet in
         submission order: an egress row (``np.ndarray``) or a
-        :class:`~repro.core.ingress.PacketError` slot."""
-        out = self.ingress.drain()
+        :class:`~repro.core.ingress.PacketError` slot.  ``timeout_us``
+        bounds the drain — unresolved tickets backfill as
+        ``PacketError(DRAIN_TIMEOUT)`` instead of blocking on a wedged
+        device."""
+        out = self.ingress.drain(timeout_us)
         self._close_window()
         if self.obs.health is not None:
             # step alert rules once per drain window (drift rules also

@@ -10,6 +10,7 @@ failover post-hoc (install → fault firings → watchdog strikes → shard kill
 Event kinds emitted by the serving fabric:
 
     ``install`` / ``install_forest`` / ``install_feature_spec`` /
+    ``install_slo`` / ``install_reflex`` /
     ``remove``            control-plane table swaps (generation bumps)
     ``fault_injected``    a ``FaultPlan`` spec fired (site, event index)
     ``watchdog_strike``   fabric supervisor strike against a shard
@@ -21,6 +22,12 @@ Event kinds emitted by the serving fabric:
     ``slo_burn``          p99 latency exceeded a model/fabric SLO budget
     ``shadow_divergence`` shadow-model disagreement crossed threshold
     ``alert_cleared``     an open health alert re-armed (hysteresis close)
+    ``deadline_shed``     packets past hard queue capacity answered with
+                          typed ``PacketError(DEADLINE_SHED)`` slots
+    ``reflex_served``     packets past the high watermark answered by the
+                          reflex lane (host-side rule program)
+    ``drain_timeout``     a bounded drain expired; unresolved tickets were
+                          backfilled as ``PacketError(DRAIN_TIMEOUT)``
 
 The log is thread-safe (fabric watchdog and caller threads both emit) and
 bounded: the ring keeps the most recent ``capacity`` records; ``dropped``
@@ -41,6 +48,8 @@ EVENT_KINDS = (
     "install",
     "install_forest",
     "install_feature_spec",
+    "install_slo",
+    "install_reflex",
     "remove",
     "fault_injected",
     "watchdog_strike",
@@ -53,6 +62,9 @@ EVENT_KINDS = (
     "slo_burn",
     "shadow_divergence",
     "alert_cleared",
+    "deadline_shed",
+    "reflex_served",
+    "drain_timeout",
 )
 
 

@@ -23,17 +23,15 @@ Naming scheme (the documented convention — see README "Observability"):
     <subsystem>_<noun>            gauges (point-in-time level)
     <subsystem>_<noun>_seconds    latency histograms
 
-Old ad-hoc stat keys (``FlowTable.stats["flow_hits"]``,
-``IngressPipeline.stats["cache_hits"]``, fabric ``fault_stats`` keys) remain
-readable/writable as **aliases** through :class:`StatsAdapter` for one
-release.
+The pre-PR-8 ad-hoc stat keys (``flow_hits``, ``cache_hits``, fabric
+``deaths`` …) were readable as aliases for one release and are now gone:
+:class:`StatsAdapter` speaks canonical names only.
 """
 
 from __future__ import annotations
 
 import math
 import threading
-import warnings
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
@@ -363,41 +361,25 @@ class MetricsRegistry:
 
 
 class StatsAdapter:
-    """Dict-like view over registry counter cells with legacy-key aliases.
+    """Dict-like view over registry counter cells.
 
-    The pre-PR-8 subsystems each kept a private ``stats`` dict with its own
-    naming (``flow_hits`` vs ``cache_hits`` vs ``deaths``).  This adapter
-    keeps those surfaces — reads *and* the ``stats["k"] += n`` write pattern
-    — working unchanged, while the underlying store is registry cells under
-    the canonical ``<subsystem>_<noun>_total`` names.  Old keys are aliases
-    for one release (see README "Observability"): accessing one now emits a
-    ``DeprecationWarning`` (once per key per adapter) naming the canonical
-    replacement; ``as_dict()`` still exports both spellings so scraped
-    snapshots stay stable for the same release.
+    The pre-PR-8 subsystems each kept a private ``stats`` dict; this
+    adapter keeps that surface — reads *and* the ``stats["k"] += n`` write
+    pattern — working unchanged, while the underlying store is registry
+    cells under the canonical ``<subsystem>_<noun>_total`` names.  (The
+    one-release legacy-key aliases shipped with PR 8 are gone: canonical
+    names only.)
     """
 
-    __slots__ = ("_cells", "_aliases", "_nested", "_extras", "_warned")
+    __slots__ = ("_cells", "_nested", "_extras")
 
     def __init__(self) -> None:
         self._cells: Dict[str, Counter] = {}
-        self._aliases: Dict[str, str] = {}
         self._nested: Dict[str, "StatsAdapter"] = {}
         self._extras: Dict[str, object] = {}
-        self._warned: set = set()
 
-    def _warn_alias(self, key: str) -> None:
-        if key not in self._warned:
-            self._warned.add(key)
-            warnings.warn(
-                f"stats key {key!r} is a deprecated alias of "
-                f"{self._aliases[key]!r} and will be removed next release",
-                DeprecationWarning, stacklevel=3)
-
-    def bind(self, canonical: str, cell: Counter,
-             *aliases: str) -> Counter:
+    def bind(self, canonical: str, cell: Counter) -> Counter:
         self._cells[canonical] = cell
-        for a in aliases:
-            self._aliases[a] = canonical
         return cell
 
     def bind_nested(self, key: str, sub: "StatsAdapter") -> "StatsAdapter":
@@ -408,9 +390,6 @@ class StatsAdapter:
         """Attach a non-counter value (e.g. a list of death records) so the
         legacy dict surface stays complete."""
         self._extras[key] = value
-
-    def canonical(self, key: str) -> str:
-        return self._aliases.get(key, key)
 
     def cells(self):
         """(canonical name, Counter) pairs — for grafting standalone cells
@@ -423,24 +402,17 @@ class StatsAdapter:
             return self._nested[key]
         if key in self._extras:
             return self._extras[key]
-        if key in self._aliases:
-            self._warn_alias(key)
-            return self._cells[self._aliases[key]].value
         return self._cells[key].value
 
     def __setitem__(self, key: str, value) -> None:
         if key in self._extras:
             self._extras[key] = value
             return
-        if key in self._aliases:
-            self._warn_alias(key)
-            self._cells[self._aliases[key]].set(value)
-            return
         self._cells[key].set(value)
 
     def __contains__(self, key: str) -> bool:
         return (key in self._nested or key in self._cells
-                or key in self._aliases or key in self._extras)
+                or key in self._extras)
 
     def __iter__(self):
         yield from self._cells
@@ -465,15 +437,12 @@ class StatsAdapter:
     def values(self):
         return [self[k] for k in self]
 
-    def as_dict(self, canonical_only: bool = False) -> dict:
+    def as_dict(self) -> dict:
         out = {k: c.value for k, c in self._cells.items()}
-        if not canonical_only:
-            for alias, canon in self._aliases.items():
-                out[alias] = self._cells[canon].value
         for k, sub in self._nested.items():
-            out[k] = sub.as_dict(canonical_only)
+            out[k] = sub.as_dict()
         out.update(self._extras)
         return out
 
     def __repr__(self) -> str:  # debugging / test output
-        return repr(self.as_dict(canonical_only=True))
+        return repr(self.as_dict())

@@ -130,6 +130,8 @@ class _Shard:
                  flush_after: Optional[float], adaptive_batch: bool,
                  flow_capacity_pow2: int, flow_idle_timeout: Optional[int],
                  max_retries: int, retry_backoff: float, clock,
+                 queue_capacity: Optional[int] = None,
+                 queue_high_watermark: Optional[int] = None,
                  obs: Optional[Observability] = None):
         self.shard_id = shard_id
         self.device = device
@@ -143,7 +145,9 @@ class _Shard:
             cache_capacity_pow2=cache_capacity_pow2,
             flush_after=flush_after, adaptive_batch=adaptive_batch,
             max_retries=max_retries, retry_backoff=retry_backoff,
-            clock=clock, shard_id=shard_id, obs=obs)
+            clock=clock, shard_id=shard_id,
+            queue_capacity=queue_capacity,
+            queue_high_watermark=queue_high_watermark, obs=obs)
         self._flow_capacity_pow2 = flow_capacity_pow2
         self._flow_idle_timeout = flow_idle_timeout
         self._flow: Optional[FlowFrontend] = None
@@ -205,6 +209,8 @@ class ShardedPacketServer:
                  flow_idle_timeout: Optional[int] = None,
                  watchdog_timeout: Optional[float] = None,
                  max_consecutive_failures: int = 3,
+                 queue_capacity: Optional[int] = None,
+                 queue_high_watermark: Optional[int] = None,
                  max_retries: int = 2, retry_backoff: float = 0.0,
                  clock=None, obs: Optional[Observability] = None,
                  trace_every: int = 0,
@@ -244,7 +250,8 @@ class ShardedPacketServer:
                    flow_capacity_pow2=flow_capacity_pow2,
                    flow_idle_timeout=flow_idle_timeout,
                    max_retries=max_retries, retry_backoff=retry_backoff,
-                   clock=clock, obs=self.obs)
+                   clock=clock, queue_capacity=queue_capacity,
+                   queue_high_watermark=queue_high_watermark, obs=self.obs)
             for s in range(n_shards)]
         # global count-min sketch (see the module docstring: the one piece
         # of flow state that is a whole-fabric property)
@@ -274,20 +281,18 @@ class ShardedPacketServer:
         self._hrw_seeds = _mix64(
             (np.arange(1, n_shards + 1, dtype=np.uint64)
              * np.uint64(0x9E3779B97F4A7C15)) ^ np.uint64(0xFA17FA17))
-        # fault_stats rides on the shared registry: canonical
-        # ``fabric_*_total`` counters with the historical short keys kept
-        # as read/write aliases for one release
+        # fault_stats rides on the shared registry under the canonical
+        # ``fabric_*_total`` names
         reg = self.obs.registry
         fs = StatsAdapter()
-        for canon, alias in (
-                ("fabric_deaths_total", "deaths"),
-                ("fabric_migrated_flows_total", "migrated_flows"),
-                ("fabric_watchdog_strikes_total", "watchdog_strikes"),
-                ("fabric_submit_failures_total", "submit_failures"),
-                ("fabric_rejected_rows_total", "rejected_rows"),
-                ("fabric_lost_results_total", "lost_results"),
-                ("fabric_degraded_windows_total", "degraded_windows")):
-            fs.bind(canon, reg.counter(canon), alias)
+        for canon in ("fabric_deaths_total",
+                      "fabric_migrated_flows_total",
+                      "fabric_watchdog_strikes_total",
+                      "fabric_submit_failures_total",
+                      "fabric_rejected_rows_total",
+                      "fabric_lost_results_total",
+                      "fabric_degraded_windows_total"):
+            fs.bind(canon, reg.counter(canon))
         fs.bind_value("dead_shards", [])
         self.fault_stats = fs
         g_alive = reg.gauge("fabric_alive_shards")
@@ -340,6 +345,28 @@ class ShardedPacketServer:
     def install_feature_spec(self, model_id: int, columns) -> int:
         with self._lock:
             return self.control_plane.install_feature_spec(model_id, columns)
+
+    def install_slo_budget(self, model_id: int, budget_us: float) -> int:
+        """Hard-latency budget for a model's packets, fabric-wide (one
+        shared SLO table; see :meth:`ControlPlane.install_slo_budget`)."""
+        with self._lock:
+            return self.control_plane.install_slo_budget(model_id, budget_us)
+
+    def install_reflex(self, model_id: int, program) -> int:
+        """Install a model's reflex fallback program fabric-wide and make
+        sure every shard pipeline has a :class:`ReflexConfirmer` attached,
+        so reflex-served answers get asynchronously model-confirmed."""
+        from .reflex import ReflexConfirmer
+        with self._lock:
+            gen = self.control_plane.install_reflex(model_id, program)
+            for sh in self.shards:
+                if sh.pipeline.reflex_confirm is None:
+                    sh.pipeline.reflex_confirm = ReflexConfirmer(sh.pipeline)
+            return gen
+
+    def remove_reflex(self, model_id: int) -> None:
+        with self._lock:
+            self.control_plane.remove_reflex(model_id)
 
     def remove(self, model_id: int) -> None:
         with self._lock:
@@ -541,16 +568,31 @@ class ShardedPacketServer:
             self._n_slots += n
             return first, n
 
-    def drain_packets(self) -> List[Union[np.ndarray, PacketError]]:
+    def drain_packets(self, timeout_us: Optional[float] = None
+                      ) -> List[Union[np.ndarray, PacketError]]:
         """Drain every shard and merge the results back into exact global
         submission order (each shard's drain is already in that shard's
         submission order; the recorded scatter says how to interleave).
-        Per-packet error slots are re-ticketed to their global position."""
+        Per-packet error slots are re-ticketed to their global position.
+
+        ``timeout_us`` bounds the whole fabric drain: each shard gets
+        whatever remains of the window when its turn comes, so one wedged
+        shard burns only the budget — its unresolved tickets come back as
+        ``PacketError(DRAIN_TIMEOUT)`` slots and later shards still get
+        (at least) a zero-budget drain, which resolves everything already
+        retired and backfills the rest."""
         with self._lock:
+            deadline = (None if timeout_us is None
+                        else time.perf_counter() + float(timeout_us) * 1e-6)
             per: List[deque] = []
             for sh in self.shards:
+                if deadline is None:
+                    budget = None
+                else:
+                    budget = max(0.0,
+                                 (deadline - time.perf_counter()) * 1e6)
                 try:
-                    per.append(deque(sh.pipeline.drain()))
+                    per.append(deque(sh.pipeline.drain(budget)))
                 except Exception as e:  # a wedged shard cannot hang drain
                     self._window_degraded = True
                     per.append(deque())

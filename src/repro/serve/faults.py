@@ -31,6 +31,12 @@ points; an uninstalled plan costs one attribute check):
   the traffic-went-weird analogue: the shifted codes flow through real
   serving *and* the drift tap, so the chaos lane can assert the
   model-quality plane raises exactly one ``drift_alert``.
+* ``"overload"`` — multiplies one shard's dispatch latency by
+  ``slowdown`` (a deterministic slow-device stall, scaled from the
+  pipeline's own measured dispatch cost): the sustained-overload
+  analogue the watermark controller must answer with shard-local
+  backpressure — reflex serves and sheds on the slow shard only, while
+  survivor shards keep their submit p99 inside budget.
 
 Chaos mode: ``REPRO_CHAOS=1`` in the environment arms a low-rate
 transient dispatch fault on every pipeline (one hiccup every
@@ -51,7 +57,8 @@ import numpy as np
 __all__ = ["InjectedFault", "FaultSpec", "FaultPlan", "chaos_plan_from_env",
            "FAULT_SITES"]
 
-FAULT_SITES = ("dispatch", "stall", "egress", "install", "drift")
+FAULT_SITES = ("dispatch", "stall", "egress", "install", "drift",
+               "overload")
 
 _FOREVER = 1 << 62
 
@@ -89,6 +96,11 @@ class FaultSpec:
                         (``"drift"`` site): codes become
                         ``clip(x << shift)`` — a pure distribution shift
                         the drift sketches must detect.
+    ``slowdown``        dispatch-latency multiplier (``"overload"``
+                        site): each firing stalls the dispatch for
+                        ``(slowdown - 1) ×`` the pipeline's measured
+                        dispatch cost, i.e. the device looks
+                        ``slowdown``× slower.
     """
 
     site: str
@@ -101,6 +113,7 @@ class FaultSpec:
     corrupt_frac: float = 0.25
     lane: int = 0
     shift: int = 4
+    slowdown: float = 8.0
 
     def __post_init__(self):
         if self.site not in FAULT_SITES:
@@ -112,6 +125,8 @@ class FaultSpec:
             raise ValueError("count/start must be >= 0")
         if self.lane < 0 or not 0 <= self.shift <= 31:
             raise ValueError("lane must be >= 0 and shift in [0, 31]")
+        if self.slowdown <= 0:
+            raise ValueError("slowdown must be > 0")
 
 
 class FaultPlan:
@@ -204,6 +219,15 @@ class FaultPlan:
     def has_site(self, site: str) -> bool:
         """Cheap pre-check so hot paths skip sites no spec targets."""
         return site in self._sites
+
+    def overload_factor(self, shard: int = 0,
+                        mids: Optional[np.ndarray] = None) -> float:
+        """Slow-device site: the dispatch-latency multiplier for this
+        event (1.0 when not armed).  The pipeline turns the factor into a
+        stall scaled from its own measured dispatch cost, so "8× slower"
+        means the same thing on any host."""
+        spec = self._armed("overload", shard, mids)
+        return float(spec.slowdown) if spec is not None else 1.0
 
     def shift_features(self, x0: np.ndarray, shard: int = 0) -> np.ndarray:
         """Drift-injection site: when armed, return a copy of the fresh

@@ -162,8 +162,8 @@ class TestGracefulPipeline:
         srv.submit_raw(raw)
         ref.submit_raw(raw)
         _assert_bitexact(srv.drain_packets(), ref.drain_packets())
-        assert srv.ingress.stats["dispatch_retries"] > 0
-        assert srv.ingress.stats["dispatch_failures"] == 0
+        assert srv.ingress.stats["ingress_dispatch_retries_total"] > 0
+        assert srv.ingress.stats["ingress_dispatch_failures_total"] == 0
 
     def test_poison_rows_bisected_and_quarantined(self):
         """A persistently-crashing batch is bisected: exactly the poison
@@ -189,8 +189,8 @@ class TestGracefulPipeline:
             else:
                 assert not isinstance(a, PacketError), a.reason
                 assert np.array_equal(a, b)
-        assert srv.ingress.stats["quarantined_rows"] == n_poison
-        assert srv.ingress.stats["probe_batches"] > 0
+        assert srv.ingress.stats["ingress_quarantined_rows_total"] == n_poison
+        assert srv.ingress.stats["ingress_probe_batches_total"] > 0
 
     def test_whole_batch_loss_degrades_not_hangs(self):
         """Every dispatch failing (no bisection can save anything) still
@@ -225,7 +225,7 @@ class TestGracefulPipeline:
                 assert "corrupted" in a.reason
             else:
                 assert np.array_equal(a, b)
-        assert srv.ingress.stats["corrupted_rows"] == n_bad
+        assert srv.ingress.stats["ingress_corrupted_rows_total"] == n_bad
         # round 2: the count=1 spec is exhausted; the same bytes must now
         # serve correctly (a poisoned cache would replay the corruption)
         srv.submit_packets(wire)
@@ -397,7 +397,7 @@ class TestRawAdmission:
         assert any("flow table overflow" in r.reason for r in out
                    if isinstance(r, PacketError))
         assert n_err < 120  # the 11 served flows' packets got real egress
-        assert srv.flow.table.stats["rejects"] > 0
+        assert srv.flow.table.stats["flow_rejects_total"] > 0
 
 
 class TestSnapshotRestore:
@@ -482,8 +482,8 @@ class TestFailoverDrill:
         assert len(got) == len(want) == 1500  # every ticket resolved
         _assert_bitexact(got, want)  # incl. the migrated flows' packets
         st_ = fab.stats()
-        assert st_["faults"]["deaths"] == 1
-        assert st_["faults"]["migrated_flows"] > 0
+        assert st_["faults"]["fabric_deaths_total"] == 1
+        assert st_["faults"]["fabric_migrated_flows_total"] > 0
         assert st_["alive_shards"] == [0, 2, 3]
         for s in (0, 2, 3):  # zero retraces on survivors
             assert fab.shards[s].engine.trace_count == traces0[s]
@@ -521,7 +521,7 @@ class TestFailoverDrill:
             fab.submit_raw(_trace(200, 50 + s, n_flows=16))
         out = fab.drain_packets()
         assert len(out) == 1600
-        assert fab.fault_stats["deaths"] == 1
+        assert fab.fault_stats["fabric_deaths_total"] == 1
         assert fab.alive_shards == [1]
         n_err = sum(isinstance(r, PacketError) for r in out)
         assert 0 < n_err < 1600  # shard-0 batches died, shard-1 served
@@ -537,8 +537,8 @@ class TestFailoverDrill:
         for s in range(10):
             fab.submit_raw(_trace(120, 60 + s, n_flows=8))
         fab.drain_packets()
-        assert fab.fault_stats["watchdog_strikes"] >= 2
-        assert fab.fault_stats["deaths"] == 1
+        assert fab.fault_stats["fabric_watchdog_strikes_total"] >= 2
+        assert fab.fault_stats["fabric_deaths_total"] == 1
         assert fab.alive_shards == [1]
 
     def test_round_robin_skips_dead_shards(self):
@@ -550,7 +550,7 @@ class TestFailoverDrill:
         out = fab.drain_packets()
         assert len(out) == 48
         assert not any(isinstance(r, PacketError) for r in out)
-        assert fab.shards[1].pipeline.stats["packets"] == 0
+        assert fab.shards[1].pipeline.stats["ingress_packets_total"] == 0
 
     def test_fabric_admission_rejects_malformed(self):
         fab = _fabric(2)
@@ -562,7 +562,7 @@ class TestFailoverDrill:
         assert isinstance(out[7], PacketError)
         assert "malformed raw header" in out[7].reason
         assert sum(isinstance(r, PacketError) for r in out) == 1
-        assert fab.fault_stats["rejected_rows"] == 1
+        assert fab.fault_stats["fabric_rejected_rows_total"] == 1
 
 
 class TestChaosEnv:
@@ -583,4 +583,4 @@ class TestChaosEnv:
         srv.submit_raw(raw)
         ref.submit_raw(raw)
         _assert_bitexact(srv.drain_packets(), ref.drain_packets())
-        assert srv.ingress.stats["dispatch_retries"] > 0
+        assert srv.ingress.stats["ingress_dispatch_retries_total"] > 0

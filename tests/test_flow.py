@@ -176,7 +176,7 @@ class TestFlowTable:
         s2, new2 = t.lookup_or_insert(w, h, np.full(50, 10))
         np.testing.assert_array_equal(s1, s2)
         assert not new2.any()
-        assert t.stats["flow_hits"] == 50
+        assert t.stats["flow_hits_total"] == 50
 
     def test_in_batch_duplicates_share_slot_first_is_new(self):
         rng = np.random.default_rng(1)
@@ -214,7 +214,7 @@ class TestFlowTable:
         np.testing.assert_array_equal(new, [True, False])  # only idle flow
         assert t.registers[slots[0], REG_PKT_COUNT] == 0
         assert t.registers[slots[1], REG_PKT_COUNT] == 9
-        assert t.stats["expiries"] == 1
+        assert t.stats["flow_expiries_total"] == 1
 
     def test_expire_sweep_tombstones_and_compacts(self):
         rng = np.random.default_rng(4)
@@ -226,7 +226,7 @@ class TestFlowTable:
         t.registers[slots, REG_PKT_COUNT] = 1
         n = t.expire(10_000)
         assert n == 30 and len(t) == 0
-        assert t.stats["compactions"] >= 1  # past tombstone_limit
+        assert t.stats["flow_compactions_total"] >= 1  # past tombstone_limit
 
     def test_eviction_when_full_restarts_flows(self):
         """Overflowing a tiny table evicts; re-arriving flows restart with
@@ -238,7 +238,7 @@ class TestFlowTable:
         t.registers[s1, REG_PKT_COUNT] = 77
         w2, h2 = _packed(_keys(rng, 10))  # forces eviction
         t.lookup_or_insert(w2, h2, np.ones(10))
-        assert t.stats["flushes"] >= 1 and t.generation >= 1
+        assert t.stats["flow_flushes_total"] >= 1 and t.generation >= 1
         s1b, new1b = t.lookup_or_insert(w1, h1, np.full(10, 2))
         assert (t.registers[s1b, REG_PKT_COUNT] <= 0).all()
 
@@ -303,7 +303,7 @@ class TestFlowTable:
                     assert not is_new[p]  # only first occurrence marks
             # simulate the kernel: every touched flow now has state
             t.registers[slots, REG_PKT_COUNT] = 1
-        assert t.stats["flushes"] > 0  # the churn path actually ran
+        assert t.stats["flow_flushes_total"] > 0  # the churn path actually ran
 
     def test_batch_beyond_load_limit_degrades_per_flow(self):
         """Hard overflow (one batch carrying more unique flows than the
@@ -317,7 +317,7 @@ class TestFlowTable:
         served = slots >= 0
         assert int(served.sum()) == 11  # earliest-arriving flows win
         assert int((~served).sum()) == 1
-        assert t.stats["rejects"] == 1
+        assert t.stats["flow_rejects_total"] == 1
         # served flows own distinct register rows and are all (re)opened
         assert np.unique(slots[served]).size == 11
         assert is_new[served].all() and not is_new[~served].any()
@@ -634,7 +634,7 @@ class TestSubmitRawEndToEnd:
         pipe = srv.ingress
         srv.submit_raw(raw[:1000])  # converge + populate the cache
         srv.drain_packets()
-        short = pipe.cache.hits + pipe.stats["coalesced"]
+        short = pipe.cache.hits + pipe.stats["ingress_coalesced_total"]
         assert short > 900  # converged rows repeat within the window
         h0, m0 = pipe.cache.hits, pipe.cache.misses
         srv.submit_raw(raw[1000:])  # flow state continues seamlessly
@@ -643,7 +643,7 @@ class TestSubmitRawEndToEnd:
         assert dh / (dh + dm) > 0.9  # cached converged rows hit directly
         assert srv.flow.flow_table_hit_rate() > 0.9
         # device work for 2000 served packets stayed a handful of batches
-        assert pipe.stats["dispatched_rows"] <= 3 * 256
+        assert pipe.stats["ingress_dispatched_rows_total"] <= 3 * 256
 
 
 def _hand_built_egress_second_pass(srv, raw):

@@ -335,9 +335,9 @@ class TestAdaptiveBatch:
             clock.advance(0.005)
         pipe.flush()
         # every dispatch was the smallest rung, not the full 1024 batch
-        assert pipe.stats["dispatched_rows"] \
-            == pipe.stats["batches"] * pipe.batch_sizes[0]
-        assert pipe.stats["batches"] >= 1
+        assert pipe.stats["ingress_dispatched_rows_total"] \
+            == pipe.stats["ingress_batches_total"] * pipe.batch_sizes[0]
+        assert pipe.stats["ingress_batches_total"] >= 1
 
     def test_sustained_load_keeps_full_batch(self):
         rng = np.random.default_rng(9)
@@ -348,10 +348,10 @@ class TestAdaptiveBatch:
             clock.advance(0.001)
         pipe.flush()
         sizes = {1024}
-        assert pipe.stats["dispatched_rows"] >= 7 * 1024
+        assert pipe.stats["ingress_dispatched_rows_total"] >= 7 * 1024
         # after warmup the opened batches are the full rung: total padded
         # rows stay below one full batch (only the flush tail pads)
-        assert pipe.stats["padded_rows"] < 2 * 1024
+        assert pipe.stats["ingress_padded_rows_total"] < 2 * 1024
         assert sizes <= set(pipe.batch_sizes)
 
     def test_results_identical_with_adaptive_sizing(self):
@@ -373,7 +373,7 @@ class TestAdaptiveBatch:
         clock = _FakeClock()
         cp, eng, pipe = self._pipeline(rng, clock=clock, flush_after=0.02)
         pipe.submit(_wire(rng, 5, model_lo=1, model_hi=3))
-        assert pipe.stats["batches"] == 0  # too young
+        assert pipe.stats["ingress_batches_total"] == 0  # too young
         clock.advance(0.0199)
         assert not pipe.poll()
         clock.advance(0.0001)

@@ -280,8 +280,9 @@ class TestPipelineCorrectness:
         for _ in range(4):
             pipe.submit(base)
         pipe.flush()
-        assert pipe.stats["dispatched_rows"] == 64
-        assert pipe.stats["coalesced"] + pipe.stats["cache_hits"] == 3 * 64
+        assert pipe.stats["ingress_dispatched_rows_total"] == 64
+        assert (pipe.stats["ingress_coalesced_total"]
+                + pipe.stats["ingress_cache_hits_total"]) == 3 * 64
         got = pipe.drain()
         want = np.asarray(eng.process(base))[:, : pipe.out_bytes]
         for k in range(4):
@@ -294,10 +295,10 @@ class TestPipelineCorrectness:
         base = _wire(rng, 48)
         pipe.submit(base)
         first = pipe.drain()
-        d0 = pipe.stats["dispatched_rows"]
+        d0 = pipe.stats["ingress_dispatched_rows_total"]
         pipe.submit(base)
         second = pipe.drain()
-        assert pipe.stats["dispatched_rows"] == d0  # pure cache serve
+        assert pipe.stats["ingress_dispatched_rows_total"] == d0  # pure cache serve
         np.testing.assert_array_equal(np.stack(first), np.stack(second))
 
     def test_partial_batch_padding_rows_are_dead(self):
@@ -310,7 +311,7 @@ class TestPipelineCorrectness:
         got = pipe.drain()
         want = np.asarray(eng.process(ch))[:, : pipe.out_bytes]
         np.testing.assert_array_equal(np.stack(got), want)
-        assert pipe.stats["padded_rows"] == 253
+        assert pipe.stats["ingress_padded_rows_total"] == 253
 
     def test_short_wire_rows_are_padded_to_shape(self):
         """Chunks narrower than the parser bound ride the same fixed wire
@@ -354,16 +355,16 @@ class TestFlushAfter:
         cp, eng, pipe = _pipeline(batch_size=64)
         pipe.submit(_wire(rng, 10))
         pipe.submit(_wire(rng, 10))
-        assert pipe.stats["batches"] == 0  # partial batch waits, as before
+        assert pipe.stats["ingress_batches_total"] == 0  # partial batch waits, as before
         pipe.drain()
 
     def test_zero_age_dispatches_every_submit(self):
         rng = np.random.default_rng(51)
         cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.0)
         pipe.submit(_wire(rng, 10))
-        assert pipe.stats["batches"] == 1  # padded partial batch went out
+        assert pipe.stats["ingress_batches_total"] == 1  # padded partial batch went out
         pipe.submit(_wire(rng, 7))
-        assert pipe.stats["batches"] == 2
+        assert pipe.stats["ingress_batches_total"] == 2
         got = pipe.drain()
         assert len(got) == 17 and all(
             not isinstance(g, PacketError) for g in got)
@@ -374,10 +375,10 @@ class TestFlushAfter:
         cp, eng, pipe = _pipeline(batch_size=64, flush_after=0.02,
                                   clock=clock)
         pipe.submit(_wire(rng, 5))
-        assert pipe.stats["batches"] == 0  # too young
+        assert pipe.stats["ingress_batches_total"] == 0  # too young
         clock.advance(0.03)
         pipe.submit(_wire(rng, 5))  # age check fires at submit end
-        assert pipe.stats["batches"] == 1
+        assert pipe.stats["ingress_batches_total"] == 1
         pipe.drain()
 
     def test_poll_flushes_without_new_traffic(self):
@@ -389,7 +390,7 @@ class TestFlushAfter:
         assert not pipe.poll()  # too young
         clock.advance(0.03)
         assert pipe.poll()
-        assert pipe.stats["batches"] == 1
+        assert pipe.stats["ingress_batches_total"] == 1
         pipe.drain()
 
     def test_age_boundary_is_inclusive_and_exact(self):

@@ -14,14 +14,13 @@ packet-lifecycle tracing, structured event log).
     event log — one ``fault_injected`` record per ``plan.fired`` entry
   * the Prometheus text exposition round-trips against the registry
     snapshot value-for-value
-  * legacy stat keys stay readable/writable as aliases of the canonical
-    ``<subsystem>_<noun>_total`` registry cells
+  * stats adapters speak only the canonical ``<subsystem>_<noun>_total``
+    registry cells (the PR-8 one-release legacy aliases are gone)
   * ``ShardedPacketServer.stats()`` never blocks on the fabric lock — a
     poll during a long submit completes immediately (regression)
 """
 
 import threading
-import warnings
 
 import numpy as np
 import pytest
@@ -369,75 +368,57 @@ class TestExport:
 
 
 class TestStatsNaming:
-    def test_ingress_aliases_read_and_write_through(self):
+    def test_canonical_keys_read_and_write_through(self):
         srv = _plain()
         srv.submit_raw(_trace(100, 3))
         srv.drain_packets()
         stats = srv.ingress.stats
-        # legacy spellings still read/write the canonical cell, but now
-        # carry a DeprecationWarning (once per key per adapter)
-        with pytest.warns(DeprecationWarning, match="deprecated alias"):
-            legacy = stats["packets"]
-        assert legacy == stats["ingress_packets_total"] == 100
-        with pytest.warns(DeprecationWarning, match="deprecated alias"):
-            before = stats["cache_hits"]
-            stats["cache_hits"] += 5  # the legacy write pattern
-        assert stats["ingress_cache_hits_total"] == before + 5
+        assert stats["ingress_packets_total"] == 100
+        before = stats["ingress_cache_hits_total"]
+        stats["ingress_cache_hits_total"] += 5  # the dict write pattern
         # the registry cell is the same store
         reg = srv.obs.registry.snapshot()
         assert reg["ingress_cache_hits_total"]['shard="0"'] == before + 5
-        assert "lane_batches" in stats  # nested legacy surface
+        assert "lane_batches" in stats  # nested surface
         assert set(stats["lane_batches"].keys()) >= {"mlp", "forest",
                                                      "both"}
 
-    def test_canonical_keys_never_warn(self):
+    def test_legacy_aliases_are_gone(self):
+        """The PR-8 one-release legacy spellings were removed: a legacy
+        key is a plain KeyError now, not a warning."""
         srv = _plain()
         srv.submit_raw(_trace(100, 3))
         srv.drain_packets()
-        stats = srv.ingress.stats
-        with warnings.catch_warnings():
-            warnings.simplefilter("error", DeprecationWarning)
-            assert stats["ingress_packets_total"] == 100
-            stats["ingress_cache_hits_total"] += 0
-            # the dual-spelling dict export reads cells directly
-            both = stats.as_dict()
-        assert both["packets"] == both["ingress_packets_total"] == 100
+        for adapter, legacy in ((srv.ingress.stats, "packets"),
+                                (srv.ingress.stats, "cache_hits"),
+                                (srv.flow.table.stats, "lookups"),
+                                (srv.flow.stats, "raw_packets")):
+            assert legacy not in adapter
+            with pytest.raises(KeyError):
+                adapter[legacy]
+        both = srv.ingress.stats.as_dict()
+        assert "packets" not in both
+        assert both["ingress_packets_total"] == 100
 
-    def test_alias_warns_once_per_key_per_adapter(self):
-        srv = _plain()
-        srv.submit_raw(_trace(100, 3))
-        srv.drain_packets()
-        stats = srv.ingress.stats
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            stats["packets"], stats["packets"], stats["cache_hits"]
-        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
-        assert len(dep) == 2  # one per distinct alias key, not per access
-
-    def test_flow_aliases(self):
+    def test_flow_canonical_keys(self):
         srv = _plain()
         srv.submit_raw(_trace(100, 3))
         srv.drain_packets()
         t = srv.flow.table
-        with pytest.warns(DeprecationWarning, match="deprecated alias"):
-            assert t.stats["lookups"] == t.stats["flow_lookups_total"] > 0
-            assert (srv.flow.stats["raw_packets"]
-                    == srv.flow.stats["flow_raw_packets_total"] == 100)
+        assert t.stats["flow_lookups_total"] > 0
+        assert srv.flow.stats["flow_raw_packets_total"] == 100
 
-    def test_fabric_fault_stats_aliases(self):
+    def test_fabric_fault_stats_canonical(self):
         fab = _fabric(2)
         fab.submit_raw(_trace(100, 3))
         fab.drain_packets()
         assert fab.kill_shard(0, "drill") is True
         fs = fab.fault_stats
-        with pytest.warns(DeprecationWarning, match="deprecated alias"):
-            assert fs["deaths"] == fs["fabric_deaths_total"] == 1
+        assert fs["fabric_deaths_total"] == 1
         assert fs["dead_shards"][0]["shard"] == 0
-        # stats() exports both spellings for one release, warning-free
-        with warnings.catch_warnings():
-            warnings.simplefilter("error", DeprecationWarning)
-            faults = fab.stats()["faults"]
-        assert faults["deaths"] == faults["fabric_deaths_total"] == 1
+        faults = fab.stats()["faults"]
+        assert faults["fabric_deaths_total"] == 1
+        assert "deaths" not in faults
 
 
 class TestStatsNeverBlocks:
@@ -461,7 +442,7 @@ class TestStatsNeverBlocks:
             alive = th.is_alive()
         assert not alive, "stats() blocked on the fabric lock"
         assert got["stats"]["n_shards"] == 2
-        assert got["stats"]["faults"]["deaths"] == 0
+        assert got["stats"]["faults"]["fabric_deaths_total"] == 0
 
     def test_stats_consistent_with_locked_view(self):
         fab = _fabric(2)
@@ -503,7 +484,7 @@ class TestObservabilityBundle:
         reg = MetricsRegistry()
         adapter = StatsAdapter()
         from repro.obs import Counter
-        c = adapter.bind("demo_things_total", Counter(), "things")
+        c = adapter.bind("demo_things_total", Counter())
         adapter["demo_things_total"] += 3
         reg.attach("demo_things_total", c, shard=7)
         seen = []
